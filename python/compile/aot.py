@@ -1,0 +1,127 @@
+"""AOT compiler: lower every Layer-2 entry point to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+results through the PJRT C API and Python never appears on the sampling
+path again.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each artifact ``NAME.hlo.txt`` is accompanied by ``NAME.meta`` — a
+key=value manifest (input/output shapes + layout constants) parsed by
+rust/src/runtime/artifacts.rs.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+D, B, N, T = model.D_MAX, model.BATCH, model.N_MAX, model.TILE
+
+# name -> (entry fn, input specs, meta extras)
+ARTIFACTS = {
+    "kron_batch": (
+        model.kron_batch_entry,
+        [
+            spec((D, 2, 2), jnp.float32),
+            spec((B,), jnp.int32),
+            spec((B,), jnp.int32),
+        ],
+        {"d_max": D, "batch": B},
+    ),
+    "gamma_tile": (
+        model.gamma_tile_entry,
+        [spec((D, 2, 2), jnp.float32), spec((2,), jnp.int32)],
+        {"d_max": D, "tile": T},
+    ),
+    "accept_batch": (
+        model.accept_batch_entry,
+        [
+            spec((D, 2, 2), jnp.float32),
+            spec((D, 2, 2), jnp.float32),
+            spec((N,), jnp.float32),
+            spec((B,), jnp.int32),
+            spec((B,), jnp.int32),
+        ],
+        {"d_max": D, "batch": B, "n_max": N},
+    ),
+    "edge_stats": (
+        model.edge_stats_entry,
+        [
+            spec((D, 2, 2), jnp.float32),
+            spec((D,), jnp.float32),
+            spec((D,), jnp.float32),
+            spec((), jnp.float32),
+        ],
+        {"d_max": D},
+    ),
+}
+
+
+def write_meta(path: str, name: str, inputs, extras, hlo_sha: str) -> None:
+    lines = [
+        f"name={name}",
+        f"hlo_sha256={hlo_sha}",
+        f"num_inputs={len(inputs)}",
+    ]
+    for i, s in enumerate(inputs):
+        dims = ",".join(str(x) for x in s.shape)
+        lines.append(f"input{i}.shape={dims}")
+        lines.append(f"input{i}.dtype={jnp.dtype(s.dtype).name}")
+    for k, v in extras.items():
+        lines.append(f"{k}={v}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single artifact by name")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(ARTIFACTS)
+    for name in names:
+        fn, specs, extras = ARTIFACTS[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        sha = hashlib.sha256(text.encode()).hexdigest()
+        hlo_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        write_meta(os.path.join(args.out_dir, f"{name}.meta"), name, specs, extras, sha)
+        print(f"wrote {hlo_path} ({len(text)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

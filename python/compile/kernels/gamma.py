@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernels for Kronecker edge-probability products.
+
+The single numeric primitive of the whole system is the *Kronecker entry
+product* (Eq. 6 of the paper):
+
+    Gamma_{c,c'} = prod_k  theta^(k)[ bit_k(c), bit_k(c') ]
+
+It computes KPGM edge probabilities, MAGM rates Lambda (Eq. 12, after a
+|V_c||V_c'| scale) and the Eq. 21 proposal rates Lambda' (the scale factors
+are pre-baked into the per-level matrices). The kernels here evaluate it:
+
+  * ``kron_batch_kernel``  — over a 1-D batch of (c, c') color pairs; this
+    is the hot path the Rust coordinator calls through PJRT to score
+    ball-dropping proposals.
+  * ``gamma_tile_kernel``  — over a 2-D (TILE x TILE) window of Gamma, used
+    to materialise the Figure 1-3 matrices.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the batch dimension is
+tiled into VMEM blocks of ``BLOCK`` lanes; the theta stack (D_MAX x 2 x 2
+floats = 384 B) stays VMEM-resident across the whole grid; the level loop
+is a ``fori_loop`` whose body is a 4-term multiplexed product — pure VPU
+elementwise work, no MXU needed, roofline is memory-bound on the color
+streams. Kernels are lowered with ``interpret=True``: the CPU PJRT client
+cannot execute Mosaic custom-calls, and interpret-mode lowering produces
+plain fused HLO that XLA-CPU vectorises.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Compile-time constants shared with aot.py and the Rust runtime
+# (rust/src/runtime/artifacts.rs reads them from the .meta files).
+D_MAX = 24  # max attribute levels an artifact supports (d <= D_MAX)
+BATCH = 8192  # color pairs per artifact invocation
+BLOCK = 1024  # pairs per pallas grid step (VMEM tile)
+TILE = 64  # gamma_tile is TILE x TILE
+
+
+def _level_factor(theta_k: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """theta_k[a, b] as a branch-free 4-term multiplex.
+
+    ``theta_k`` is (2, 2); ``a``/``b`` are float arrays of {0.0, 1.0}.
+    A select-free formulation keeps the lowered HLO a pure fused
+    multiply-add chain (no gathers inside the level loop).
+    """
+    na, nb = 1.0 - a, 1.0 - b
+    return (
+        theta_k[0, 0] * na * nb
+        + theta_k[0, 1] * na * b
+        + theta_k[1, 0] * a * nb
+        + theta_k[1, 1] * a * b
+    )
+
+
+def _kron_product(theta: jnp.ndarray, cs: jnp.ndarray, ct: jnp.ndarray) -> jnp.ndarray:
+    """prod_k theta[k, bit_k(cs), bit_k(ct)] with a fori_loop over levels."""
+    d = theta.shape[0]
+
+    def body(k, acc):
+        a = jnp.bitwise_and(jax.lax.shift_right_logical(cs, k), 1).astype(jnp.float32)
+        b = jnp.bitwise_and(jax.lax.shift_right_logical(ct, k), 1).astype(jnp.float32)
+        theta_k = jax.lax.dynamic_index_in_dim(theta, k, axis=0, keepdims=False)
+        return acc * _level_factor(theta_k, a, b)
+
+    init = jnp.ones(cs.shape, dtype=jnp.float32)
+    return jax.lax.fori_loop(0, d, body, init)
+
+
+def _kron_batch_kernel(theta_ref, cs_ref, ct_ref, o_ref):
+    """One VMEM block of the batched Kronecker product."""
+    theta = theta_ref[...]
+    cs = cs_ref[...]
+    ct = ct_ref[...]
+    o_ref[...] = _kron_product(theta, cs, ct)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "block"))
+def kron_batch(
+    thetas: jnp.ndarray,
+    cs: jnp.ndarray,
+    ct: jnp.ndarray,
+    *,
+    batch: int = BATCH,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Batched Gamma entries: ``out[i] = prod_k thetas[k, bit_k(cs_i), bit_k(ct_i)]``.
+
+    Args:
+      thetas: float32 (D, 2, 2) — pad inactive levels with ones.
+      cs, ct: int32 (batch,) — source / target colors.
+    Returns:
+      float32 (batch,) Kronecker entry products.
+    """
+    assert batch % block == 0, "batch must be a multiple of block"
+    d = thetas.shape[0]
+    grid = (batch // block,)
+    return pl.pallas_call(
+        _kron_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, 2, 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,
+    )(thetas.astype(jnp.float32), cs.astype(jnp.int32), ct.astype(jnp.int32))
+
+
+def _gamma_tile_kernel(theta_ref, base_ref, o_ref, *, tile: int):
+    """A tile x tile window of Gamma starting at (base[0], base[1])."""
+    theta = theta_ref[...]
+    row0 = base_ref[0]
+    col0 = base_ref[1]
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    o_ref[...] = _kron_product(theta, rows, cols)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def gamma_tile(
+    thetas: jnp.ndarray, base: jnp.ndarray, *, tile: int = TILE
+) -> jnp.ndarray:
+    """Materialise Gamma[row0:row0+tile, col0:col0+tile].
+
+    Args:
+      thetas: float32 (D, 2, 2).
+      base: int32 (2,) — (row0, col0) offset of the window.
+    Returns:
+      float32 (tile, tile).
+    """
+    d = thetas.shape[0]
+    return pl.pallas_call(
+        functools.partial(_gamma_tile_kernel, tile=tile),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((d, 2, 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tile, tile), jnp.float32),
+        interpret=True,
+    )(thetas.astype(jnp.float32), base.astype(jnp.int32))

@@ -1,0 +1,146 @@
+"""Pure-numpy oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must agree with the corresponding function here to float32
+accuracy (pytest + hypothesis sweep shapes, dtypes and parameter ranges).
+
+Conventions (shared with the Rust side — see rust/src/model/kpgm.rs):
+  * ``thetas`` is a float32 array of shape (D, 2, 2): one 2x2 initiator
+    matrix per attribute level. Levels beyond the model's true depth ``d``
+    are padded with the identity-for-product matrix ``[[1, 1], [1, 1]]`` so
+    a single AOT artifact (compiled at D = D_MAX) serves any d <= D_MAX.
+  * Colors are integers in ``[0, 2^d)``. Because a padded artifact does not
+    know ``d``, kernels use LITTLE-endian level order: level k of a color
+    is bit k, ``bit_k(c) = (c >> k) & 1``. The Rust side adopts the same
+    convention everywhere; the paper's big-endian indexing is an isomorphic
+    relabelling of colors (a consistent permutation of Gamma's rows/cols).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "kron_entry_ref",
+    "kron_batch_ref",
+    "gamma_matrix_ref",
+    "gamma_tile_ref",
+    "accept_batch_ref",
+    "edge_stats_ref",
+]
+
+
+def kron_entry_ref(thetas: np.ndarray, c: int, cp: int) -> float:
+    """Gamma_{c,cp} = prod_k thetas[k, bit_k(c), bit_k(cp)] (little-endian)."""
+    thetas = np.asarray(thetas, dtype=np.float64)
+    acc = 1.0
+    for k in range(thetas.shape[0]):
+        a = (int(c) >> k) & 1
+        b = (int(cp) >> k) & 1
+        acc *= float(thetas[k, a, b])
+    return acc
+
+
+def kron_batch_ref(thetas: np.ndarray, cs: np.ndarray, ct: np.ndarray) -> np.ndarray:
+    """Vectorised kron_entry over a batch of (source, target) color pairs."""
+    thetas = np.asarray(thetas, dtype=np.float64)
+    cs = np.asarray(cs, dtype=np.int64)
+    ct = np.asarray(ct, dtype=np.int64)
+    out = np.ones(cs.shape, dtype=np.float64)
+    for k in range(thetas.shape[0]):
+        a = (cs >> k) & 1
+        b = (ct >> k) & 1
+        out = out * thetas[k, a, b]
+    return out.astype(np.float32)
+
+
+def gamma_matrix_ref(thetas: np.ndarray, d: int) -> np.ndarray:
+    """Full 2^d x 2^d edge-probability matrix (Eq. 3 of the paper).
+
+    Built by explicit Kronecker products of the first ``d`` initiator
+    matrices — an independent construction from kron_batch_ref, used to
+    cross-check the bit-product identity (Eq. 6). Little-endian level
+    order: level d-1 is the most significant bit, hence the OUTERMOST
+    Kronecker factor.
+    """
+    thetas = np.asarray(thetas, dtype=np.float64)
+    gamma = np.ones((1, 1), dtype=np.float64)
+    for k in range(d):
+        gamma = np.kron(thetas[k], gamma)
+    return gamma.astype(np.float32)
+
+
+def gamma_tile_ref(
+    thetas: np.ndarray, row0: int, col0: int, tile: int = 64
+) -> np.ndarray:
+    """A ``tile x tile`` window of Gamma at offset (row0, col0)."""
+    rows = np.arange(row0, row0 + tile, dtype=np.int64)
+    cols = np.arange(col0, col0 + tile, dtype=np.int64)
+    rr, cc = np.meshgrid(rows, cols, indexing="ij")
+    return kron_batch_ref(thetas, rr.ravel(), cc.ravel()).reshape(tile, tile)
+
+
+def accept_batch_ref(
+    theta: np.ndarray,
+    theta_prime: np.ndarray,
+    counts: np.ndarray,
+    cs: np.ndarray,
+    ct: np.ndarray,
+) -> np.ndarray:
+    """Acceptance probability Lambda_cc' / Lambda'_cc' for proposed pairs.
+
+    Lambda_cc'  = |V_c| * |V_c'| * Gamma_cc'  (Eq. 12), Gamma from ``theta``.
+    Lambda'_cc' = kron entry of the (pre-scaled) proposal stack
+                  ``theta_prime`` — one of the four Eq. 21 component stacks.
+
+    A zero proposal rate yields acceptance 0 (such a pair is never proposed
+    by a BDP with that rate, so the value is immaterial; 0 keeps the output
+    well-defined). The ratio is clamped to [0, 1]: Theorem 4 guarantees
+    Lambda <= Lambda' exactly, but float32 rounding of the two product
+    chains can push the ratio epsilon above 1.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    lam = (
+        counts[np.asarray(cs, dtype=np.int64)]
+        * counts[np.asarray(ct, dtype=np.int64)]
+        * kron_batch_ref(theta, cs, ct).astype(np.float64)
+    )
+    lam_p = kron_batch_ref(theta_prime, cs, ct).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        r = np.where(lam_p > 0.0, lam / np.maximum(lam_p, 1e-300), 0.0)
+    return np.clip(r, 0.0, 1.0).astype(np.float32)
+
+
+def edge_stats_ref(
+    theta: np.ndarray, mu: np.ndarray, mask: np.ndarray, n: float
+) -> np.ndarray:
+    """(e_K, e_M, e_KM, e_MK) of Eqs. (5), (8), (24), (23).
+
+    ``mask[k] = 1`` marks an active level; inactive levels contribute a
+    factor of 1 to every product so the D_MAX-padded artifact matches the
+    depth-d model. ``n`` is the number of nodes (float32 scalar in the
+    artifact).
+    """
+    theta = np.asarray(theta, dtype=np.float64)
+    mu = np.asarray(mu, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+
+    t00, t01 = theta[:, 0, 0], theta[:, 0, 1]
+    t10, t11 = theta[:, 1, 0], theta[:, 1, 1]
+    q = 1.0 - mu
+
+    f_k = t00 + t01 + t10 + t11
+    f_m = q * q * t00 + q * mu * t01 + mu * q * t10 + mu * mu * t11
+    # e_MK (Eq. 23): source attribute drawn from mu, target summed out.
+    f_mk = q * (t00 + t01) + mu * (t10 + t11)
+    # e_KM (Eq. 24): target attribute drawn from mu, source summed out.
+    f_km = q * (t00 + t10) + mu * (t01 + t11)
+
+    def mprod(f: np.ndarray) -> float:
+        return float(np.prod(np.where(mask > 0.5, f, 1.0)))
+
+    e_k = mprod(f_k)
+    e_m = float(n) * float(n) * mprod(f_m)
+    e_km = float(n) * mprod(f_km)
+    e_mk = float(n) * mprod(f_mk)
+    return np.array([e_k, e_m, e_km, e_mk], dtype=np.float32)

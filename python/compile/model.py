@@ -1,0 +1,75 @@
+"""Layer-2 JAX entry points — the compute graph the Rust coordinator calls.
+
+Each public function here is an AOT compilation unit: ``aot.py`` lowers it
+once to HLO text under ``artifacts/`` and the Rust runtime
+(rust/src/runtime/) loads + executes it through PJRT. Python never runs at
+request time.
+
+All entry points use *padded static shapes* so one artifact serves every
+model depth d <= D_MAX (inactive levels are padded with all-ones initiator
+matrices, which are the identity of the level product — see kernels/ref.py
+for the convention).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.accept import N_MAX, accept_batch
+from .kernels.gamma import BATCH, D_MAX, TILE, gamma_tile, kron_batch
+
+__all__ = [
+    "D_MAX",
+    "BATCH",
+    "N_MAX",
+    "TILE",
+    "kron_batch_entry",
+    "gamma_tile_entry",
+    "accept_batch_entry",
+    "edge_stats_entry",
+]
+
+
+def kron_batch_entry(thetas, cs, ct):
+    """Batched Kronecker entry products (Eq. 6). Shapes: (D,2,2),(B,),(B,)."""
+    return (kron_batch(thetas, cs, ct),)
+
+
+def gamma_tile_entry(thetas, base):
+    """TILE x TILE window of the edge-probability matrix Gamma (Eq. 3)."""
+    return (gamma_tile(thetas, base),)
+
+
+def accept_batch_entry(theta, theta_prime, counts, cs, ct):
+    """Acceptance probabilities Lambda/Lambda' for proposed color pairs."""
+    return (accept_batch(theta, theta_prime, counts, cs, ct),)
+
+
+def edge_stats_entry(theta, mu, mask, n):
+    """(e_K, e_M, e_KM, e_MK) — Eqs. (5), (8), (24), (23).
+
+    Plain fused jnp (no Pallas): four masked products over the level axis.
+    ``mask[k] = 1`` marks active levels; ``n`` is the node count as a
+    float32 scalar (exact for n <= 2^24, far above N_MAX).
+    """
+    theta = theta.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    t00, t01 = theta[:, 0, 0], theta[:, 0, 1]
+    t10, t11 = theta[:, 1, 0], theta[:, 1, 1]
+    q = 1.0 - mu
+
+    f_k = t00 + t01 + t10 + t11
+    f_m = q * q * t00 + q * mu * t01 + mu * q * t10 + mu * mu * t11
+    f_mk = q * (t00 + t01) + mu * (t10 + t11)  # Eq. 23
+    f_km = q * (t00 + t10) + mu * (t01 + t11)  # Eq. 24
+
+    def mprod(f):
+        return jnp.prod(jnp.where(mask > 0.5, f, 1.0))
+
+    e_k = mprod(f_k)
+    e_m = n * n * mprod(f_m)
+    e_km = n * mprod(f_km)
+    e_mk = n * mprod(f_mk)
+    return (jnp.stack([e_k, e_m, e_km, e_mk]),)

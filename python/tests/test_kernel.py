@@ -1,0 +1,187 @@
+"""Pallas kernels vs pure-numpy oracle — the Layer-1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.accept import accept_batch
+from compile.kernels.gamma import BATCH, BLOCK, D_MAX, TILE, gamma_tile, kron_batch
+
+RNG = np.random.default_rng(0)
+
+
+def random_thetas(d: int, rng=RNG, lo=0.05, hi=0.95) -> np.ndarray:
+    """A d-level stack padded to D_MAX with all-ones (product identity)."""
+    t = np.ones((D_MAX, 2, 2), dtype=np.float32)
+    t[:d] = rng.uniform(lo, hi, size=(d, 2, 2)).astype(np.float32)
+    return t
+
+
+def random_colors(d: int, size: int, rng=RNG) -> np.ndarray:
+    return rng.integers(0, 1 << d, size=size, dtype=np.int64).astype(np.int32)
+
+
+# ---------------------------------------------------------------- kron_batch
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 8, 17, 20, D_MAX])
+def test_kron_batch_matches_ref(d):
+    thetas = random_thetas(d)
+    cs = random_colors(d, BATCH)
+    ct = random_colors(d, BATCH)
+    got = np.asarray(kron_batch(thetas, cs, ct))
+    want = ref.kron_batch_ref(thetas, cs, ct)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_kron_batch_matches_explicit_kronecker():
+    """Bit-product identity (Eq. 6) vs an explicit Kronecker build (Eq. 3)."""
+    d = 6
+    thetas = random_thetas(d)
+    gamma = ref.gamma_matrix_ref(thetas, d)
+    cs = random_colors(d, BATCH)
+    ct = random_colors(d, BATCH)
+    got = np.asarray(kron_batch(thetas, cs, ct))
+    want = gamma[cs, ct]
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_kron_batch_padding_invariance():
+    """Levels beyond d padded with ones must not change the product."""
+    d = 5
+    base = random_thetas(d)
+    cs = random_colors(d, BATCH)
+    ct = random_colors(d, BATCH)
+    full = np.asarray(kron_batch(base, cs, ct))
+    # Re-pad with a DIFFERENT number of active-looking but all-ones levels.
+    repad = base.copy()
+    repad[d:] = 1.0
+    np.testing.assert_array_equal(full, np.asarray(kron_batch(repad, cs, ct)))
+
+
+def test_kron_batch_color_zero_is_t00_product():
+    d = 7
+    thetas = random_thetas(d)
+    cs = np.zeros(BATCH, dtype=np.int32)
+    got = np.asarray(kron_batch(thetas, cs, cs))[0]
+    want = float(np.prod(thetas[:d, 0, 0], dtype=np.float64))
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=D_MAX),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    lo=st.floats(min_value=0.0, max_value=0.5),
+    hi=st.floats(min_value=0.5, max_value=2.0),
+)
+def test_kron_batch_hypothesis(d, seed, lo, hi):
+    """Sweep depth + parameter range (incl. >1 thetas: BDP rates are
+    unbounded — Section 3.1 of the paper)."""
+    rng = np.random.default_rng(seed)
+    thetas = random_thetas(d, rng=rng, lo=lo, hi=max(hi, lo + 1e-3))
+    cs = random_colors(d, BATCH, rng=rng)
+    ct = random_colors(d, BATCH, rng=rng)
+    got = np.asarray(kron_batch(thetas, cs, ct))
+    want = ref.kron_batch_ref(thetas, cs, ct)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-30)
+
+
+# ---------------------------------------------------------------- gamma_tile
+
+
+@pytest.mark.parametrize("d,row0,col0", [(3, 0, 0), (6, 0, 0), (8, 64, 128), (10, 960, 0)])
+def test_gamma_tile_matches_ref(d, row0, col0):
+    thetas = random_thetas(d)
+    got = np.asarray(gamma_tile(thetas, np.array([row0, col0], dtype=np.int32)))
+    want = ref.gamma_tile_ref(thetas, row0, col0, tile=TILE)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_gamma_tile_figure1_params():
+    """The Figure 1 matrix: Theta = (0.4, 0.7; 0.7, 0.9), d = 3."""
+    thetas = np.ones((D_MAX, 2, 2), dtype=np.float32)
+    thetas[:3] = np.array([[0.4, 0.7], [0.7, 0.9]], dtype=np.float32)
+    got = np.asarray(gamma_tile(thetas, np.array([0, 0], dtype=np.int32)))[:8, :8]
+    want = ref.gamma_matrix_ref(thetas, 3)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+    # Spot values: Gamma_00 = 0.4^3, Gamma_77 = 0.9^3 (little-endian colors).
+    np.testing.assert_allclose(got[0, 0], 0.4**3, rtol=1e-5)
+    np.testing.assert_allclose(got[7, 7], 0.9**3, rtol=1e-5)
+
+
+# -------------------------------------------------------------- accept_batch
+
+
+def make_counts(d: int, n_nodes: int, mu: float, rng=RNG) -> np.ndarray:
+    """|V_c| table for n_nodes MAGM nodes with iid Bernoulli(mu) attributes."""
+    from compile.kernels.accept import N_MAX
+
+    counts = np.zeros(N_MAX, dtype=np.float32)
+    bits = rng.uniform(size=(n_nodes, d)) < mu
+    colors = (bits << np.arange(d)).sum(axis=1)
+    np.add.at(counts, colors, 1.0)
+    return counts
+
+
+@pytest.mark.parametrize("d,mu", [(4, 0.5), (8, 0.3), (12, 0.7)])
+def test_accept_batch_matches_ref(d, mu):
+    thetas = random_thetas(d)
+    # A valid-looking proposal: scale the target stack up per level.
+    theta_p = thetas.copy()
+    theta_p[:d] *= 1.7
+    counts = make_counts(d, 512, mu)
+    cs = random_colors(d, BATCH)
+    ct = random_colors(d, BATCH)
+    got = np.asarray(accept_batch(thetas, theta_p, counts, cs, ct))
+    want = ref.accept_batch_ref(thetas, theta_p, counts, cs, ct)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-7)
+    assert np.all(got >= 0.0) and np.all(got <= 1.0)
+
+
+def test_accept_batch_zero_proposal_rate_gives_zero():
+    d = 4
+    thetas = random_thetas(d)
+    theta_p = np.zeros_like(thetas)  # degenerate proposal
+    counts = make_counts(d, 128, 0.5)
+    cs = random_colors(d, BATCH)
+    ct = random_colors(d, BATCH)
+    got = np.asarray(accept_batch(thetas, theta_p, counts, cs, ct))
+    assert np.all(got == 0.0)
+
+
+def test_accept_batch_empty_color_gives_zero():
+    """Pairs touching colors with |V_c| = 0 must be rejected surely."""
+    d = 6
+    thetas = random_thetas(d)
+    theta_p = thetas * 2.0
+    counts = make_counts(d, 64, 0.5)
+    empty = np.where(counts[: 1 << d] == 0)[0]
+    if empty.size == 0:
+        pytest.skip("no empty color in draw")
+    cs = np.full(BATCH, empty[0], dtype=np.int32)
+    ct = random_colors(d, BATCH)
+    got = np.asarray(accept_batch(thetas, theta_p, counts, cs, ct))
+    assert np.all(got == 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=14),
+    mu=st.floats(min_value=0.05, max_value=0.95),
+    scale=st.floats(min_value=1.0, max_value=8.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_accept_batch_hypothesis(d, mu, scale, seed):
+    rng = np.random.default_rng(seed)
+    thetas = random_thetas(d, rng=rng)
+    theta_p = thetas.copy()
+    theta_p[:d] *= np.float32(scale)
+    counts = make_counts(d, 256, mu, rng=rng)
+    cs = random_colors(d, BATCH, rng=rng)
+    ct = random_colors(d, BATCH, rng=rng)
+    got = np.asarray(accept_batch(thetas, theta_p, counts, cs, ct))
+    want = ref.accept_batch_ref(thetas, theta_p, counts, cs, ct)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-6)

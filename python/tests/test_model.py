@@ -1,0 +1,122 @@
+"""Layer-2 entry-point tests: edge statistics + entry wrappers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.gamma import BATCH, D_MAX
+
+RNG = np.random.default_rng(7)
+
+# The paper's two evaluation initiator matrices (Section 5).
+THETA1 = np.array([[0.15, 0.7], [0.7, 0.85]], dtype=np.float32)
+THETA2 = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
+
+
+def stack(theta2x2: np.ndarray, d: int):
+    """Replicate one 2x2 matrix over d levels, pad to D_MAX; return
+    (theta, mu_vec builder, mask)."""
+    t = np.ones((D_MAX, 2, 2), dtype=np.float32)
+    t[:d] = theta2x2
+    mask = np.zeros(D_MAX, dtype=np.float32)
+    mask[:d] = 1.0
+    return t, mask
+
+
+def mu_vec(mu: float, d: int) -> np.ndarray:
+    m = np.zeros(D_MAX, dtype=np.float32)
+    m[:d] = mu
+    return m
+
+
+@pytest.mark.parametrize("theta", [THETA1, THETA2])
+@pytest.mark.parametrize("mu", [0.3, 0.5, 0.7])
+@pytest.mark.parametrize("d", [1, 5, 14])
+def test_edge_stats_matches_ref(theta, mu, d):
+    t, mask = stack(theta, d)
+    m = mu_vec(mu, d)
+    n = float(1 << d)
+    (got,) = model.edge_stats_entry(t, m, mask, np.float32(n))
+    want = ref.edge_stats_ref(t, m, mask, n)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=3e-5)
+
+
+def test_edge_stats_mu_half_makes_em_equal_ek():
+    """Paper Section 2.2: mu = 0.5 and n = 2^d  =>  e_M = e_K."""
+    d = 10
+    t, mask = stack(THETA1, d)
+    m = mu_vec(0.5, d)
+    (got,) = model.edge_stats_entry(t, m, mask, np.float32(1 << d))
+    got = np.asarray(got, dtype=np.float64)
+    e_k, e_m, e_km, e_mk = got
+    np.testing.assert_allclose(e_m, e_k, rtol=1e-4)
+    np.testing.assert_allclose(e_km, e_k, rtol=1e-4)
+    np.testing.assert_allclose(e_mk, e_k, rtol=1e-4)
+
+
+def test_edge_stats_sandwich_property_theta1():
+    """Empirical Eq. 25 for the paper's parameters: e_KM, e_MK between
+    e_M and e_K (checked on the Fig. 4 grid)."""
+    d = 8
+    for theta in (THETA1, THETA2):
+        t, mask = stack(theta, d)
+        for mu in np.linspace(0.1, 0.9, 17):
+            m = mu_vec(float(mu), d)
+            (got,) = model.edge_stats_entry(t, m, mask, np.float32(1 << d))
+            e_k, e_m, e_km, e_mk = np.asarray(got, dtype=np.float64)
+            lo, hi = min(e_m, e_k), max(e_m, e_k)
+            assert lo * (1 - 1e-5) <= e_km <= hi * (1 + 1e-5)
+            assert lo * (1 - 1e-5) <= e_mk <= hi * (1 + 1e-5)
+
+
+def test_edge_stats_em_brute_force_small():
+    """e_M (Eq. 8) against a brute-force expectation over all color pairs."""
+    d = 3
+    n = 11.0  # n need not be 2^d in a MAGM
+    mu = 0.37
+    t, mask = stack(THETA1, d)
+    m = mu_vec(mu, d)
+    (got,) = model.edge_stats_entry(t, m, mask, np.float32(n))
+    e_m = float(np.asarray(got)[1])
+
+    # Brute force: sum over color pairs of P[c] P[c'] Gamma_cc' * n^2.
+    pc = np.zeros(1 << d)
+    for c in range(1 << d):
+        p = 1.0
+        for k in range(d):
+            bit = (c >> k) & 1
+            p *= mu if bit else (1.0 - mu)
+        pc[c] = p
+    gamma = ref.gamma_matrix_ref(t, d).astype(np.float64)
+    want = n * n * float(pc @ gamma @ pc)
+    np.testing.assert_allclose(e_m, want, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=D_MAX),
+    mu=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_edge_stats_hypothesis(d, mu, seed):
+    rng = np.random.default_rng(seed)
+    theta = rng.uniform(0.05, 0.95, size=(2, 2)).astype(np.float32)
+    t, mask = stack(theta, d)
+    m = mu_vec(mu, d)
+    n = float(rng.integers(1, 1 << min(d, 16)) + 1)
+    (got,) = model.edge_stats_entry(t, m, mask, np.float32(n))
+    want = ref.edge_stats_ref(t, m, mask, n)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=1e-30)
+
+
+def test_entry_wrappers_return_tuples():
+    d = 4
+    t, _ = stack(THETA1, d)
+    cs = RNG.integers(0, 1 << d, size=BATCH).astype(np.int32)
+    out = model.kron_batch_entry(t, cs, cs)
+    assert isinstance(out, tuple) and len(out) == 1
+    out = model.gamma_tile_entry(t, np.zeros(2, dtype=np.int32))
+    assert isinstance(out, tuple) and out[0].shape == (model.TILE, model.TILE)

@@ -1,0 +1,81 @@
+//! Ablation: the value of the §4.3–4.4 frequent/infrequent partition.
+//!
+//! Algorithm 2 = §4.2's single `m²`-scaled proposal + the color
+//! partition. Benchmarking the two against each other isolates the
+//! partition's contribution (the paper's §4.2 closes by noting the `m²`
+//! bound degrades when `μ ≠ 0.5` — this quantifies by how much).
+//!
+//! Run: `cargo bench --bench ablation_partition`
+
+use magbdp::model::{InitiatorMatrix, MagmParams};
+use magbdp::sampler::{MagmBdpSampler, MagmSimpleSampler, Sampler};
+use magbdp::util::benchkit::Table;
+use magbdp::util::rng::{SeedableRng, Xoshiro256pp};
+
+fn main() {
+    let fast = std::env::var("MAGBDP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let d = if fast { 11 } else { 13 };
+    let n = 1u64 << d;
+    let mut table = Table::new(
+        &format!("ablation — partitioned (Alg. 2) vs §4.2 simple proposal (Θ₁, n=2^{d})"),
+        &[
+            "mu",
+            "proposals:partitioned",
+            "proposals:simple",
+            "ratio",
+            "t:partitioned(s)",
+            "t:simple(s)",
+        ],
+    );
+    for mu in [0.2, 0.3, 0.4, 0.5, 0.6] {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(9000 + (mu * 100.0) as u64);
+        let assignment = params.sample_attributes(&mut rng);
+
+        let full = MagmBdpSampler::new(&params, &assignment);
+        let simple = MagmSimpleSampler::new(&params, &assignment);
+        let ratio = simple.expected_proposals() / full.expected_proposals();
+
+        let t = std::time::Instant::now();
+        std::hint::black_box(full.sample(&mut rng));
+        let t_full = t.elapsed().as_secs_f64();
+
+        // The simple proposal can be catastrophically slow off μ=0.5 —
+        // skip the measurement when predicted work exceeds ~30× Alg. 2.
+        let t_simple = if ratio < 30.0 {
+            let t = std::time::Instant::now();
+            std::hint::black_box(simple.sample(&mut rng));
+            format!("{:.3}", t.elapsed().as_secs_f64())
+        } else {
+            format!("(skipped, ~{:.0}× work)", ratio)
+        };
+
+        table.row(&[
+            format!("{mu:.1}"),
+            format!("{:.3e}", full.expected_proposals()),
+            format!("{:.3e}", simple.expected_proposals()),
+            format!("{ratio:.1}×"),
+            format!("{t_full:.3}"),
+            t_simple,
+        ]);
+
+        // The partition's win is the SPARSE side (μ < 0.5, e_M < e_K):
+        // there m = max|V_c| blows up while the partitioned rates track
+        // the small e_M. On the dense side (e_M > e_K) the m²e_K bound
+        // can be the cheaper proposal — which is precisely why quilting
+        // (whose work tracks e_K) remains competitive for μ > 0.5 and
+        // why §4.6 combines the two algorithms.
+        if mu <= 0.4 {
+            assert!(
+                full.expected_proposals() < simple.expected_proposals(),
+                "partition should beat the m² bound at mu={mu}"
+            );
+        }
+    }
+    println!("{}", table.render());
+    let _ = table.write_csv("ablation_partition");
+    println!(
+        "ok: the F/I partition dominates the §4.2 m² bound on sparse graphs (μ ≤ 0.4);\n\
+         on the dense side the m²e_K shape is competitive — the §4.6 hybrid's raison d'être"
+    );
+}

@@ -1,0 +1,171 @@
+//! Component micro-benchmarks — the §Perf evidence base.
+//!
+//! Measures every stage of the hot path in isolation:
+//!   * raw PRNG throughput (xoshiro256++, PCG32)
+//!   * Poisson / Binomial samplers across rate regimes
+//!   * alias-table categorical draws
+//!   * BDP ball drops at several depths (the O(d)/ball claim)
+//!   * native acceptance lookups
+//!   * end-to-end Algorithm 2 per-ball cost
+//!   * XLA acceptance batch dispatch (per-pair amortised cost)
+//!
+//! Run: `cargo bench --bench micro`
+
+use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
+use magbdp::sampler::magm_bdp::AcceptBackend;
+use magbdp::sampler::proposal::Component;
+use magbdp::sampler::{BdpSampler, MagmBdpSampler, Sampler};
+use magbdp::util::benchkit::Bench;
+use magbdp::util::rng::dist::{binomial, poisson};
+use magbdp::util::rng::{alias::AliasTable, Rng, SeedableRng, Xoshiro256pp};
+
+fn main() {
+    let bench = Bench::new();
+    let mut results = Vec::new();
+
+    // --- PRNG throughput.
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let iters = 1_000_000u64;
+        results.push(bench.run_with_units("xoshiro256++ next_u64 x1e6", iters as f64, |_| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                acc = acc.wrapping_add(rng.next_u64());
+            }
+            acc
+        }));
+    }
+
+    // --- Poisson across regimes (Knuth < 30 ≤ PTRS).
+    for lambda in [1.0, 25.0, 1e4] {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let iters = 100_000u64;
+        results.push(bench.run_with_units(
+            &format!("poisson(lambda={lambda}) x1e5"),
+            iters as f64,
+            move |_| {
+                let mut acc = 0u64;
+                for _ in 0..iters {
+                    acc = acc.wrapping_add(poisson(&mut rng, lambda));
+                }
+                acc
+            },
+        ));
+    }
+
+    // --- Binomial across regimes (trials / geometric-skip / BTRS).
+    for (n, p) in [(50u64, 0.3), (100_000, 1e-4), (100_000, 0.3)] {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let iters = 100_000u64;
+        results.push(bench.run_with_units(
+            &format!("binomial(n={n},p={p}) x1e5"),
+            iters as f64,
+            move |_| {
+                let mut acc = 0u64;
+                for _ in 0..iters {
+                    acc = acc.wrapping_add(binomial(&mut rng, n, p));
+                }
+                acc
+            },
+        ));
+    }
+
+    // --- Alias table draws.
+    {
+        let table = AliasTable::new(&InitiatorMatrix::THETA1.flat());
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let iters = 1_000_000u64;
+        results.push(bench.run_with_units("alias 4-way draw x1e6", iters as f64, move |_| {
+            let mut acc = 0usize;
+            for _ in 0..iters {
+                acc = acc.wrapping_add(table.sample(&mut rng));
+            }
+            acc
+        }));
+    }
+
+    // --- BDP ball drops: the O(d)/ball claim (throughput ∝ 1/d).
+    for d in [8usize, 14, 17, 20] {
+        let bdp = BdpSampler::new(&vec![InitiatorMatrix::THETA1; d]);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let iters = 200_000u64;
+        results.push(bench.run_with_units(
+            &format!("bdp drop_ball d={d} x2e5"),
+            iters as f64,
+            move |_| {
+                let mut acc = 0u64;
+                for _ in 0..iters {
+                    let (i, j) = bdp.drop_ball(&mut rng);
+                    acc = acc.wrapping_add(i ^ j);
+                }
+                acc
+            },
+        ));
+    }
+
+    // --- Native acceptance lookup + full Algorithm 2 per-ball cost.
+    {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 14, 0.4, 1 << 14);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let assignment = params.sample_attributes(&mut rng);
+        let sampler = MagmBdpSampler::new(&params, &assignment);
+
+        let prop = sampler.proposal().clone();
+        let bdp = prop.bdp(Component::FF).clone();
+        let pairs: Vec<(u64, u64)> = (0..100_000).map(|_| bdp.drop_ball(&mut rng)).collect();
+        let prop2 = prop.clone();
+        results.push(bench.run_with_units("native accept lookup x1e5", 1e5, move |_| {
+            let mut acc = 0.0f64;
+            for &(c, cp) in &pairs {
+                acc += prop2.accept_prob(Component::FF, c, cp);
+            }
+            acc
+        }));
+
+        let expected = sampler.expected_proposals();
+        results.push(bench.run_with_units(
+            &format!("algorithm2 full sample (d=14, ~{expected:.0} balls)"),
+            expected,
+            |i| {
+                let mut rng = Xoshiro256pp::seed_from_u64(7 + i as u64);
+                sampler.sample(&mut rng).num_edges()
+            },
+        ));
+    }
+
+    // --- XLA acceptance batch (needs artifacts).
+    match xla_micro(&bench) {
+        Ok(mut ms) => results.append(&mut ms),
+        Err(e) => eprintln!("skipping XLA micro benches: {e}"),
+    }
+
+    println!("\n== micro benchmark results ==");
+    for m in &results {
+        println!("{m}");
+    }
+}
+
+fn xla_micro(
+    bench: &Bench,
+) -> anyhow::Result<Vec<magbdp::util::benchkit::Measurement>> {
+    let params = MagmParams::replicated(InitiatorMatrix::THETA1, 12, 0.4, 1 << 12);
+    let mut rng = Xoshiro256pp::seed_from_u64(8);
+    let assignment = params.sample_attributes(&mut rng);
+    let index = ColorIndex::build(&params, &assignment);
+    let sampler = MagmBdpSampler::new(&params, &assignment);
+    let mut backend = magbdp::runtime::XlaAccept::new(&params, &index)?;
+    let batch = backend.batch_capacity();
+    let bdp = sampler.proposal().bdp(Component::FF).clone();
+    let pairs: Vec<(u64, u64)> = (0..batch).map(|_| bdp.drop_ball(&mut rng)).collect();
+    let mut out = Vec::new();
+    let proposal = sampler.proposal().clone();
+    let m = bench.run_with_units(
+        &format!("xla accept_batch dispatch ({batch} pairs)"),
+        batch as f64,
+        move |_| {
+            backend.accept_probs(&proposal, Component::FF, &pairs, &mut out);
+            out.len()
+        },
+    );
+    Ok(vec![m])
+}

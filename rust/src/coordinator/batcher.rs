@@ -1,0 +1,134 @@
+//! Adaptive batch sizing for the XLA acceptance path.
+//!
+//! Each PJRT dispatch has a fixed overhead (literal marshalling, device
+//! sync); large batches amortise it but inflate per-request latency and
+//! waste work when the tail of a component's proposals underfills the
+//! batch. [`DynamicBatcher`] tracks recent per-dispatch service times and
+//! resizes multiplicatively toward a target dispatch latency — the same
+//! additive-increase/multiplicative-decrease shape serving systems use
+//! for dynamic batching.
+
+use std::time::Duration;
+
+/// AIMD batch-size controller.
+#[derive(Clone, Debug)]
+pub struct DynamicBatcher {
+    min: usize,
+    max: usize,
+    current: usize,
+    target: Duration,
+    /// Exponentially weighted dispatch latency (None until first sample).
+    ewma: Option<f64>,
+}
+
+impl DynamicBatcher {
+    /// `min ≤ current ≤ max`, aiming for `target` per-dispatch latency.
+    pub fn new(min: usize, max: usize, target: Duration) -> Self {
+        assert!(min >= 1 && min <= max, "need 1 ≤ min ≤ max");
+        Self {
+            min,
+            max,
+            current: min,
+            target,
+            ewma: None,
+        }
+    }
+
+    /// Defaults tuned for the CPU PJRT client (dispatch ≈ 100 µs–1 ms).
+    pub fn with_defaults(max: usize) -> Self {
+        Self::new(256.min(max), max, Duration::from_millis(2))
+    }
+
+    /// Batch size to use for the next dispatch.
+    pub fn size(&self) -> usize {
+        self.current
+    }
+
+    /// Record a dispatch of `batch` items taking `elapsed`.
+    pub fn observe(&mut self, batch: usize, elapsed: Duration) {
+        let secs = elapsed.as_secs_f64();
+        // Normalise to the full batch size the latency was measured at.
+        let per_item = secs / batch.max(1) as f64;
+        let projected = per_item * self.current as f64;
+        let alpha = 0.3;
+        let ewma = match self.ewma {
+            Some(prev) => (1.0 - alpha) * prev + alpha * projected,
+            None => projected,
+        };
+        self.ewma = Some(ewma);
+        let target = self.target.as_secs_f64();
+        if ewma < 0.5 * target {
+            // Plenty of headroom: grow additively (half-step of current).
+            self.current = (self.current + self.current / 2 + 1).min(self.max);
+        } else if ewma > target {
+            // Over budget: shrink multiplicatively.
+            self.current = (self.current / 2).max(self.min);
+        }
+    }
+
+    /// Current latency estimate for a full batch (None before data).
+    pub fn estimated_latency(&self) -> Option<Duration> {
+        self.ewma.map(Duration::from_secs_f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_when_fast() {
+        let mut b = DynamicBatcher::new(64, 8192, Duration::from_millis(2));
+        for _ in 0..20 {
+            let size = b.size();
+            b.observe(size, Duration::from_micros(50));
+        }
+        assert_eq!(b.size(), 8192, "fast dispatches should saturate max");
+    }
+
+    #[test]
+    fn shrinks_when_slow() {
+        let mut b = DynamicBatcher::new(64, 8192, Duration::from_millis(2));
+        // Force growth first.
+        for _ in 0..20 {
+            let s = b.size();
+            b.observe(s, Duration::from_micros(10));
+        }
+        // Now each item costs 10 µs → full batch far over 2 ms budget.
+        for _ in 0..20 {
+            let s = b.size();
+            b.observe(s, Duration::from_micros(10 * s as u64));
+        }
+        assert!(b.size() < 8192);
+        assert!(b.size() >= 64);
+    }
+
+    #[test]
+    fn stays_within_bounds() {
+        let mut b = DynamicBatcher::new(32, 256, Duration::from_millis(1));
+        for i in 0..100 {
+            let s = b.size();
+            assert!((32..=256).contains(&s));
+            let dt = if i % 2 == 0 {
+                Duration::from_nanos(100)
+            } else {
+                Duration::from_millis(50)
+            };
+            b.observe(s, dt);
+        }
+    }
+
+    #[test]
+    fn latency_estimate_appears() {
+        let mut b = DynamicBatcher::with_defaults(1024);
+        assert!(b.estimated_latency().is_none());
+        b.observe(b.size(), Duration::from_micros(500));
+        assert!(b.estimated_latency().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "min")]
+    fn rejects_bad_bounds() {
+        let _ = DynamicBatcher::new(0, 10, Duration::from_millis(1));
+    }
+}

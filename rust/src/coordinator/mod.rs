@@ -1,0 +1,17 @@
+//! The Layer-3 coordinator: turns the sampler library into a service.
+//!
+//! * [`scheduler`] — deterministic work-splitting of a sampling job
+//!   across threads (ball-range shards with independent RNG streams).
+//! * [`batcher`] — adaptive batch sizing for the XLA acceptance path
+//!   (amortise PJRT dispatch without hurting tail latency).
+//! * [`service`] — the graph-generation service: a job queue over the
+//!   thread pool, per-job metrics, and a text job-file format so the CLI
+//!   (`magbdp serve`) can run workload traces end-to-end.
+
+pub mod batcher;
+pub mod scheduler;
+pub mod service;
+
+pub use batcher::DynamicBatcher;
+pub use scheduler::ShardPlan;
+pub use service::{Algo, GenerationService, JobResult, JobSpec};

@@ -1,0 +1,148 @@
+//! Deterministic shard planning for parallel sampling.
+//!
+//! A sampling job's work is a set of independent ball drops, one Poisson
+//! count per proposal component. The plan splits each component's count
+//! into `threads` contiguous ranges and assigns shard-indexed RNG
+//! streams, so the merged output is a function of `(seed, threads)` only
+//! — never of OS scheduling.
+
+/// One shard's slice of every component's ball range.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Shard index (also the RNG stream index).
+    pub index: usize,
+    /// Per component: `lo..hi` ball range.
+    pub ranges: Vec<(u64, u64)>,
+}
+
+impl Shard {
+    /// Total balls this shard owns.
+    pub fn balls(&self) -> u64 {
+        self.ranges.iter().map(|&(lo, hi)| hi - lo).sum()
+    }
+}
+
+/// The full plan: one [`Shard`] per thread.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Split `counts[c]` balls of each component across `threads` shards.
+    ///
+    /// Uses per-component `⌈count/threads⌉` strides: shards are balanced
+    /// to within one stride, and the mapping is independent of the other
+    /// components (so adding a component never reshuffles existing work).
+    pub fn plan(counts: &[u64], threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shards = (0..threads)
+            .map(|t| {
+                let ranges = counts
+                    .iter()
+                    .map(|&total| {
+                        let per = total.div_ceil(threads as u64);
+                        let lo = (t as u64 * per).min(total);
+                        let hi = ((t as u64 + 1) * per).min(total);
+                        (lo, hi)
+                    })
+                    .collect();
+                Shard { index: t, ranges }
+            })
+            .collect();
+        Self { shards }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Total balls across shards (must equal the input counts' sum).
+    pub fn total_balls(&self) -> u64 {
+        self.shards.iter().map(Shard::balls).sum()
+    }
+
+    /// Largest / smallest shard ratio — load-balance diagnostic.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.shards.iter().map(Shard::balls).max().unwrap_or(0);
+        let min = self.shards.iter().map(Shard::balls).min().unwrap_or(0);
+        if min == 0 {
+            if max == 0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            max as f64 / min as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_ball_exactly_once() {
+        let counts = [1000u64, 17, 0, 999_999];
+        let plan = ShardPlan::plan(&counts, 8);
+        assert_eq!(plan.total_balls(), counts.iter().sum::<u64>());
+        // Per component, ranges tile [0, total).
+        for (c, &total) in counts.iter().enumerate() {
+            let mut covered = 0u64;
+            let mut cursor = 0u64;
+            for shard in &plan.shards {
+                let (lo, hi) = shard.ranges[c];
+                assert!(lo <= hi);
+                assert!(lo >= cursor, "ranges must be ordered");
+                cursor = hi;
+                covered += hi - lo;
+            }
+            assert_eq!(covered, total, "component {c}");
+        }
+    }
+
+    #[test]
+    fn single_thread_owns_everything() {
+        let plan = ShardPlan::plan(&[10, 20], 1);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.shards[0].ranges, vec![(0, 10), (0, 20)]);
+    }
+
+    #[test]
+    fn more_threads_than_balls() {
+        let plan = ShardPlan::plan(&[3], 8);
+        assert_eq!(plan.total_balls(), 3);
+        let owners: Vec<u64> = plan.shards.iter().map(Shard::balls).collect();
+        assert_eq!(owners.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn balanced_within_one_stride() {
+        let plan = ShardPlan::plan(&[1_000_003], 7);
+        let balls: Vec<u64> = plan.shards.iter().map(Shard::balls).collect();
+        let max = *balls.iter().max().unwrap();
+        let min = *balls.iter().min().unwrap();
+        assert!(max - min <= 1_000_003u64.div_ceil(7));
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let plan = ShardPlan::plan(&[5], 0);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.total_balls(), 5);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let plan = ShardPlan::plan(&[100], 4);
+        assert!(plan.imbalance() >= 1.0);
+        let empty = ShardPlan::plan(&[0], 4);
+        assert_eq!(empty.imbalance(), 1.0);
+    }
+}

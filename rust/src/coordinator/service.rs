@@ -1,0 +1,354 @@
+//! The graph-generation service: a leader that executes sampling jobs on
+//! a worker pool with per-job metrics.
+//!
+//! A *job* is one graph-generation request (model parameters + seed +
+//! algorithm). Jobs arrive as text lines (`key=value` tokens; see
+//! [`JobSpec::parse_line`]) so workload traces are plain files the CLI
+//! (`magbdp serve --jobs trace.txt`) and the end-to-end example replay.
+
+use std::sync::Arc;
+
+use crate::model::magm::MagmParams;
+use crate::model::params::InitiatorMatrix;
+use crate::sampler::{
+    HybridSampler, MagmBdpSampler, MagmSimpleSampler, NativeAccept, QuiltingSampler, Sampler,
+};
+use crate::util::metrics::Registry;
+use crate::util::rng::{SeedableRng, Xoshiro256pp};
+use crate::util::threadpool::ThreadPool;
+
+/// Which sampling algorithm a job requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Algorithm 2, native acceptance (default).
+    MagmBdp,
+    /// Algorithm 2, batched through the XLA artifact.
+    MagmBdpXla,
+    /// §4.2 single-proposal baseline.
+    Simple,
+    /// Yun & Vishwanathan quilting baseline.
+    Quilting,
+    /// §4.6 cost-model selection.
+    Hybrid,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "magm-bdp" | "bdp" => Some(Algo::MagmBdp),
+            "magm-bdp-xla" | "xla" => Some(Algo::MagmBdpXla),
+            "simple" => Some(Algo::Simple),
+            "quilting" => Some(Algo::Quilting),
+            "hybrid" => Some(Algo::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::MagmBdp => "magm-bdp",
+            Algo::MagmBdpXla => "magm-bdp-xla",
+            Algo::Simple => "simple",
+            Algo::Quilting => "quilting",
+            Algo::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: u64,
+    pub theta: InitiatorMatrix,
+    pub d: usize,
+    pub mu: f64,
+    pub n: u64,
+    pub seed: u64,
+    pub algo: Algo,
+    /// Keep the sampled edges in the result (memory!) or just counts.
+    pub collect_graph: bool,
+}
+
+impl JobSpec {
+    /// Parse `theta=a,b,c,d d=12 mu=0.4 n=4096 seed=7 algo=magm-bdp`.
+    /// Unknown keys are rejected; omitted keys get defaults
+    /// (`theta=Θ₁`, `n=2^d`, `seed=id`, `algo=magm-bdp`).
+    pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
+        let mut theta = InitiatorMatrix::THETA1;
+        let mut d: usize = 12;
+        let mut mu: f64 = 0.5;
+        let mut n: Option<u64> = None;
+        let mut seed: Option<u64> = None;
+        let mut algo = Algo::MagmBdp;
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("job {id}: bad token {tok:?}"))?;
+            match k {
+                "theta" => {
+                    let parts: Result<Vec<f64>, _> =
+                        v.split(',').map(|t| t.parse::<f64>()).collect();
+                    let parts = parts.map_err(|e| format!("job {id}: theta: {e}"))?;
+                    if parts.len() != 4 {
+                        return Err(format!("job {id}: theta needs 4 entries"));
+                    }
+                    theta = InitiatorMatrix::new(parts[0], parts[1], parts[2], parts[3]);
+                }
+                "d" => d = v.parse().map_err(|e| format!("job {id}: d: {e}"))?,
+                "mu" => mu = v.parse().map_err(|e| format!("job {id}: mu: {e}"))?,
+                "n" => n = Some(v.parse().map_err(|e| format!("job {id}: n: {e}"))?),
+                "seed" => seed = Some(v.parse().map_err(|e| format!("job {id}: seed: {e}"))?),
+                "algo" => {
+                    algo = Algo::parse(v).ok_or_else(|| format!("job {id}: unknown algo {v}"))?
+                }
+                _ => return Err(format!("job {id}: unknown key {k:?}")),
+            }
+        }
+        if d == 0 || d > 32 {
+            return Err(format!("job {id}: d must be in 1..=32"));
+        }
+        if !(0.0..=1.0).contains(&mu) {
+            return Err(format!("job {id}: mu must be a probability"));
+        }
+        Ok(JobSpec {
+            id,
+            theta,
+            d,
+            mu,
+            n: n.unwrap_or(1 << d),
+            seed: seed.unwrap_or(id),
+            algo,
+            collect_graph: false,
+        })
+    }
+
+    /// The MAGM this job samples from.
+    pub fn params(&self) -> MagmParams {
+        MagmParams::replicated(self.theta, self.d, self.mu, self.n)
+    }
+}
+
+/// Outcome of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub algo: &'static str,
+    pub nodes: u64,
+    /// Multi-graph edge count.
+    pub edges: u64,
+    /// Distinct-edge count.
+    pub edges_simple: u64,
+    pub proposed: u64,
+    pub wall: std::time::Duration,
+    pub edges_list: Option<crate::graph::EdgeList>,
+    pub error: Option<String>,
+}
+
+/// The service: a fixed worker pool + metrics registry.
+pub struct GenerationService {
+    pool: ThreadPool,
+    metrics: Registry,
+}
+
+impl GenerationService {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            pool: ThreadPool::new(threads),
+            metrics: Registry::new(),
+        }
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Execute all jobs (parallel across the pool), results in job order.
+    pub fn run_all(&self, specs: Vec<JobSpec>) -> Vec<JobResult> {
+        let specs = Arc::new(specs);
+        let metrics = self.metrics.clone();
+        let n = specs.len();
+        self.pool.map_indexed(n, move |i| {
+            let spec = specs[i].clone();
+            run_job(&spec, &metrics)
+        })
+    }
+
+    /// Parse a job trace (one job per non-comment line) and run it.
+    pub fn run_trace(&self, text: &str) -> Result<Vec<JobResult>, String> {
+        let mut specs = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            specs.push(JobSpec::parse_line(i as u64, line)?);
+        }
+        Ok(self.run_all(specs))
+    }
+}
+
+/// Execute one job, recording metrics.
+pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
+    let t = std::time::Instant::now();
+    let params = spec.params();
+    let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+    let assignment = params.sample_attributes(&mut rng);
+
+    let outcome: Result<(crate::graph::MultiEdgeList, u64), String> = (|| match spec.algo {
+        Algo::MagmBdp => {
+            let s = MagmBdpSampler::new(&params, &assignment);
+            let (g, proposed, _) = s.sample_counted(&mut rng);
+            Ok((g, proposed))
+        }
+        Algo::MagmBdpXla => {
+            let s = MagmBdpSampler::new(&params, &assignment);
+            let mut backend = crate::runtime::XlaAccept::new(&params, s.index())
+                .map_err(|e| format!("{e:#}"))?;
+            let batch = backend.batch_capacity();
+            let (g, proposed, _) = s.sample_batched(&mut rng, &mut backend, batch);
+            metrics.counter("service.xla_dispatches").add(backend.dispatches);
+            Ok((g, proposed))
+        }
+        Algo::Simple => {
+            let s = MagmSimpleSampler::new(&params, &assignment);
+            let (g, proposed, _) = s.sample_counted(&mut rng);
+            Ok((g, proposed))
+        }
+        Algo::Quilting => {
+            let s = QuiltingSampler::new(&params, &assignment, &mut rng);
+            let (g, proposed, _) = s.sample_counted(&mut rng);
+            Ok((g, proposed))
+        }
+        Algo::Hybrid => {
+            let s = HybridSampler::new(&params, &assignment, &mut rng);
+            let _ = NativeAccept; // hybrid always uses native acceptance
+            let g = s.sample(&mut rng);
+            let proposed = g.num_edges() as u64;
+            Ok((g, proposed))
+        }
+    })();
+
+    let wall = t.elapsed();
+    metrics.counter("service.jobs").inc();
+    metrics
+        .histogram("service.job_latency_ns")
+        .observe(wall.as_nanos() as f64);
+    match outcome {
+        Ok((graph, proposed)) => {
+            let edges = graph.num_edges() as u64;
+            metrics.counter("service.edges").add(edges);
+            let simple = graph.into_simple();
+            JobResult {
+                id: spec.id,
+                algo: spec.algo.label(),
+                nodes: spec.n,
+                edges,
+                edges_simple: simple.num_edges() as u64,
+                proposed,
+                wall,
+                edges_list: spec.collect_graph.then_some(simple),
+                error: None,
+            }
+        }
+        Err(e) => {
+            metrics.counter("service.errors").inc();
+            JobResult {
+                id: spec.id,
+                algo: spec.algo.label(),
+                nodes: spec.n,
+                edges: 0,
+                edges_simple: 0,
+                proposed: 0,
+                wall,
+                edges_list: None,
+                error: Some(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_full() {
+        let j = JobSpec::parse_line(3, "theta=0.35,0.52,0.52,0.95 d=8 mu=0.3 n=100 seed=9 algo=quilting")
+            .unwrap();
+        assert_eq!(j.theta, InitiatorMatrix::THETA2);
+        assert_eq!(j.d, 8);
+        assert_eq!(j.mu, 0.3);
+        assert_eq!(j.n, 100);
+        assert_eq!(j.seed, 9);
+        assert_eq!(j.algo, Algo::Quilting);
+    }
+
+    #[test]
+    fn parse_line_defaults() {
+        let j = JobSpec::parse_line(7, "d=6").unwrap();
+        assert_eq!(j.n, 64);
+        assert_eq!(j.seed, 7);
+        assert_eq!(j.algo, Algo::MagmBdp);
+    }
+
+    #[test]
+    fn parse_line_rejects_bad_input() {
+        assert!(JobSpec::parse_line(0, "bogus").is_err());
+        assert!(JobSpec::parse_line(0, "frob=1").is_err());
+        assert!(JobSpec::parse_line(0, "theta=1,2,3").is_err());
+        assert!(JobSpec::parse_line(0, "mu=1.5").is_err());
+        assert!(JobSpec::parse_line(0, "d=0").is_err());
+        assert!(JobSpec::parse_line(0, "algo=alien").is_err());
+    }
+
+    #[test]
+    fn service_runs_jobs_in_order() {
+        let svc = GenerationService::new(4);
+        let specs: Vec<JobSpec> = (0..6)
+            .map(|i| {
+                let mut s = JobSpec::parse_line(i, "d=6 mu=0.5").unwrap();
+                s.seed = 100 + i;
+                s
+            })
+            .collect();
+        let results = svc.run_all(specs);
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.edges > 0);
+            assert!(r.edges_simple <= r.edges);
+        }
+        assert_eq!(svc.metrics().counter("service.jobs").get(), 6);
+    }
+
+    #[test]
+    fn trace_parsing_skips_comments() {
+        let svc = GenerationService::new(2);
+        let trace = "# a comment\n\nd=5 mu=0.5 algo=simple\nd=5 mu=0.4 algo=hybrid\n";
+        let results = svc.run_trace(trace).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].algo, "simple");
+        assert_eq!(results[1].algo, "hybrid");
+    }
+
+    #[test]
+    fn collect_graph_keeps_edges() {
+        let mut spec = JobSpec::parse_line(0, "d=5 mu=0.5").unwrap();
+        spec.collect_graph = true;
+        let metrics = Registry::new();
+        let r = run_job(&spec, &metrics);
+        let edges = r.edges_list.expect("graph collected");
+        assert_eq!(edges.num_edges() as u64, r.edges_simple);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = JobSpec::parse_line(0, "d=7 mu=0.4 seed=42").unwrap();
+        let m = Registry::new();
+        let a = run_job(&spec, &m);
+        let b = run_job(&spec, &m);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.edges_simple, b.edges_simple);
+    }
+}

@@ -1,0 +1,185 @@
+//! Compressed sparse row adjacency — the analysis-side graph format.
+
+/// A simple directed graph in CSR form (out-adjacency).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: u64,
+    /// Row offsets, length n+1.
+    offsets: Vec<usize>,
+    /// Column indices (targets), sorted within each row.
+    targets: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from (deduplicated or not) edge pairs; duplicates collapse.
+    pub fn from_edges(n: u64, mut edges: Vec<(u32, u32)>) -> Self {
+        assert!(n <= u32::MAX as u64 + 1, "node ids must fit u32");
+        edges.sort_unstable();
+        edges.dedup();
+        let mut offsets = vec![0usize; n as usize + 1];
+        for &(s, _) in &edges {
+            offsets[s as usize + 1] += 1;
+        }
+        for i in 1..offsets.len() {
+            offsets[i] += offsets[i - 1];
+        }
+        let targets = edges.into_iter().map(|(_, t)| t).collect();
+        Self { n, offsets, targets }
+    }
+
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Number of (unique) directed edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-neighbors of `v`, sorted ascending.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.targets[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: u32) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// In-degrees of all nodes (one O(m) pass).
+    pub fn in_degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.n as usize];
+        for &t in &self.targets {
+            deg[t as usize] += 1;
+        }
+        deg
+    }
+
+    /// Edge membership test — O(log deg).
+    pub fn has_edge(&self, s: u32, t: u32) -> bool {
+        self.neighbors(s).binary_search(&t).is_ok()
+    }
+
+    /// Iterate all edges in (src, dst) order.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n as u32).flat_map(move |s| self.neighbors(s).iter().map(move |&t| (s, t)))
+    }
+
+    /// Number of directed triangles `i→j→k→i` (node-iterator algorithm;
+    /// intended for the small validation graphs).
+    pub fn count_triangles(&self) -> usize {
+        let mut count = 0usize;
+        for i in 0..self.n as u32 {
+            for &j in self.neighbors(i) {
+                for &k in self.neighbors(j) {
+                    if self.has_edge(k, i) {
+                        count += 1;
+                    }
+                }
+            }
+        }
+        count / 1 // each directed 3-cycle counted once per starting vertex rotation
+    }
+
+    /// Weakly connected components: (component id per node, #components).
+    pub fn weakly_connected_components(&self) -> (Vec<u32>, usize) {
+        let n = self.n as usize;
+        // Union-find over undirected closure.
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        fn find(parent: &mut [u32], mut x: u32) -> u32 {
+            while parent[x as usize] != x {
+                parent[x as usize] = parent[parent[x as usize] as usize];
+                x = parent[x as usize];
+            }
+            x
+        }
+        for (s, t) in self.edges() {
+            let (a, b) = (find(&mut parent, s), find(&mut parent, t));
+            if a != b {
+                parent[a as usize] = b;
+            }
+        }
+        let mut ids = vec![u32::MAX; n];
+        let mut next = 0u32;
+        for v in 0..n as u32 {
+            let root = find(&mut parent, v);
+            if ids[root as usize] == u32::MAX {
+                ids[root as usize] = next;
+                next += 1;
+            }
+            ids[v as usize] = ids[root as usize];
+        }
+        (ids, next as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0→1, 0→2, 1→3, 2→3
+        Graph::from_edges(4, vec![(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = diamond();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(3), 0);
+        assert!(g.has_edge(1, 3));
+        assert!(!g.has_edge(3, 1));
+    }
+
+    #[test]
+    fn in_degrees_count() {
+        let g = diamond();
+        assert_eq!(g.in_degrees(), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn duplicate_edges_collapse() {
+        let g = Graph::from_edges(2, vec![(0, 1), (0, 1), (0, 1)]);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let g = diamond();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn triangles_directed() {
+        // 3-cycle: 0→1→2→0 gives 3 rotations.
+        let g = Graph::from_edges(3, vec![(0, 1), (1, 2), (2, 0)]);
+        assert_eq!(g.count_triangles(), 3);
+        assert_eq!(diamond().count_triangles(), 0);
+    }
+
+    #[test]
+    fn wcc_components() {
+        let g = Graph::from_edges(5, vec![(0, 1), (1, 2), (3, 4)]);
+        let (ids, count) = g.weakly_connected_components();
+        assert_eq!(count, 2);
+        assert_eq!(ids[0], ids[1]);
+        assert_eq!(ids[1], ids[2]);
+        assert_eq!(ids[3], ids[4]);
+        assert_ne!(ids[0], ids[3]);
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = Graph::from_edges(3, vec![]);
+        assert_eq!(g.num_edges(), 0);
+        let (_, count) = g.weakly_connected_components();
+        assert_eq!(count, 3);
+    }
+}

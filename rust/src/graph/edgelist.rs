@@ -1,0 +1,177 @@
+//! Edge lists: the multi-graph sampler output and its simple-graph form.
+
+/// A directed multi-graph as a flat edge list (duplicates allowed).
+#[derive(Clone, Debug, Default)]
+pub struct MultiEdgeList {
+    n: u64,
+    edges: Vec<(u32, u32)>,
+}
+
+impl MultiEdgeList {
+    pub fn new(n: u64) -> Self {
+        assert!(n <= u32::MAX as u64 + 1, "node ids must fit u32");
+        Self { n, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(n: u64, cap: usize) -> Self {
+        assert!(n <= u32::MAX as u64 + 1, "node ids must fit u32");
+        Self {
+            n,
+            edges: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Total edge multiplicity `Σ A_ij`.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    pub fn push(&mut self, src: u32, dst: u32) {
+        debug_assert!((src as u64) < self.n && (dst as u64) < self.n);
+        self.edges.push((src, dst));
+    }
+
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Append all edges of `other` (same node universe).
+    pub fn merge(&mut self, other: MultiEdgeList) {
+        assert_eq!(self.n, other.n, "node-universe mismatch");
+        self.edges.extend(other.edges);
+    }
+
+    /// Multiplicity of a specific pair — O(m), for tests.
+    pub fn multiplicity(&self, src: u32, dst: u32) -> usize {
+        self.edges.iter().filter(|&&e| e == (src, dst)).count()
+    }
+
+    /// Collapse duplicate pairs, producing a simple directed graph
+    /// (this is the "multi-graph → sample space of the Bernoulli model"
+    /// step discussed in Section 3).
+    pub fn into_simple(mut self) -> EdgeList {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        EdgeList {
+            n: self.n,
+            edges: self.edges,
+        }
+    }
+
+    /// Convenience alias used in doc examples.
+    pub fn into_simple_graph(self) -> crate::graph::Graph {
+        let n = self.n;
+        crate::graph::Graph::from_edges(n, self.into_simple().edges)
+    }
+}
+
+/// A simple directed graph as a deduplicated, sorted edge list.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EdgeList {
+    n: u64,
+    edges: Vec<(u32, u32)>,
+}
+
+impl EdgeList {
+    /// Build from raw pairs (sorts + dedups).
+    pub fn from_pairs(n: u64, mut edges: Vec<(u32, u32)>) -> Self {
+        assert!(n <= u32::MAX as u64 + 1, "node ids must fit u32");
+        debug_assert!(edges.iter().all(|&(s, t)| (s as u64) < n && (t as u64) < n));
+        edges.sort_unstable();
+        edges.dedup();
+        Self { n, edges }
+    }
+
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    #[inline]
+    pub fn into_edges(self) -> Vec<(u32, u32)> {
+        self.edges
+    }
+
+    /// Membership test — O(log m).
+    pub fn contains(&self, src: u32, dst: u32) -> bool {
+        self.edges.binary_search(&(src, dst)).is_ok()
+    }
+
+    /// Edge density `m / n²`.
+    pub fn density(&self) -> f64 {
+        self.edges.len() as f64 / (self.n as f64 * self.n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_to_simple_dedups() {
+        let mut m = MultiEdgeList::new(4);
+        m.push(0, 1);
+        m.push(0, 1);
+        m.push(2, 3);
+        m.push(0, 1);
+        assert_eq!(m.num_edges(), 4);
+        assert_eq!(m.multiplicity(0, 1), 3);
+        let s = m.into_simple();
+        assert_eq!(s.num_edges(), 2);
+        assert!(s.contains(0, 1));
+        assert!(s.contains(2, 3));
+        assert!(!s.contains(1, 0));
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut a = MultiEdgeList::new(3);
+        a.push(0, 1);
+        let mut b = MultiEdgeList::new(3);
+        b.push(1, 2);
+        b.push(0, 1);
+        a.merge(b);
+        assert_eq!(a.num_edges(), 3);
+        assert_eq!(a.multiplicity(0, 1), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn merge_rejects_different_n() {
+        let mut a = MultiEdgeList::new(3);
+        a.merge(MultiEdgeList::new(4));
+    }
+
+    #[test]
+    fn from_pairs_sorts_and_dedups() {
+        let e = EdgeList::from_pairs(5, vec![(3, 1), (0, 2), (3, 1), (0, 0)]);
+        assert_eq!(e.edges(), &[(0, 0), (0, 2), (3, 1)]);
+        assert!((e.density() - 3.0 / 25.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let e = EdgeList::from_pairs(10, vec![]);
+        assert_eq!(e.num_edges(), 0);
+        assert_eq!(e.density(), 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Graph I/O: TSV edge lists and dense-matrix text dumps (for the
+//! Figure 1–3 visualisations).
+
+use std::io::{BufRead, BufWriter, Write};
+
+use super::edgelist::EdgeList;
+
+/// I/O error with context.
+#[derive(Debug)]
+pub struct IoError(pub String);
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for IoError {}
+
+/// Write `src\tdst` lines with a `# nodes=<n>` header.
+pub fn write_tsv(path: &str, edges: &EdgeList) -> Result<(), IoError> {
+    let f = std::fs::File::create(path).map_err(|e| IoError(format!("create {path}: {e}")))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# nodes={}", edges.n()).map_err(|e| IoError(e.to_string()))?;
+    for &(s, t) in edges.edges() {
+        writeln!(w, "{s}\t{t}").map_err(|e| IoError(e.to_string()))?;
+    }
+    Ok(())
+}
+
+/// Read the format written by [`write_tsv`].
+pub fn read_tsv(path: &str) -> Result<EdgeList, IoError> {
+    let f = std::fs::File::open(path).map_err(|e| IoError(format!("open {path}: {e}")))?;
+    let reader = std::io::BufReader::new(f);
+    let mut n: Option<u64> = None;
+    let mut pairs = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| IoError(e.to_string()))?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("nodes=") {
+                n = Some(
+                    v.parse()
+                        .map_err(|e| IoError(format!("line {}: bad node count: {e}", lineno + 1)))?,
+                );
+            }
+            continue;
+        }
+        let (s, t) = line
+            .split_once('\t')
+            .or_else(|| line.split_once(' '))
+            .ok_or_else(|| IoError(format!("line {}: expected src<TAB>dst", lineno + 1)))?;
+        let s: u32 = s
+            .trim()
+            .parse()
+            .map_err(|e| IoError(format!("line {}: bad src: {e}", lineno + 1)))?;
+        let t: u32 = t
+            .trim()
+            .parse()
+            .map_err(|e| IoError(format!("line {}: bad dst: {e}", lineno + 1)))?;
+        max_id = max_id.max(s).max(t);
+        pairs.push((s, t));
+    }
+    let n = n.unwrap_or(max_id as u64 + 1);
+    Ok(EdgeList::from_pairs(n, pairs))
+}
+
+/// Render a dense probability matrix as a text heatmap (the Figure 1–3
+/// illustrations). `levels` maps magnitude to the glyph ramp ` .:-=+*#%@`.
+pub fn render_heatmap(matrix: &[Vec<f64>]) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let max = matrix
+        .iter()
+        .flatten()
+        .cloned()
+        .fold(0.0f64, f64::max)
+        .max(1e-300);
+    let mut out = String::new();
+    for row in matrix {
+        for &v in row {
+            let idx = ((v / max) * (RAMP.len() - 1) as f64).round() as usize;
+            let ch = RAMP[idx.min(RAMP.len() - 1)] as char;
+            out.push(ch);
+            out.push(ch); // double width for aspect ratio
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a dense matrix as CSV (row per line).
+pub fn write_matrix_csv(path: &str, matrix: &[Vec<f64>]) -> Result<(), IoError> {
+    let mut body = String::new();
+    for row in matrix {
+        body.push_str(
+            &row.iter()
+                .map(|v| format!("{v:.6e}"))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        body.push('\n');
+    }
+    std::fs::write(path, body).map_err(|e| IoError(format!("write {path}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("magbdp-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let path = tmp("roundtrip.tsv");
+        let edges = EdgeList::from_pairs(6, vec![(0, 1), (4, 5), (2, 2)]);
+        write_tsv(&path, &edges).unwrap();
+        let back = read_tsv(&path).unwrap();
+        assert_eq!(back, edges);
+    }
+
+    #[test]
+    fn read_infers_n_without_header() {
+        let path = tmp("no-header.tsv");
+        std::fs::write(&path, "0\t3\n2\t1\n").unwrap();
+        let e = read_tsv(&path).unwrap();
+        assert_eq!(e.n(), 4);
+        assert_eq!(e.num_edges(), 2);
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let path = tmp("garbage.tsv");
+        std::fs::write(&path, "zero one\n").unwrap();
+        assert!(read_tsv(&path).is_err());
+    }
+
+    #[test]
+    fn heatmap_shape_and_ramp() {
+        let m = vec![vec![0.0, 0.5], vec![1.0, 0.25]];
+        let h = render_heatmap(&m);
+        let lines: Vec<&str> = h.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].len(), 4); // double-width glyphs
+        assert!(lines[1].starts_with("@@")); // max value uses densest glyph
+        assert!(lines[0].starts_with("  ")); // zero uses blank
+    }
+
+    #[test]
+    fn matrix_csv_written() {
+        let path = tmp("m.csv");
+        write_matrix_csv(&path, &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("1.000000e0") || text.contains("1e0") || text.contains("1.000000"));
+    }
+}

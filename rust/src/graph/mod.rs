@@ -1,0 +1,14 @@
+//! Graph data structures, statistics and I/O.
+//!
+//! Samplers emit a [`MultiEdgeList`] (the BDP's natural output — Theorem 2
+//! is a statement about multi-graphs); it collapses to an [`EdgeList`] /
+//! [`Graph`] (CSR) for analysis and export.
+
+pub mod csr;
+pub mod edgelist;
+pub mod io;
+pub mod stats;
+
+pub use csr::Graph;
+pub use edgelist::{EdgeList, MultiEdgeList};
+pub use stats::DegreeStats;

@@ -1,0 +1,176 @@
+//! Graph statistics used for validation and the examples' reports.
+
+use super::csr::Graph;
+
+/// Degree distribution summary.
+#[derive(Clone, Debug)]
+pub struct DegreeStats {
+    /// Histogram: `hist[k]` = number of nodes with degree `k`.
+    pub hist: Vec<usize>,
+    pub mean: f64,
+    pub max: usize,
+}
+
+impl DegreeStats {
+    fn from_degrees(degrees: impl Iterator<Item = usize>, n: usize) -> Self {
+        let mut hist: Vec<usize> = Vec::new();
+        let mut total = 0usize;
+        let mut max = 0usize;
+        for d in degrees {
+            if d >= hist.len() {
+                hist.resize(d + 1, 0);
+            }
+            hist[d] += 1;
+            total += d;
+            max = max.max(d);
+        }
+        DegreeStats {
+            hist,
+            mean: if n == 0 { 0.0 } else { total as f64 / n as f64 },
+            max,
+        }
+    }
+
+    /// Out-degree statistics.
+    pub fn out_degrees(g: &Graph) -> Self {
+        Self::from_degrees((0..g.n() as u32).map(|v| g.out_degree(v)), g.n() as usize)
+    }
+
+    /// In-degree statistics.
+    pub fn in_degrees(g: &Graph) -> Self {
+        let deg = g.in_degrees();
+        let n = deg.len();
+        Self::from_degrees(deg.into_iter(), n)
+    }
+
+    /// Complementary CDF `P[deg ≥ k]` — the standard log-log degree plot.
+    pub fn ccdf(&self) -> Vec<f64> {
+        let n: usize = self.hist.iter().sum();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(self.hist.len());
+        let mut tail = n as f64;
+        for &h in &self.hist {
+            out.push(tail / n as f64);
+            tail -= h as f64;
+        }
+        out
+    }
+
+    /// Total-variation distance between two degree histograms
+    /// (validation metric: BDP sample vs exact sample).
+    pub fn tv_distance(&self, other: &DegreeStats) -> f64 {
+        let na: usize = self.hist.iter().sum();
+        let nb: usize = other.hist.iter().sum();
+        if na == 0 || nb == 0 {
+            return if na == nb { 0.0 } else { 1.0 };
+        }
+        let len = self.hist.len().max(other.hist.len());
+        let mut tv = 0.0;
+        for k in 0..len {
+            let pa = *self.hist.get(k).unwrap_or(&0) as f64 / na as f64;
+            let pb = *other.hist.get(k).unwrap_or(&0) as f64 / nb as f64;
+            tv += (pa - pb).abs();
+        }
+        tv / 2.0
+    }
+}
+
+/// Global clustering coefficient of the undirected closure:
+/// `3·triangles / open wedges` on small graphs (validation only).
+pub fn global_clustering(g: &Graph) -> f64 {
+    // Undirected adjacency via sorted union of in/out neighborhoods.
+    let n = g.n() as usize;
+    let mut und: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (s, t) in g.edges() {
+        if s != t {
+            und[s as usize].push(t);
+            und[t as usize].push(s);
+        }
+    }
+    for nb in &mut und {
+        nb.sort_unstable();
+        nb.dedup();
+    }
+    let mut tri2 = 0usize; // 2 * triangles per wedge-closure count
+    let mut wedges = 0usize;
+    for v in 0..n {
+        let nb = &und[v];
+        let k = nb.len();
+        wedges += k * k.saturating_sub(1) / 2;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if und[nb[i] as usize].binary_search(&nb[j]).is_ok() {
+                    tri2 += 1;
+                }
+            }
+        }
+    }
+    if wedges == 0 {
+        0.0
+    } else {
+        tri2 as f64 / wedges as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_degree_histogram() {
+        let g = Graph::from_edges(4, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let s = DegreeStats::out_degrees(&g);
+        // degrees: 2,1,1,0 → hist [1,2,1]
+        assert_eq!(s.hist, vec![1, 2, 1]);
+        assert_eq!(s.mean, 1.0);
+        assert_eq!(s.max, 2);
+    }
+
+    #[test]
+    fn ccdf_monotone_from_one() {
+        let g = Graph::from_edges(4, vec![(0, 1), (0, 2), (1, 3)]);
+        let s = DegreeStats::out_degrees(&g);
+        let c = s.ccdf();
+        assert!((c[0] - 1.0).abs() < 1e-12);
+        for w in c.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn tv_distance_zero_for_identical() {
+        let g = Graph::from_edges(4, vec![(0, 1), (1, 2)]);
+        let a = DegreeStats::out_degrees(&g);
+        let b = DegreeStats::out_degrees(&g);
+        assert_eq!(a.tv_distance(&b), 0.0);
+    }
+
+    #[test]
+    fn tv_distance_disjoint_is_one() {
+        let a = DegreeStats {
+            hist: vec![10, 0],
+            mean: 0.0,
+            max: 0,
+        };
+        let b = DegreeStats {
+            hist: vec![0, 10],
+            mean: 1.0,
+            max: 1,
+        };
+        assert!((a.tv_distance(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustering_triangle_is_one() {
+        let g = Graph::from_edges(3, vec![(0, 1), (1, 2), (2, 0)]);
+        assert!((global_clustering(&g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustering_star_is_zero() {
+        let g = Graph::from_edges(4, vec![(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(global_clustering(&g), 0.0);
+    }
+}

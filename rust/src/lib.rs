@@ -1,0 +1,63 @@
+//! # magbdp — Efficiently Sampling Multiplicative Attribute Graphs
+//!
+//! A production-quality reproduction of *"Efficiently Sampling Multiplicative
+//! Attribute Graphs Using a Ball-Dropping Process"* (ICML 2012): a library
+//! for sampling graphs from the Kronecker Product Graph Model (KPGM) and the
+//! Multiplicative Attribute Graph Model (MAGM), built around the paper's
+//! accept–reject ball-dropping sampler (Algorithm 2).
+//!
+//! ## Layout
+//!
+//! * [`util`] — zero-dependency substrates: PRNGs and samplers for the
+//!   Poisson/Binomial/categorical distributions, CLI/config parsing,
+//!   thread pool, metrics, statistics, a property-testing mini-framework
+//!   and a benchmarking harness.
+//! * [`model`] — the two graph models: initiator parameters, the KPGM
+//!   edge-probability matrix `Γ`, MAGM attributes/colors, and the expected
+//!   edge counts `e_K`, `e_M`, `e_KM`, `e_MK` (Eqs. 5, 8, 23, 24).
+//! * [`graph`] — edge lists, CSR adjacency, statistics and I/O.
+//! * [`sampler`] — the samplers: exact `Θ(n²)` baselines, the
+//!   ball-dropping process (Algorithm 1), the paper's MAGM sampler
+//!   (Algorithm 2), the §4.2 simple-proposal ablation, the quilting
+//!   baseline of Yun & Vishwanathan (2012), and the §4.6 hybrid.
+//! * [`coordinator`] — parallel shard scheduler, proposal batcher and the
+//!   graph-generation service.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/
+//!   Pallas artifacts (`artifacts/*.hlo.txt`) and evaluates acceptance
+//!   probabilities on the XLA backend.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use magbdp::prelude::*;
+//!
+//! // Θ₁ from the paper's evaluation, d = 14 levels, μ = 0.4.
+//! let params = MagmParams::replicated(InitiatorMatrix::THETA1, 14, 0.4, 1 << 14);
+//! let mut rng = Xoshiro256pp::seed_from_u64(42);
+//! let assignment = params.sample_attributes(&mut rng);
+//! let graph = MagmBdpSampler::new(&params, &assignment)
+//!     .sample(&mut rng)
+//!     .into_simple_graph();
+//! println!("sampled {} edges", graph.num_edges());
+//! ```
+
+pub mod coordinator;
+pub mod graph;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::graph::{EdgeList, Graph, MultiEdgeList};
+    pub use crate::model::{
+        AttributeAssignment, ColorIndex, EdgeStats, InitiatorMatrix, KpgmParams, MagmParams,
+        ParamStack,
+    };
+    pub use crate::sampler::{
+        BdpSampler, HybridSampler, KpgmBdpSampler, MagmBdpSampler, MagmSimpleSampler,
+        NaiveKpgmSampler, NaiveMagmSampler, QuiltingSampler, SampleReport, Sampler,
+    };
+    pub use crate::util::rng::{Rng, SeedableRng, SplitMix64, Xoshiro256pp};
+}

@@ -1,0 +1,531 @@
+//! `magbdp` — CLI for the MAGM ball-dropping sampler.
+//!
+//! Subcommands:
+//! * `sample`          — sample one MAGM graph, print stats / write TSV
+//! * `expected`        — e_K/e_M/e_KM/e_MK, cost model, hybrid choice (§4.6)
+//! * `viz`             — regenerate the Figure 1/2/3 matrices (heatmap + CSV)
+//! * `serve`           — run a job-trace file through the generation service
+//! * `check-artifacts` — compile all AOT artifacts, verify native parity
+
+use magbdp::coordinator::GenerationService;
+use magbdp::graph::io;
+use magbdp::graph::stats::DegreeStats;
+use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
+use magbdp::sampler::proposal::{Component, ProposalSet};
+use magbdp::sampler::{CostModel, HybridSampler, Sampler};
+use magbdp::util::cli::{parse_f64_list, Args, CliError, Command};
+use magbdp::util::config::Config;
+use magbdp::util::logging;
+use magbdp::util::rng::{SeedableRng, Xoshiro256pp};
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "magbdp <sample|expected|viz|serve|check-artifacts> [options]\n\
+     Run `magbdp <subcommand> --help` for details."
+        .to_string()
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let Some(sub) = argv.first() else {
+        return Err(usage());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "sample" => cmd_sample(rest),
+        "expected" => cmd_expected(rest),
+        "viz" => cmd_viz(rest),
+        "serve" => cmd_serve(rest),
+        "check-artifacts" => cmd_check_artifacts(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}\n{}", usage())),
+    }
+}
+
+fn parse_theta(args: &Args) -> Result<InitiatorMatrix, CliError> {
+    match args.str("theta")? {
+        "theta1" => Ok(InitiatorMatrix::THETA1),
+        "theta2" => Ok(InitiatorMatrix::THETA2),
+        raw => {
+            let v = parse_f64_list(raw)?;
+            if v.len() != 4 {
+                return Err(CliError("theta needs 4 comma-separated entries".into()));
+            }
+            Ok(InitiatorMatrix::new(v[0], v[1], v[2], v[3]))
+        }
+    }
+}
+
+fn parse_or_help(cmd: &Command, tokens: &[String]) -> Result<Option<Args>, String> {
+    if tokens.iter().any(|t| t == "--help" || t == "-h") {
+        println!("{}", cmd.help());
+        return Ok(None);
+    }
+    cmd.parse(tokens).map(Some).map_err(|e| e.to_string())
+}
+
+/// Build a (possibly heterogeneous, per-level) MAGM from a config file:
+///
+/// ```text
+/// [model]
+/// d = 3
+/// n = 4096            # optional, default 2^d
+/// theta = 0.15, 0.7, 0.7, 0.85   # default for all levels
+/// mu = 0.5                       # default for all levels
+/// [level0]
+/// theta = 0.35, 0.52, 0.52, 0.95 # per-level override (generalised Eq. 3)
+/// mu = 0.3
+/// ```
+fn params_from_config(path: &str) -> Result<MagmParams, String> {
+    let cfg = Config::load(path).map_err(|e| e.to_string())?;
+    let d: usize = cfg
+        .get_or("model.d", 0usize)
+        .map_err(|e| e.to_string())?;
+    if d == 0 || d > 32 {
+        return Err("config: model.d must be in 1..=32".into());
+    }
+    let default_theta = match cfg.get("model.theta") {
+        Some(_) => {
+            let v = cfg.f64_list("model.theta").map_err(|e| e.to_string())?;
+            if v.len() != 4 {
+                return Err("config: model.theta needs 4 entries".into());
+            }
+            InitiatorMatrix::new(v[0], v[1], v[2], v[3])
+        }
+        None => InitiatorMatrix::THETA1,
+    };
+    let default_mu: f64 = cfg.get_or("model.mu", 0.5).map_err(|e| e.to_string())?;
+    let mut thetas = Vec::with_capacity(d);
+    let mut mus = Vec::with_capacity(d);
+    for k in 0..d {
+        let theta = match cfg.get(&format!("level{k}.theta")) {
+            Some(_) => {
+                let v = cfg
+                    .f64_list(&format!("level{k}.theta"))
+                    .map_err(|e| e.to_string())?;
+                if v.len() != 4 {
+                    return Err(format!("config: level{k}.theta needs 4 entries"));
+                }
+                InitiatorMatrix::new(v[0], v[1], v[2], v[3])
+            }
+            None => default_theta,
+        };
+        thetas.push(theta);
+        mus.push(
+            cfg.get_or(&format!("level{k}.mu"), default_mu)
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    let n: u64 = cfg
+        .get_or("model.n", 1u64 << d)
+        .map_err(|e| e.to_string())?;
+    Ok(MagmParams::new(
+        magbdp::model::ParamStack::new(thetas, mus),
+        n,
+    ))
+}
+
+// ------------------------------------------------------------------ sample
+
+fn cmd_sample(tokens: &[String]) -> Result<(), String> {
+    let cmd = Command::new("sample", "sample one graph from a MAGM")
+        .opt("config", "model config file (overrides theta/d/mu/n)", None)
+        .opt("theta", "theta1|theta2|t00,t01,t10,t11", Some("theta1"))
+        .opt("d", "attribute levels", Some("12"))
+        .opt("mu", "attribute probability", Some("0.5"))
+        .opt("n", "nodes (default 2^d)", None)
+        .opt("seed", "RNG seed", Some("42"))
+        .opt("algo", "magm-bdp|simple|quilting|hybrid|magm-bdp-xla", Some("magm-bdp"))
+        .opt("threads", "parallel shards (magm-bdp only)", Some("1"))
+        .opt("out", "write edge list TSV here", None)
+        .flag("degrees", "print the out-degree histogram head");
+    let Some(args) = parse_or_help(&cmd, tokens)? else {
+        return Ok(());
+    };
+    let seed: u64 = args.u64("seed").map_err(|e| e.to_string())?;
+    let threads: usize = args.usize("threads").map_err(|e| e.to_string())?;
+    let algo = args.str("algo").map_err(|e| e.to_string())?.to_string();
+
+    let params = match args.get("config") {
+        Some(path) => params_from_config(path)?,
+        None => {
+            let theta = parse_theta(&args).map_err(|e| e.to_string())?;
+            let d: usize = args.parse_as("d").map_err(|e| e.to_string())?;
+            let mu: f64 = args.f64("mu").map_err(|e| e.to_string())?;
+            let n: u64 = match args.get("n") {
+                Some(_) => args.u64("n").map_err(|e| e.to_string())?,
+                None => 1u64 << d,
+            };
+            MagmParams::replicated(theta, d, mu, n)
+        }
+    };
+    let (n, d) = (params.n(), params.d());
+    let mu = params.stack().mu(0);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let assignment = params.sample_attributes(&mut rng);
+
+    let t = std::time::Instant::now();
+    let (name, graph, proposed): (&str, magbdp::graph::MultiEdgeList, u64) = match algo.as_str() {
+        "magm-bdp" => {
+            let s = magbdp::sampler::MagmBdpSampler::new(&params, &assignment);
+            if threads > 1 {
+                (s.name(), s.sample_parallel(seed, threads), 0)
+            } else {
+                let (g, p, _) = s.sample_counted(&mut rng);
+                (s.name(), g, p)
+            }
+        }
+        "magm-bdp-xla" => {
+            let s = magbdp::sampler::MagmBdpSampler::new(&params, &assignment);
+            let mut backend = magbdp::runtime::XlaAccept::new(&params, s.index())
+                .map_err(|e| format!("{e:#}"))?;
+            let batch = backend.batch_capacity();
+            let (g, p, _) = s.sample_batched(&mut rng, &mut backend, batch);
+            ("magm-bdp-xla", g, p)
+        }
+        "simple" => {
+            let s = magbdp::sampler::MagmSimpleSampler::new(&params, &assignment);
+            let (g, p, _) = s.sample_counted(&mut rng);
+            (s.name(), g, p)
+        }
+        "quilting" => {
+            let s = magbdp::sampler::QuiltingSampler::new(&params, &assignment, &mut rng);
+            let (g, p, _) = s.sample_counted(&mut rng);
+            (s.name(), g, p)
+        }
+        "hybrid" => {
+            let s = HybridSampler::new(&params, &assignment, &mut rng);
+            let g = s.sample(&mut rng);
+            println!("hybrid choice: {}", s.choice().label());
+            ("hybrid", g, 0)
+        }
+        other => return Err(format!("unknown algo {other:?}")),
+    };
+    let wall = t.elapsed();
+
+    let multi_edges = graph.num_edges();
+    let simple = graph.into_simple();
+    println!(
+        "sampler={name} n={n} d={d} mu={mu} seed={seed}\n\
+         multi-edges={multi_edges} simple-edges={} proposed={proposed} wall={:.3}s",
+        simple.num_edges(),
+        wall.as_secs_f64()
+    );
+    if args.flag("degrees") {
+        let g = magbdp::graph::Graph::from_edges(simple.n(), simple.edges().to_vec());
+        let stats = DegreeStats::out_degrees(&g);
+        println!("mean out-degree {:.3}, max {}", stats.mean, stats.max);
+        for (k, &count) in stats.hist.iter().take(16).enumerate() {
+            println!("  deg {k:>3}: {count}");
+        }
+    }
+    if let Some(path) = args.get("out") {
+        io::write_tsv(path, &simple).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- expected
+
+fn cmd_expected(tokens: &[String]) -> Result<(), String> {
+    let cmd = Command::new("expected", "edge-count statistics + §4.6 cost model")
+        .opt("theta", "theta1|theta2|t00,t01,t10,t11", Some("theta1"))
+        .opt("d", "attribute levels", Some("12"))
+        .opt("mu", "attribute probability", Some("0.5"))
+        .opt("n", "nodes (default 2^d)", None)
+        .opt("seed", "seed for the attribute realisation", Some("42"))
+        .flag("xla", "cross-check e-stats against the edge_stats artifact");
+    let Some(args) = parse_or_help(&cmd, tokens)? else {
+        return Ok(());
+    };
+    let theta = parse_theta(&args).map_err(|e| e.to_string())?;
+    let d: usize = args.parse_as("d").map_err(|e| e.to_string())?;
+    let mu: f64 = args.f64("mu").map_err(|e| e.to_string())?;
+    let n: u64 = match args.get("n") {
+        Some(_) => args.u64("n").map_err(|e| e.to_string())?,
+        None => 1u64 << d,
+    };
+    let seed: u64 = args.u64("seed").map_err(|e| e.to_string())?;
+
+    let params = MagmParams::replicated(theta, d, mu, n);
+    let stats = params.edge_stats();
+    println!(
+        "e_K  = {:>14.3}\ne_M  = {:>14.3}\ne_KM = {:>14.3}\ne_MK = {:>14.3}\nsandwich(Eq.25) = {}",
+        stats.e_k,
+        stats.e_m,
+        stats.e_km,
+        stats.e_mk,
+        stats.satisfies_sandwich(1e-9)
+    );
+    if args.flag("xla") {
+        let rt = magbdp::runtime::XlaRuntime::global().map_err(|e| format!("{e:#}"))?;
+        let v = rt.edge_stats(&params).map_err(|e| format!("{e:#}"))?;
+        println!(
+            "artifact: e_K={:.3} e_M={:.3} e_KM={:.3} e_MK={:.3} (platform {})",
+            v[0],
+            v[1],
+            v[2],
+            v[3],
+            rt.platform()
+        );
+    }
+
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let assignment = params.sample_attributes(&mut rng);
+    let index = ColorIndex::build(&params, &assignment);
+    println!(
+        "realisation: occupied-colors={} m_F={:.3} m_I={} m_max={}",
+        index.occupied_colors(),
+        index.m_f(),
+        index.m_i(),
+        index.m_max()
+    );
+    let mut cm = CostModel::new();
+    let est = cm.estimate(&params, &index);
+    let spu = cm.calibrate();
+    println!(
+        "work (ball·level units):\n  magm-bdp  {:>14.0}  (~{:.3}s)\n  simple    {:>14.0}  (~{:.3}s)\n  quilting  {:>14.0}  (~{:.3}s)\n  naive     {:>14.0}  (~{:.3}s)",
+        est.magm_bdp,
+        est.magm_bdp * spu,
+        est.simple,
+        est.simple * spu,
+        est.quilting,
+        est.quilting * spu,
+        est.naive,
+        est.naive * spu,
+    );
+    println!(
+        "hybrid choice: {}",
+        HybridSampler::choose(&params, &index).label()
+    );
+    Ok(())
+}
+
+// --------------------------------------------------------------------- viz
+
+fn cmd_viz(tokens: &[String]) -> Result<(), String> {
+    let cmd = Command::new("viz", "regenerate the Figure 1/2/3 matrices")
+        .opt("figure", "fig1|fig2|fig3", Some("fig1"))
+        .opt("out-dir", "CSV output directory", Some("bench_out"))
+        .flag("no-xla", "fig1: compute Γ natively instead of via artifact");
+    let Some(args) = parse_or_help(&cmd, tokens)? else {
+        return Ok(());
+    };
+    let fig = args.str("figure").map_err(|e| e.to_string())?.to_string();
+    let out_dir = args.str("out-dir").map_err(|e| e.to_string())?.to_string();
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+
+    match fig.as_str() {
+        "fig1" => {
+            // Γ for Θ=(0.4,0.7;0.7,0.9), d=3 — the paper's Figure 1(a).
+            let stack = magbdp::model::ParamStack::replicated(InitiatorMatrix::FIG1, 3, 0.5);
+            let matrix: Vec<Vec<f64>> = if args.flag("no-xla") {
+                (0..8)
+                    .map(|i| (0..8).map(|j| stack.kron_entry(i, j)).collect())
+                    .collect()
+            } else {
+                let rt = magbdp::runtime::XlaRuntime::global().map_err(|e| format!("{e:#}"))?;
+                let tile = rt.gamma_tile(&stack, 0, 0).map_err(|e| format!("{e:#}"))?;
+                tile.into_iter().take(8).map(|r| r[..8].to_vec()).collect()
+            };
+            println!(
+                "Figure 1(a): Γ, Θ=(0.4,0.7;0.7,0.9), d=3\n{}",
+                io::render_heatmap(&matrix)
+            );
+            io::write_matrix_csv(&format!("{out_dir}/fig1_gamma.csv"), &matrix)
+                .map_err(|e| e.to_string())?;
+            println!("wrote {out_dir}/fig1_gamma.csv");
+        }
+        "fig2" | "fig3" => {
+            // Θ=(0.7,0.85;0.85,0.9), d=3, μ=0.7 (Figures 2 and 3).
+            let d = 3usize;
+            let n = 1u64 << d;
+            let params = MagmParams::replicated(InitiatorMatrix::FIG2, d, 0.7, n);
+            let mut rng = Xoshiro256pp::seed_from_u64(2012);
+            let assignment = params.sample_attributes(&mut rng);
+            let index = ColorIndex::build(&params, &assignment);
+            let prop = ProposalSet::build(&params, &index);
+            let nc = 1u64 << d;
+            let full = |f: &dyn Fn(u64, u64) -> f64| -> Vec<Vec<f64>> {
+                (0..nc)
+                    .map(|c| (0..nc).map(|cp| f(c, cp)).collect())
+                    .collect()
+            };
+            let lam = full(&|c, cp| prop.lambda(&params, &index, c, cp));
+            let lam_p = full(&|c, cp| {
+                Component::ALL
+                    .iter()
+                    .map(|&ab| prop.lambda_prime(ab, c, cp))
+                    .sum()
+            });
+            if fig == "fig2" {
+                let ratio = full(&|c, cp| {
+                    let comp =
+                        Component(index.class_of(&params, c), index.class_of(&params, cp));
+                    prop.accept_prob(comp, c, cp)
+                });
+                println!("Figure 2(a): Λ (target)\n{}", io::render_heatmap(&lam));
+                println!("Figure 2(b): Λ' (proposal)\n{}", io::render_heatmap(&lam_p));
+                println!("Figure 2(c): acceptance Λ⊘Λ'\n{}", io::render_heatmap(&ratio));
+                for (name, m) in [("lambda", &lam), ("lambda_prime", &lam_p), ("accept", &ratio)]
+                {
+                    io::write_matrix_csv(&format!("{out_dir}/fig2_{name}.csv"), m)
+                        .map_err(|e| e.to_string())?;
+                }
+                println!("wrote {out_dir}/fig2_*.csv");
+            } else {
+                for comp in Component::ALL {
+                    let m = full(&|c, cp| prop.lambda_prime(comp, c, cp));
+                    println!(
+                        "Figure 3: Λ'^({})\n{}",
+                        comp.label(),
+                        io::render_heatmap(&m)
+                    );
+                    io::write_matrix_csv(
+                        &format!("{out_dir}/fig3_{}.csv", comp.label().to_lowercase()),
+                        &m,
+                    )
+                    .map_err(|e| e.to_string())?;
+                }
+                println!("wrote {out_dir}/fig3_*.csv");
+            }
+        }
+        other => return Err(format!("unknown figure {other:?} (fig1|fig2|fig3)")),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- serve
+
+fn cmd_serve(tokens: &[String]) -> Result<(), String> {
+    let cmd = Command::new("serve", "run a job trace through the generation service")
+        .opt("jobs", "trace file (one key=value job per line)", None)
+        .opt("threads", "worker threads (0 = all cores)", Some("0"))
+        .flag("stats", "print the metrics registry after the run");
+    let Some(args) = parse_or_help(&cmd, tokens)? else {
+        return Ok(());
+    };
+    let path = args.str("jobs").map_err(|e| e.to_string())?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let mut threads: usize = args.usize("threads").map_err(|e| e.to_string())?;
+    if threads == 0 {
+        threads = magbdp::util::threadpool::default_parallelism();
+    }
+    let svc = GenerationService::new(threads);
+    let t = std::time::Instant::now();
+    let results = svc.run_trace(&text)?;
+    let wall = t.elapsed();
+
+    println!(
+        "{:>4} {:<14} {:>10} {:>12} {:>12} {:>10}",
+        "id", "algo", "nodes", "multi-edges", "simple", "wall(ms)"
+    );
+    let mut total_edges = 0u64;
+    let mut failures = 0usize;
+    for r in &results {
+        if let Some(e) = &r.error {
+            failures += 1;
+            println!("{:>4} {:<14} ERROR: {e}", r.id, r.algo);
+            continue;
+        }
+        total_edges += r.edges;
+        println!(
+            "{:>4} {:<14} {:>10} {:>12} {:>12} {:>10.2}",
+            r.id,
+            r.algo,
+            r.nodes,
+            r.edges,
+            r.edges_simple,
+            r.wall.as_secs_f64() * 1e3
+        );
+    }
+    println!(
+        "\n{} jobs, {} failures, {} edges total, {:.3}s wall, {:.1} edges/s",
+        results.len(),
+        failures,
+        total_edges,
+        wall.as_secs_f64(),
+        total_edges as f64 / wall.as_secs_f64()
+    );
+    if args.flag("stats") {
+        print!("{}", svc.metrics().render());
+    }
+    if failures > 0 {
+        return Err(format!("{failures} job(s) failed"));
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------- check-artifacts
+
+fn cmd_check_artifacts(tokens: &[String]) -> Result<(), String> {
+    let cmd = Command::new("check-artifacts", "compile artifacts + verify native parity");
+    let Some(_args) = parse_or_help(&cmd, tokens)? else {
+        return Ok(());
+    };
+    let rt = magbdp::runtime::XlaRuntime::global().map_err(|e| format!("{e:#}"))?;
+    println!("platform: {}   artifacts: {}", rt.platform(), rt.dir().display());
+
+    // edge_stats parity.
+    let params = MagmParams::replicated(InitiatorMatrix::THETA1, 10, 0.4, 1 << 10);
+    let native = params.edge_stats();
+    let xla = rt.edge_stats(&params).map_err(|e| format!("{e:#}"))?;
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+    for (name, (got, want)) in [
+        ("e_K", (xla[0], native.e_k)),
+        ("e_M", (xla[1], native.e_m)),
+        ("e_KM", (xla[2], native.e_km)),
+        ("e_MK", (xla[3], native.e_mk)),
+    ] {
+        let r = rel(got, want);
+        println!("edge_stats.{name}: artifact {got:.4e} native {want:.4e} (rel {r:.2e})");
+        if r > 1e-4 {
+            return Err(format!("edge_stats.{name} parity failure"));
+        }
+    }
+
+    // kron_batch parity.
+    let stack = params.stack();
+    let cs: Vec<u64> = (0..256).map(|i| (i * 37) % 1024).collect();
+    let ct: Vec<u64> = (0..256).map(|i| (i * 61) % 1024).collect();
+    let got = rt.kron_batch(stack, &cs, &ct).map_err(|e| format!("{e:#}"))?;
+    let mut worst = 0.0f64;
+    for ((&c, &cp), g) in cs.iter().zip(&ct).zip(&got) {
+        worst = worst.max(rel(*g, stack.kron_entry(c, cp)));
+    }
+    println!("kron_batch: 256 pairs, worst rel err {worst:.2e}");
+    if worst > 1e-4 {
+        return Err("kron_batch parity failure".into());
+    }
+
+    // gamma_tile parity.
+    let tile = rt.gamma_tile(stack, 0, 0).map_err(|e| format!("{e:#}"))?;
+    let mut worst = 0.0f64;
+    for (i, row) in tile.iter().enumerate().take(32) {
+        for (j, &v) in row.iter().enumerate().take(32) {
+            worst = worst.max(rel(v, stack.kron_entry(i as u64, j as u64)));
+        }
+    }
+    println!("gamma_tile: 32×32 window, worst rel err {worst:.2e}");
+    if worst > 1e-4 {
+        return Err("gamma_tile parity failure".into());
+    }
+
+    println!("all artifacts OK");
+    Ok(())
+}

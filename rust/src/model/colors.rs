@@ -1,0 +1,261 @@
+//! Color machinery of Section 4: node groups `V_c`, the frequent /
+//! infrequent partition, and the multiplicity bounds `m_F`, `m_I`.
+
+use std::collections::HashMap;
+
+use super::magm::{AttributeAssignment, MagmParams};
+use crate::util::rng::Rng;
+
+/// Which side of the Eq. 17/18 partition a color falls on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ColorClass {
+    /// `E[|V_c|] ≥ 1` — variance below mean, concentration applies.
+    Frequent,
+    /// `E[|V_c|] < 1` — rare colors; bounded by absolute count instead.
+    Infrequent,
+}
+
+/// Index over a concrete attribute assignment: `V_c` membership lists
+/// (Eq. 10), per-color counts, and the observed multiplicities
+/// `m_F = max_{c∈F} |V_c| / E[|V_c|]`, `m_I = max_{c∈I} |V_c|` (Eq. 19).
+#[derive(Clone, Debug)]
+pub struct ColorIndex {
+    d: usize,
+    n: u64,
+    /// Occupied colors only: color -> node ids (sorted ascending).
+    nodes_by_color: HashMap<u64, Vec<u32>>,
+    m_f: f64,
+    m_i: u64,
+}
+
+impl ColorIndex {
+    /// Build from a MAGM and one attribute realisation.
+    pub fn build(params: &MagmParams, assignment: &AttributeAssignment) -> Self {
+        assert_eq!(assignment.n() as u64, params.n(), "assignment size mismatch");
+        assert_eq!(assignment.d(), params.d(), "assignment depth mismatch");
+        let mut nodes_by_color: HashMap<u64, Vec<u32>> = HashMap::new();
+        for (i, &c) in assignment.colors().iter().enumerate() {
+            nodes_by_color.entry(c).or_default().push(i as u32);
+        }
+        let mut m_f = 0.0f64;
+        let mut m_i = 0u64;
+        for (&c, nodes) in &nodes_by_color {
+            let expected = params.expected_color_count(c);
+            if expected >= 1.0 {
+                m_f = m_f.max(nodes.len() as f64 / expected);
+            } else {
+                m_i = m_i.max(nodes.len() as u64);
+            }
+        }
+        // m_F ≥ 1 keeps the FF proposal valid even when every frequent
+        // color is under-occupied in this realisation (Λ' must dominate
+        // the EXPECTED-count-based rates of Eq. 21).
+        Self {
+            d: params.d(),
+            n: params.n(),
+            nodes_by_color,
+            m_f: m_f.max(1.0),
+            m_i: m_i.max(1),
+        }
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// `|V_c|` — zero for unoccupied colors.
+    #[inline]
+    pub fn count(&self, c: u64) -> u64 {
+        self.nodes_by_color.get(&c).map_or(0, |v| v.len() as u64)
+    }
+
+    /// The nodes with color `c` (empty slice if none).
+    #[inline]
+    pub fn nodes(&self, c: u64) -> &[u32] {
+        self.nodes_by_color.get(&c).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Number of distinct occupied colors.
+    #[inline]
+    pub fn occupied_colors(&self) -> usize {
+        self.nodes_by_color.len()
+    }
+
+    /// Iterate `(color, nodes)` over occupied colors (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &[u32])> {
+        self.nodes_by_color.iter().map(|(&c, v)| (c, v.as_slice()))
+    }
+
+    /// Observed `m_F` (≥ 1).
+    #[inline]
+    pub fn m_f(&self) -> f64 {
+        self.m_f
+    }
+
+    /// Observed `m_I` (≥ 1).
+    #[inline]
+    pub fn m_i(&self) -> u64 {
+        self.m_i
+    }
+
+    /// `max_c |V_c|` — the §4.2 simple-proposal multiplicity `m` (Eq. 14).
+    pub fn m_max(&self) -> u64 {
+        self.nodes_by_color
+            .values()
+            .map(|v| v.len() as u64)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Eq. 17/18 membership for an arbitrary color (occupied or not).
+    #[inline]
+    pub fn class_of(&self, params: &MagmParams, c: u64) -> ColorClass {
+        if params.expected_color_count(c) >= 1.0 {
+            ColorClass::Frequent
+        } else {
+            ColorClass::Infrequent
+        }
+    }
+
+    /// Uniform node from `V_c`; `None` if the color is unoccupied.
+    pub fn sample_node<R: Rng + ?Sized>(&self, c: u64, rng: &mut R) -> Option<u32> {
+        let nodes = self.nodes(c);
+        if nodes.is_empty() {
+            None
+        } else {
+            Some(nodes[rng.next_index(nodes.len())])
+        }
+    }
+
+    /// Dense `|V_c|` table as f32, zero-padded to `n_max` — the layout the
+    /// `accept_batch` AOT artifact expects.
+    pub fn counts_f32(&self, n_max: usize) -> Vec<f32> {
+        assert!(
+            (1usize << self.d) <= n_max,
+            "2^d = {} colors exceed artifact capacity {n_max}",
+            1u64 << self.d
+        );
+        let mut out = vec![0.0f32; n_max];
+        for (&c, v) in &self.nodes_by_color {
+            out[c as usize] = v.len() as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::InitiatorMatrix;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn setup(d: usize, mu: f64, n: u64, seed: u64) -> (MagmParams, ColorIndex) {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = params.sample_attributes(&mut rng);
+        let idx = ColorIndex::build(&params, &a);
+        (params, idx)
+    }
+
+    #[test]
+    fn counts_sum_to_n() {
+        let (_, idx) = setup(8, 0.4, 1000, 1);
+        let total: u64 = idx.iter().map(|(_, v)| v.len() as u64).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(idx.n(), 1000);
+    }
+
+    #[test]
+    fn count_and_nodes_consistent() {
+        let (_, idx) = setup(6, 0.5, 300, 2);
+        for (c, nodes) in idx.iter() {
+            assert_eq!(idx.count(c), nodes.len() as u64);
+            assert!(!nodes.is_empty());
+        }
+        // An out-of-range color is simply unoccupied.
+        assert_eq!(idx.count(u64::MAX >> 1), 0);
+        assert!(idx.nodes(u64::MAX >> 1).is_empty());
+    }
+
+    #[test]
+    fn class_partition_matches_expected_count() {
+        let (params, idx) = setup(10, 0.2, 1 << 10, 3);
+        for c in 0..params.num_colors() {
+            let class = idx.class_of(&params, c);
+            let e = params.expected_color_count(c);
+            assert_eq!(class == ColorClass::Frequent, e >= 1.0, "c={c} e={e}");
+        }
+    }
+
+    #[test]
+    fn multiplicities_dominate_counts() {
+        // The definition of m_F/m_I makes Λ ≤ Λ' (Theorem 4); check the raw
+        // inequality they encode: for every occupied color,
+        // |V_c| ≤ m_F·E|V_c| (frequent) or |V_c| ≤ m_I (infrequent).
+        let (params, idx) = setup(12, 0.35, 1 << 12, 4);
+        for (c, nodes) in idx.iter() {
+            let cnt = nodes.len() as f64;
+            match idx.class_of(&params, c) {
+                ColorClass::Frequent => {
+                    assert!(cnt <= idx.m_f() * params.expected_color_count(c) + 1e-9)
+                }
+                ColorClass::Infrequent => assert!(nodes.len() as u64 <= idx.m_i()),
+            }
+        }
+    }
+
+    #[test]
+    fn theorem3_bound_holds_whp() {
+        // m_F, m_I ≤ log2(n) with high probability (Theorem 3); a single
+        // seed at n = 2^14 should comfortably satisfy it.
+        let (_, idx) = setup(14, 0.4, 1 << 14, 5);
+        let log2n = 14.0;
+        assert!(idx.m_f() <= log2n, "m_F = {}", idx.m_f());
+        assert!((idx.m_i() as f64) <= log2n, "m_I = {}", idx.m_i());
+    }
+
+    #[test]
+    fn sample_node_uniform_over_class() {
+        let (_, idx) = setup(4, 0.5, 2000, 6);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let (c, nodes) = idx.iter().max_by_key(|(_, v)| v.len()).unwrap();
+        let nodes: Vec<u32> = nodes.to_vec();
+        let mut counts: HashMap<u32, u64> = HashMap::new();
+        let trials = 20_000;
+        for _ in 0..trials {
+            let node = idx.sample_node(c, &mut rng).unwrap();
+            *counts.entry(node).or_default() += 1;
+        }
+        let expect = trials as f64 / nodes.len() as f64;
+        for node in nodes {
+            let got = *counts.get(&node).unwrap_or(&0) as f64;
+            assert!((got - expect).abs() < 6.0 * expect.sqrt(), "node {node}");
+        }
+        assert_eq!(idx.sample_node(u64::MAX >> 2, &mut rng), None);
+    }
+
+    #[test]
+    fn counts_f32_layout() {
+        let (_, idx) = setup(5, 0.5, 100, 8);
+        let table = idx.counts_f32(64);
+        assert_eq!(table.len(), 64);
+        let total: f32 = table.iter().sum();
+        assert_eq!(total, 100.0);
+        for (c, nodes) in idx.iter() {
+            assert_eq!(table[c as usize], nodes.len() as f32);
+        }
+    }
+
+    #[test]
+    fn m_max_is_max_count() {
+        let (_, idx) = setup(3, 0.5, 500, 9);
+        let want = idx.iter().map(|(_, v)| v.len() as u64).max().unwrap();
+        assert_eq!(idx.m_max(), want);
+    }
+}

@@ -1,0 +1,114 @@
+//! Kronecker Product Graph Model (Leskovec et al., 2010) — Section 2.1.
+
+use super::params::{InitiatorMatrix, ParamStack};
+
+/// A KPGM over `n = 2^d` nodes with edge probabilities
+/// `Γ_ij = prod_k θ^(k)[bit_k(i-1), bit_k(j-1)]` (Eq. 6; we use 0-based
+/// node ids, so node `i` has bit vector `bits(i)` directly).
+#[derive(Clone, Debug)]
+pub struct KpgmParams {
+    stack: ParamStack,
+}
+
+impl KpgmParams {
+    /// Build from a parameter stack (the μ entries are ignored by KPGM).
+    pub fn new(stack: ParamStack) -> Self {
+        assert!(
+            stack.d() <= 63,
+            "d = {} would overflow node ids",
+            stack.d()
+        );
+        Self { stack }
+    }
+
+    /// Single-Θ convenience constructor (`Θ^(k) = Θ` for all levels).
+    pub fn replicated(theta: InitiatorMatrix, d: usize) -> Self {
+        Self::new(ParamStack::replicated(theta, d, 0.5))
+    }
+
+    /// Number of attribute levels `d`.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.stack.d()
+    }
+
+    /// Number of nodes `n = 2^d`.
+    #[inline]
+    pub fn n(&self) -> u64 {
+        1u64 << self.stack.d()
+    }
+
+    /// The underlying parameter stack.
+    #[inline]
+    pub fn stack(&self) -> &ParamStack {
+        &self.stack
+    }
+
+    /// Edge probability `Γ_ij` (0-based node ids).
+    #[inline]
+    pub fn gamma(&self, i: u64, j: u64) -> f64 {
+        debug_assert!(i < self.n() && j < self.n());
+        self.stack.kron_entry(i, j)
+    }
+
+    /// Expected number of edges `e_K = prod_k sum_ab θ^(k)_ab` (Eq. 5).
+    pub fn expected_edges(&self) -> f64 {
+        self.stack.thetas().iter().map(|t| t.sum()).product()
+    }
+
+    /// Row sum `sum_j Γ_ij` in O(d): factorises across levels as
+    /// `prod_k (θ[b_k,0] + θ[b_k,1])`. Used by tests and the cost model.
+    pub fn row_sum(&self, i: u64) -> f64 {
+        let mut acc = 1.0;
+        for (k, t) in self.stack.thetas().iter().enumerate() {
+            let a = ((i >> k) & 1) as usize;
+            acc *= t.0[a][0] + t.0[a][1];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_edges_matches_brute_force() {
+        let m = KpgmParams::replicated(InitiatorMatrix::FIG1, 3);
+        let brute: f64 = (0..8)
+            .flat_map(|i| (0..8).map(move |j| (i, j)))
+            .map(|(i, j)| m.gamma(i, j))
+            .sum();
+        assert!((m.expected_edges() - brute).abs() < 1e-9);
+        assert!((m.expected_edges() - 2.7f64.powi(3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_sum_matches_brute_force() {
+        let m = KpgmParams::replicated(InitiatorMatrix::THETA2, 5);
+        for i in [0u64, 7, 19, 31] {
+            let brute: f64 = (0..m.n()).map(|j| m.gamma(i, j)).sum();
+            assert!((m.row_sum(i) - brute).abs() < 1e-9, "row {i}");
+        }
+    }
+
+    #[test]
+    fn gamma_symmetry_for_symmetric_theta() {
+        // All the paper's Θ are symmetric ⇒ Γ must be too.
+        let m = KpgmParams::replicated(InitiatorMatrix::THETA1, 6);
+        for (i, j) in [(0u64, 63u64), (5, 40), (13, 14)] {
+            assert!((m.gamma(i, j) - m.gamma(j, i)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn probabilities_in_unit_interval() {
+        let m = KpgmParams::replicated(InitiatorMatrix::THETA1, 8);
+        for i in (0..m.n()).step_by(37) {
+            for j in (0..m.n()).step_by(41) {
+                let g = m.gamma(i, j);
+                assert!((0.0..=1.0).contains(&g));
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Multiplicative Attribute Graph Model (Kim & Leskovec, 2010) — §2.2.
+
+use super::params::{InitiatorMatrix, ParamStack};
+use crate::util::rng::Rng;
+
+/// The four expected edge counts the sampler's complexity is stated in:
+/// `e_K` (Eq. 5), `e_M` (Eq. 8), `e_KM` (Eq. 24), `e_MK` (Eq. 23).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeStats {
+    pub e_k: f64,
+    pub e_m: f64,
+    pub e_km: f64,
+    pub e_mk: f64,
+}
+
+impl EdgeStats {
+    /// The empirical "sandwich" property (Eq. 25) observed for the
+    /// paper's parameter settings.
+    pub fn satisfies_sandwich(&self, tol: f64) -> bool {
+        let lo = self.e_m.min(self.e_k) * (1.0 - tol);
+        let hi = self.e_m.max(self.e_k) * (1.0 + tol);
+        (lo..=hi).contains(&self.e_km) && (lo..=hi).contains(&self.e_mk)
+    }
+}
+
+/// A MAGM over `n` nodes (NOT necessarily `2^d`) with iid Bernoulli(μ^(k))
+/// attributes and edge probabilities `Ψ_ij = Γ_{c_i c_j}` (Eqs. 7, 9).
+#[derive(Clone, Debug)]
+pub struct MagmParams {
+    stack: ParamStack,
+    n: u64,
+}
+
+/// A realisation of the node attribute vectors: node `i` has color
+/// `colors[i]` (the integer whose bit `k` is attribute `f_k(i)`).
+#[derive(Clone, Debug)]
+pub struct AttributeAssignment {
+    colors: Vec<u64>,
+    d: usize,
+}
+
+impl MagmParams {
+    pub fn new(stack: ParamStack, n: u64) -> Self {
+        assert!(n > 0, "empty node set");
+        assert!(stack.d() <= 63, "d too large");
+        Self { stack, n }
+    }
+
+    /// Single-Θ/μ convenience constructor matching the paper's
+    /// experimental setup (`Θ^(k) = Θ`, `μ^(k) = μ`).
+    pub fn replicated(theta: InitiatorMatrix, d: usize, mu: f64, n: u64) -> Self {
+        Self::new(ParamStack::replicated(theta, d, mu), n)
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.stack.d()
+    }
+
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    #[inline]
+    pub fn stack(&self) -> &ParamStack {
+        &self.stack
+    }
+
+    /// Number of possible colors `2^d`.
+    #[inline]
+    pub fn num_colors(&self) -> u64 {
+        1u64 << self.stack.d()
+    }
+
+    /// Draw the attribute vectors `f(i)` for all `n` nodes.
+    pub fn sample_attributes<R: Rng>(&self, rng: &mut R) -> AttributeAssignment {
+        let d = self.stack.d();
+        let colors = (0..self.n)
+            .map(|_| {
+                let mut c = 0u64;
+                for k in 0..d {
+                    if rng.bernoulli(self.stack.mu(k)) {
+                        c |= 1 << k;
+                    }
+                }
+                c
+            })
+            .collect();
+        AttributeAssignment { colors, d }
+    }
+
+    /// Edge probability `Ψ_ij` for a concrete attribute assignment.
+    #[inline]
+    pub fn psi(&self, assignment: &AttributeAssignment, i: usize, j: usize) -> f64 {
+        self.stack
+            .kron_entry(assignment.color(i), assignment.color(j))
+    }
+
+    /// Expected `|V_c|` over the attribute draw: `n · P[color = c]`.
+    #[inline]
+    pub fn expected_color_count(&self, c: u64) -> f64 {
+        self.n as f64 * self.stack.color_probability(c)
+    }
+
+    /// The four expected edge counts (Eqs. 5, 8, 24, 23); the Rust mirror
+    /// of the `edge_stats` AOT artifact, used by the §4.6 cost model so
+    /// the native path has no artifact dependency.
+    pub fn edge_stats(&self) -> EdgeStats {
+        let n = self.n as f64;
+        let mut e_k = 1.0f64;
+        let mut f_m = 1.0f64;
+        let mut f_km = 1.0f64;
+        let mut f_mk = 1.0f64;
+        for k in 0..self.stack.d() {
+            let t = self.stack.theta(k).0;
+            let mu = self.stack.mu(k);
+            let q = 1.0 - mu;
+            e_k *= t[0][0] + t[0][1] + t[1][0] + t[1][1];
+            f_m *= q * q * t[0][0] + q * mu * t[0][1] + mu * q * t[1][0] + mu * mu * t[1][1];
+            // e_MK (Eq. 23): source attribute ~ Bernoulli(mu), target summed.
+            f_mk *= q * (t[0][0] + t[0][1]) + mu * (t[1][0] + t[1][1]);
+            // e_KM (Eq. 24): target attribute ~ Bernoulli(mu), source summed.
+            f_km *= q * (t[0][0] + t[1][0]) + mu * (t[0][1] + t[1][1]);
+        }
+        EdgeStats {
+            e_k,
+            e_m: n * n * f_m,
+            e_km: n * f_km,
+            e_mk: n * f_mk,
+        }
+    }
+}
+
+impl AttributeAssignment {
+    /// Build directly from per-node colors (tests, file loading).
+    pub fn from_colors(colors: Vec<u64>, d: usize) -> Self {
+        assert!(colors.iter().all(|&c| c < (1u64 << d)), "color out of range");
+        Self { colors, d }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.colors.len()
+    }
+
+    /// Attribute levels.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Color `c_i` of node `i`.
+    #[inline]
+    pub fn color(&self, i: usize) -> u64 {
+        self.colors[i]
+    }
+
+    /// All colors, node-indexed.
+    #[inline]
+    pub fn colors(&self) -> &[u64] {
+        &self.colors
+    }
+
+    /// Attribute `f_k(i)`.
+    #[inline]
+    pub fn attribute(&self, i: usize, k: usize) -> bool {
+        (self.colors[i] >> k) & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn magm(theta: InitiatorMatrix, d: usize, mu: f64) -> MagmParams {
+        MagmParams::replicated(theta, d, mu, 1u64 << d)
+    }
+
+    #[test]
+    fn em_equals_ek_at_half_mu_pow2_nodes() {
+        // Section 2.2: μ = 0.5 and n = 2^d ⇒ e_M = e_K.
+        for d in [1usize, 4, 10] {
+            let s = magm(InitiatorMatrix::THETA1, d, 0.5).edge_stats();
+            assert!(
+                (s.e_m - s.e_k).abs() / s.e_k < 1e-12,
+                "d={d}: {} vs {}",
+                s.e_m,
+                s.e_k
+            );
+        }
+    }
+
+    #[test]
+    fn edge_stats_brute_force_small() {
+        let m = magm(InitiatorMatrix::THETA2, 3, 0.37);
+        let s = m.edge_stats();
+        let nc = m.num_colors();
+        // e_M = n² Σ_cc' P[c]P[c'] Γ_cc'.
+        let mut e_m = 0.0;
+        let mut e_mk = 0.0;
+        for c in 0..nc {
+            let pc = m.stack().color_probability(c);
+            let mut row = 0.0;
+            for cp in 0..nc {
+                let g = m.stack().kron_entry(c, cp);
+                e_m += pc * m.stack().color_probability(cp) * g;
+                row += g;
+            }
+            e_mk += pc * row;
+        }
+        e_m *= (m.n() * m.n()) as f64;
+        e_mk *= m.n() as f64;
+        assert!((s.e_m - e_m).abs() / e_m < 1e-12);
+        assert!((s.e_mk - e_mk).abs() / e_mk < 1e-12);
+    }
+
+    #[test]
+    fn sandwich_holds_for_paper_parameters() {
+        // Eq. 25, verified for Θ₁/Θ₂ across the Fig. 4 μ-grid.
+        for theta in [InitiatorMatrix::THETA1, InitiatorMatrix::THETA2] {
+            for i in 1..20 {
+                let mu = i as f64 / 20.0;
+                let s = magm(theta, 8, mu).edge_stats();
+                assert!(s.satisfies_sandwich(1e-9), "theta={theta} mu={mu}: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn attribute_sampling_frequencies() {
+        let m = magm(InitiatorMatrix::THETA1, 6, 0.3);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let a = m.sample_attributes(&mut rng);
+        assert_eq!(a.n(), 64);
+        // Across many nodes, attribute frequency ≈ μ.
+        let big = MagmParams::replicated(InitiatorMatrix::THETA1, 4, 0.3, 40_000);
+        let a = big.sample_attributes(&mut rng);
+        for k in 0..4 {
+            let freq = (0..a.n()).filter(|&i| a.attribute(i, k)).count() as f64 / a.n() as f64;
+            assert!((freq - 0.3).abs() < 0.02, "level {k}: {freq}");
+        }
+    }
+
+    #[test]
+    fn psi_equals_gamma_of_colors() {
+        // Eq. 9: Ψ_ij = Γ_{c_i c_j}.
+        let m = magm(InitiatorMatrix::FIG2, 3, 0.7);
+        let a = AttributeAssignment::from_colors(vec![0, 3, 7, 5], 3);
+        assert_eq!(m.psi(&a, 0, 2), m.stack().kron_entry(0, 7));
+        assert_eq!(m.psi(&a, 1, 3), m.stack().kron_entry(3, 5));
+    }
+
+    #[test]
+    fn expected_color_counts_sum_to_n() {
+        let m = magm(InitiatorMatrix::THETA1, 5, 0.23);
+        let total: f64 = (0..m.num_colors()).map(|c| m.expected_color_count(c)).sum();
+        assert!((total - m.n() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn from_colors_validates() {
+        let _ = AttributeAssignment::from_colors(vec![8], 3);
+    }
+}

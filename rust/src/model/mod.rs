@@ -1,0 +1,22 @@
+//! The two graph models of the paper.
+//!
+//! * [`params`] — initiator matrices `Θ^(k)` and attribute probabilities
+//!   `μ^(k)` (Eq. 4), including the paper's evaluation presets.
+//! * [`kpgm`] — the Kronecker Product Graph Model: edge-probability
+//!   matrix `Γ` (Eq. 3/6) and expected edge count `e_K` (Eq. 5).
+//! * [`magm`] — the Multiplicative Attribute Graph Model: attribute
+//!   vectors `f(i)`, edge probabilities `Ψ` (Eq. 7) and the expected
+//!   edge counts `e_M`, `e_KM`, `e_MK` (Eqs. 8, 24, 23).
+//! * [`colors`] — the color machinery of §4: node groups `V_c`
+//!   (Eq. 10), the frequent/infrequent partition (Eqs. 17–18) and the
+//!   multiplicity bounds `m_F`, `m_I` (Eq. 19).
+
+pub mod colors;
+pub mod kpgm;
+pub mod magm;
+pub mod params;
+
+pub use colors::{ColorClass, ColorIndex};
+pub use kpgm::KpgmParams;
+pub use magm::{AttributeAssignment, EdgeStats, MagmParams};
+pub use params::{InitiatorMatrix, ParamStack};

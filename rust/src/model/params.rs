@@ -1,0 +1,280 @@
+//! Model parameters: initiator matrices and attribute probabilities.
+//!
+//! Bit-order convention (shared with the Python kernels, see
+//! `python/compile/kernels/ref.py`): **level `k` is bit `k`** of a color
+//! (little-endian). The paper's big-endian indexing is an isomorphic
+//! relabelling of colors.
+
+/// A `2×2` initiator matrix `Θ` (Eq. 1).
+///
+/// Entry `(a, b)` is the edge-probability factor when the source node has
+/// attribute value `a` and the target `b`. For *model* parameters each
+/// entry lies in `[0, 1]`; BDP *proposal* parameters may exceed 1
+/// (Section 3.1 — a Poisson rate only needs non-negativity).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InitiatorMatrix(pub [[f64; 2]; 2]);
+
+impl InitiatorMatrix {
+    /// `Θ₁ = [0.15 0.7; 0.7 0.85]` — Kim & Leskovec's real-graph fit,
+    /// used throughout the paper's Section 5 evaluation.
+    pub const THETA1: InitiatorMatrix = InitiatorMatrix([[0.15, 0.7], [0.7, 0.85]]);
+
+    /// `Θ₂ = [0.35 0.52; 0.52 0.95]` — Moreno & Neville's fit, the second
+    /// Section 5 evaluation matrix.
+    pub const THETA2: InitiatorMatrix = InitiatorMatrix([[0.35, 0.52], [0.52, 0.95]]);
+
+    /// `Θ = [0.4 0.7; 0.7 0.9]` — the Figure 1 illustration matrix.
+    pub const FIG1: InitiatorMatrix = InitiatorMatrix([[0.4, 0.7], [0.7, 0.9]]);
+
+    /// `Θ = [0.7 0.85; 0.85 0.9]` — the Figure 2/3 illustration matrix.
+    pub const FIG2: InitiatorMatrix = InitiatorMatrix([[0.7, 0.85], [0.85, 0.9]]);
+
+    /// Construct from row-major entries `(θ00, θ01, θ10, θ11)`.
+    pub fn new(t00: f64, t01: f64, t10: f64, t11: f64) -> Self {
+        InitiatorMatrix([[t00, t01], [t10, t11]])
+    }
+
+    /// Entry `θ_ab`.
+    #[inline]
+    pub fn get(&self, a: usize, b: usize) -> f64 {
+        self.0[a][b]
+    }
+
+    /// Sum of all four entries (the per-level factor of `e_K`, Eq. 5).
+    #[inline]
+    pub fn sum(&self) -> f64 {
+        self.0[0][0] + self.0[0][1] + self.0[1][0] + self.0[1][1]
+    }
+
+    /// Row-major `[θ00, θ01, θ10, θ11]` (alias-table weight order).
+    #[inline]
+    pub fn flat(&self) -> [f64; 4] {
+        [self.0[0][0], self.0[0][1], self.0[1][0], self.0[1][1]]
+    }
+
+    /// Elementwise scale — used to build the Eq. 15/21 proposal matrices.
+    #[must_use]
+    pub fn scale(&self, s: f64) -> Self {
+        InitiatorMatrix([
+            [self.0[0][0] * s, self.0[0][1] * s],
+            [self.0[1][0] * s, self.0[1][1] * s],
+        ])
+    }
+
+    /// Elementwise multiply by `[[w00,w01],[w10,w11]]` — the μ-weighting
+    /// step of Eq. 21.
+    #[must_use]
+    pub fn weight(&self, w: [[f64; 2]; 2]) -> Self {
+        InitiatorMatrix([
+            [self.0[0][0] * w[0][0], self.0[0][1] * w[0][1]],
+            [self.0[1][0] * w[1][0], self.0[1][1] * w[1][1]],
+        ])
+    }
+
+    /// All entries finite and non-negative (valid Poisson rates).
+    pub fn is_valid_rate(&self) -> bool {
+        self.flat().iter().all(|t| t.is_finite() && *t >= 0.0)
+    }
+
+    /// All entries in `[0, 1]` (valid Bernoulli probabilities).
+    pub fn is_valid_probability(&self) -> bool {
+        self.flat().iter().all(|t| (0.0..=1.0).contains(t))
+    }
+}
+
+impl std::fmt::Display for InitiatorMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "({}, {}; {}, {})",
+            self.0[0][0], self.0[0][1], self.0[1][0], self.0[1][1]
+        )
+    }
+}
+
+/// The full parameter array `Θ̃ = (Θ^(1), …, Θ^(d))` plus, for MAGMs, the
+/// attribute probabilities `μ̃ = (μ^(1), …, μ^(d))` (Eq. 4).
+#[derive(Clone, Debug)]
+pub struct ParamStack {
+    thetas: Vec<InitiatorMatrix>,
+    mus: Vec<f64>,
+}
+
+impl ParamStack {
+    /// Per-level parameters. `thetas` and `mus` must have equal length ≥ 1.
+    pub fn new(thetas: Vec<InitiatorMatrix>, mus: Vec<f64>) -> Self {
+        assert!(!thetas.is_empty(), "need at least one level");
+        assert_eq!(thetas.len(), mus.len(), "thetas/mus length mismatch");
+        assert!(
+            mus.iter().all(|m| (0.0..=1.0).contains(m)),
+            "mu must be a probability"
+        );
+        Self { thetas, mus }
+    }
+
+    /// The common setting of the paper's experiments: one `Θ` and one `μ`
+    /// replicated across all `d` levels.
+    pub fn replicated(theta: InitiatorMatrix, d: usize, mu: f64) -> Self {
+        Self::new(vec![theta; d], vec![mu; d])
+    }
+
+    /// Number of attribute levels `d`.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.thetas.len()
+    }
+
+    /// Level `k` initiator matrix (0-based).
+    #[inline]
+    pub fn theta(&self, k: usize) -> &InitiatorMatrix {
+        &self.thetas[k]
+    }
+
+    /// Level `k` attribute probability.
+    #[inline]
+    pub fn mu(&self, k: usize) -> f64 {
+        self.mus[k]
+    }
+
+    pub fn thetas(&self) -> &[InitiatorMatrix] {
+        &self.thetas
+    }
+
+    pub fn mus(&self) -> &[f64] {
+        &self.mus
+    }
+
+    /// All θ entries valid Bernoulli probabilities.
+    pub fn is_valid_probability(&self) -> bool {
+        self.thetas.iter().all(|t| t.is_valid_probability())
+    }
+
+    /// Kronecker entry product `prod_k θ^(k)[bit_k(c), bit_k(c')]`
+    /// (Eq. 6) — `Γ_cc'` when the stack holds model probabilities, a
+    /// Poisson rate for proposal stacks.
+    pub fn kron_entry(&self, c: u64, cp: u64) -> f64 {
+        let mut acc = 1.0f64;
+        for (k, t) in self.thetas.iter().enumerate() {
+            let a = ((c >> k) & 1) as usize;
+            let b = ((cp >> k) & 1) as usize;
+            acc *= t.0[a][b];
+        }
+        acc
+    }
+
+    /// Probability of color `c` under iid Bernoulli(μ^(k)) attributes:
+    /// `P[f(i) = bits(c)] = prod_k μ_k^{bit} (1-μ_k)^{1-bit}`.
+    pub fn color_probability(&self, c: u64) -> f64 {
+        let mut p = 1.0f64;
+        for (k, &mu) in self.mus.iter().enumerate() {
+            p *= if (c >> k) & 1 == 1 { mu } else { 1.0 - mu };
+        }
+        p
+    }
+
+    /// θ values padded to `d_max` levels with all-ones matrices, flattened
+    /// row-major as f32 — the layout the AOT artifacts expect.
+    pub fn padded_theta_f32(&self, d_max: usize) -> Vec<f32> {
+        assert!(self.d() <= d_max, "stack depth {} exceeds d_max {d_max}", self.d());
+        let mut out = Vec::with_capacity(d_max * 4);
+        for t in &self.thetas {
+            out.extend(t.flat().iter().map(|&x| x as f32));
+        }
+        out.resize(d_max * 4, 1.0);
+        out
+    }
+
+    /// μ values padded with zeros, as f32 (artifact layout).
+    pub fn padded_mu_f32(&self, d_max: usize) -> Vec<f32> {
+        let mut out: Vec<f32> = self.mus.iter().map(|&m| m as f32).collect();
+        out.resize(d_max, 0.0);
+        out
+    }
+
+    /// Level mask (1 for active levels), as f32 (artifact layout).
+    pub fn level_mask_f32(&self, d_max: usize) -> Vec<f32> {
+        let mut out = vec![1.0f32; self.d()];
+        out.resize(d_max, 0.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        assert_eq!(InitiatorMatrix::THETA1.get(0, 0), 0.15);
+        assert_eq!(InitiatorMatrix::THETA1.get(1, 1), 0.85);
+        assert_eq!(InitiatorMatrix::THETA2.get(0, 1), 0.52);
+        assert!((InitiatorMatrix::THETA1.sum() - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_and_weight() {
+        let t = InitiatorMatrix::new(0.1, 0.2, 0.3, 0.4).scale(2.0);
+        assert_eq!(t.flat(), [0.2, 0.4, 0.6, 0.8]);
+        let w = t.weight([[0.0, 1.0], [1.0, 0.5]]);
+        assert_eq!(w.flat(), [0.0, 0.4, 0.6, 0.4]);
+    }
+
+    #[test]
+    fn rate_vs_probability_validity() {
+        let t = InitiatorMatrix::new(0.5, 1.5, 0.2, 0.9);
+        assert!(t.is_valid_rate());
+        assert!(!t.is_valid_probability());
+        assert!(!InitiatorMatrix::new(-0.1, 0.0, 0.0, 0.0).is_valid_rate());
+    }
+
+    #[test]
+    fn kron_entry_matches_manual_product() {
+        let s = ParamStack::replicated(InitiatorMatrix::FIG1, 3, 0.5);
+        // color 0 ↔ all attribute bits 0: Γ_00 = θ00³.
+        assert!((s.kron_entry(0, 0) - 0.4f64.powi(3)).abs() < 1e-12);
+        // color 7 ↔ all bits 1.
+        assert!((s.kron_entry(7, 7) - 0.9f64.powi(3)).abs() < 1e-12);
+        // Mixed: c = 0b001, c' = 0b100 → levels: (1,0), (0,0), (0,1).
+        let want = 0.7 * 0.4 * 0.7;
+        assert!((s.kron_entry(1, 4) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn color_probability_sums_to_one() {
+        let s = ParamStack::replicated(InitiatorMatrix::THETA1, 4, 0.3);
+        let total: f64 = (0..16).map(|c| s.color_probability(c)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        // Color 15 (all attributes present) has probability mu^4.
+        assert!((s.color_probability(15) - 0.3f64.powi(4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padding_layout() {
+        let s = ParamStack::replicated(InitiatorMatrix::THETA1, 2, 0.4);
+        let t = s.padded_theta_f32(4);
+        assert_eq!(t.len(), 16);
+        assert_eq!(&t[0..4], &[0.15, 0.7, 0.7, 0.85]);
+        assert!(t[8..].iter().all(|&x| x == 1.0));
+        let m = s.padded_mu_f32(4);
+        assert_eq!(m, vec![0.4, 0.4, 0.0, 0.0]);
+        assert_eq!(s.level_mask_f32(4), vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let _ = ParamStack::new(vec![InitiatorMatrix::THETA1], vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn heterogeneous_levels() {
+        let s = ParamStack::new(
+            vec![InitiatorMatrix::THETA1, InitiatorMatrix::THETA2],
+            vec![0.2, 0.8],
+        );
+        // c=0b10: level0 bit 0, level1 bit 1.
+        let want = 0.15 * 0.95; // θ1[0,0] * θ2[1,1] with c'=c
+        assert!((s.kron_entry(2, 2) - want).abs() < 1e-12);
+        assert!((s.color_probability(2) - 0.8 * 0.8).abs() < 1e-12);
+    }
+}

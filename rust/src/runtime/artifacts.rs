@@ -1,0 +1,165 @@
+//! AOT artifact discovery and manifest parsing.
+//!
+//! `python/compile/aot.py` writes, per entry point, an HLO-text file
+//! (`NAME.hlo.txt`) and a key=value manifest (`NAME.meta`) recording the
+//! input shapes/dtypes and layout constants (`d_max`, `batch`, `n_max`).
+//! This module locates and validates them; [`super::ExecutableCache`]
+//! compiles them on the PJRT client.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `NAME.meta` manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    entries: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(name: &str, text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{name}.meta: bad line {line:?}"))?;
+            entries.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self {
+            name: name.to_string(),
+            entries,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .with_context(|| format!("{}.meta: missing {key}", self.name))?
+            .parse()
+            .with_context(|| format!("{}.meta: bad {key}", self.name))
+    }
+
+    /// Number of declared inputs.
+    pub fn num_inputs(&self) -> Result<u64> {
+        self.u64("num_inputs")
+    }
+
+    /// Declared shape of input `i` (empty = scalar).
+    pub fn input_shape(&self, i: usize) -> Result<Vec<usize>> {
+        let raw = self
+            .get(&format!("input{i}.shape"))
+            .with_context(|| format!("{}.meta: missing input{i}.shape", self.name))?;
+        if raw.is_empty() {
+            return Ok(vec![]);
+        }
+        raw.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("{}.meta: bad dim {t:?}", self.name))
+            })
+            .collect()
+    }
+}
+
+/// One artifact on disk: HLO text path + manifest.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+/// Locate the artifacts directory: `$MAGBDP_ARTIFACTS`, else `artifacts/`
+/// relative to the working directory, else relative to the executable's
+/// ancestors (so `cargo test`/`cargo bench` work from `target/...`).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("MAGBDP_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        bail!("MAGBDP_ARTIFACTS={p:?} is not a directory");
+    }
+    let mut candidates = vec![PathBuf::from("artifacts")];
+    if let Ok(exe) = std::env::current_exe() {
+        for anc in exe.ancestors().skip(1).take(6) {
+            candidates.push(anc.join("artifacts"));
+        }
+    }
+    for c in &candidates {
+        if c.is_dir() {
+            return Ok(c.clone());
+        }
+    }
+    bail!(
+        "artifacts directory not found (tried {candidates:?}); run `make artifacts` \
+         or set MAGBDP_ARTIFACTS"
+    )
+}
+
+/// Load one artifact's paths + manifest (no compilation).
+pub fn load_artifact(dir: &Path, name: &str) -> Result<Artifact> {
+    let hlo_path = dir.join(format!("{name}.hlo.txt"));
+    if !hlo_path.is_file() {
+        bail!("missing artifact {hlo_path:?}; run `make artifacts`");
+    }
+    let meta_path = dir.join(format!("{name}.meta"));
+    let meta_text = std::fs::read_to_string(&meta_path)
+        .with_context(|| format!("read {meta_path:?}"))?;
+    let meta = ArtifactMeta::parse(name, &meta_text)?;
+    Ok(Artifact {
+        name: name.to_string(),
+        hlo_path,
+        meta,
+    })
+}
+
+/// All artifact names the runtime knows about.
+pub const ARTIFACT_NAMES: [&str; 4] = ["kron_batch", "gamma_tile", "accept_batch", "edge_stats"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_shapes() {
+        let text = "name=accept_batch\nnum_inputs=2\ninput0.shape=24,2,2\n\
+                    input0.dtype=float32\ninput1.shape=\ninput1.dtype=float32\nd_max=24\n";
+        let m = ArtifactMeta::parse("accept_batch", text).unwrap();
+        assert_eq!(m.num_inputs().unwrap(), 2);
+        assert_eq!(m.input_shape(0).unwrap(), vec![24, 2, 2]);
+        assert_eq!(m.input_shape(1).unwrap(), Vec::<usize>::new());
+        assert_eq!(m.u64("d_max").unwrap(), 24);
+    }
+
+    #[test]
+    fn meta_rejects_garbage() {
+        assert!(ArtifactMeta::parse("x", "no equals sign").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_reports_make_hint() {
+        let err = load_artifact(Path::new("/nonexistent"), "kron_batch").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn artifacts_dir_found_when_built() {
+        // The repo builds artifacts before `cargo test` (Makefile order);
+        // accept either outcome so the unit test is hermetic.
+        match artifacts_dir() {
+            Ok(dir) => assert!(dir.is_dir()),
+            Err(e) => assert!(format!("{e}").contains("artifacts")),
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! The ball-dropping process — Algorithm 1 of the paper.
+//!
+//! Given a stack of non-negative `2×2` rate matrices `Θ̃`, a BDP drops
+//! `X ~ Poisson(prod_k Σ_ab θ^(k)_ab)` balls; each ball descends `d`
+//! levels of the implicit `2^d × 2^d` grid, choosing quadrant `(a, b)`
+//! at level `k` with probability `∝ θ^(k)_ab`. Theorem 2: the resulting
+//! multiplicity matrix has independent `Poisson(Γ_ij)` entries.
+//!
+//! The per-level quadrant choice uses a precomputed alias table, so one
+//! ball costs exactly `d` alias draws — the `O(d)` per-edge bound the
+//! complexity analysis of §4.5 builds on.
+
+use crate::graph::MultiEdgeList;
+use crate::model::params::InitiatorMatrix;
+use crate::util::rng::alias::AliasTable;
+use crate::util::rng::dist::poisson;
+use crate::util::rng::Rng;
+
+/// Number of levels fused into one alias table (§Perf optimization):
+/// a chunk of `k` levels becomes a single `4^k`-way alias draw — same
+/// distribution (the table's weights are the explicit Kronecker product
+/// of the chunk's matrices), 1/k the draws per ball. 4 → 256-way tables
+/// (3 KiB each, cache-resident); measured 1.6–1.8× on drop_ball vs the
+/// unfused per-level descent, <5% further gain beyond FUSE=4.
+const FUSE: usize = 4;
+
+/// One fused chunk: an alias table over `4^len` (a, b) combinations.
+#[derive(Clone, Debug)]
+struct FusedLevel {
+    table: AliasTable,
+    /// First model level this chunk covers.
+    base: usize,
+    /// Number of model levels in the chunk.
+    len: usize,
+}
+
+/// A compiled ball-dropping process over a `2^d × 2^d` grid.
+#[derive(Clone, Debug)]
+pub struct BdpSampler {
+    levels: Vec<FusedLevel>,
+    total_rate: f64,
+    d: usize,
+}
+
+impl BdpSampler {
+    /// Compile a BDP from per-level rate matrices (entries ≥ 0, and —
+    /// unlike model probabilities — allowed to exceed 1; Section 3.1).
+    pub fn new(rates: &[InitiatorMatrix]) -> Self {
+        assert!(!rates.is_empty(), "BDP needs at least one level");
+        assert!(rates.len() <= 62, "d too large for u64 coordinates");
+        assert!(
+            rates.iter().all(|t| t.is_valid_rate()),
+            "BDP rates must be finite and non-negative"
+        );
+        let total_rate = rates.iter().map(|t| t.sum()).product();
+        let mut levels = Vec::with_capacity(rates.len().div_ceil(FUSE));
+        let mut base = 0;
+        while base < rates.len() {
+            let len = FUSE.min(rates.len() - base);
+            // Weights over all 4^len (a, b) combinations of the chunk:
+            // category index packs level j's (a_j, b_j) into bits 2j+1, 2j.
+            let mut weights = vec![1.0f64; 1 << (2 * len)];
+            for (cat, w) in weights.iter_mut().enumerate() {
+                for j in 0..len {
+                    let pair = (cat >> (2 * j)) & 3;
+                    *w *= rates[base + j].0[pair >> 1][pair & 1];
+                }
+            }
+            levels.push(FusedLevel {
+                table: AliasTable::new(&weights),
+                base,
+                len,
+            });
+            base += len;
+        }
+        Self {
+            levels,
+            total_rate,
+            d: rates.len(),
+        }
+    }
+
+    /// Grid depth `d`.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Grid side `2^d`.
+    #[inline]
+    pub fn side(&self) -> u64 {
+        1u64 << self.d
+    }
+
+    /// Total Poisson rate `Σ_ij Λ_ij = prod_k Σ_ab θ^(k)_ab`.
+    #[inline]
+    pub fn total_rate(&self) -> f64 {
+        self.total_rate
+    }
+
+    /// Drop a single ball: one `(row, col)` coordinate distributed
+    /// `∝ Γ_ij` (little-endian level order: level `k` decides bit `k`).
+    #[inline]
+    pub fn drop_ball<R: Rng + ?Sized>(&self, rng: &mut R) -> (u64, u64) {
+        let mut row = 0u64;
+        let mut col = 0u64;
+        for chunk in &self.levels {
+            let cat = chunk.table.sample(rng) as u64;
+            // Unpack level j's (a, b) from category bits 2j+1, 2j.
+            for j in 0..chunk.len {
+                let pair = (cat >> (2 * j)) & 3;
+                row |= (pair >> 1) << (chunk.base + j);
+                col |= (pair & 1) << (chunk.base + j);
+            }
+        }
+        (row, col)
+    }
+
+    /// Number of balls for one realisation: `X ~ Poisson(total_rate)`.
+    #[inline]
+    pub fn draw_ball_count<R: Rng + ?Sized>(&self, rng: &mut R) -> u64 {
+        poisson(rng, self.total_rate)
+    }
+
+    /// Drop `count` balls, appending coordinates to `out`.
+    pub fn drop_into<R: Rng + ?Sized>(
+        &self,
+        rng: &mut R,
+        count: u64,
+        out: &mut Vec<(u64, u64)>,
+    ) {
+        out.reserve(count as usize);
+        for _ in 0..count {
+            out.push(self.drop_ball(rng));
+        }
+    }
+
+    /// One full realisation as coordinate pairs (Algorithm 1 verbatim).
+    pub fn sample_pairs<R: Rng + ?Sized>(&self, rng: &mut R) -> Vec<(u64, u64)> {
+        let count = self.draw_ball_count(rng);
+        let mut out = Vec::new();
+        self.drop_into(rng, count, &mut out);
+        out
+    }
+
+    /// One full realisation as a multi-graph (requires `d ≤ 32` so node
+    /// ids fit `u32`).
+    pub fn sample_multigraph<R: Rng + ?Sized>(&self, rng: &mut R) -> MultiEdgeList {
+        assert!(self.d <= 32, "node ids exceed u32");
+        let count = self.draw_ball_count(rng);
+        let mut g = MultiEdgeList::with_capacity(self.side(), count as usize);
+        for _ in 0..count {
+            let (i, j) = self.drop_ball(rng);
+            g.push(i as u32, j as u32);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::ParamStack;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn fig1_bdp(d: usize) -> BdpSampler {
+        BdpSampler::new(&vec![InitiatorMatrix::FIG1; d])
+    }
+
+    #[test]
+    fn total_rate_is_product_of_sums() {
+        let b = fig1_bdp(3);
+        assert!((b.total_rate() - 2.7f64.powi(3)).abs() < 1e-12);
+        assert_eq!(b.side(), 8);
+    }
+
+    #[test]
+    fn balls_land_in_grid() {
+        let b = fig1_bdp(5);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..1000 {
+            let (i, j) = b.drop_ball(&mut rng);
+            assert!(i < 32 && j < 32);
+        }
+    }
+
+    #[test]
+    fn ball_count_mean_matches_rate() {
+        let b = fig1_bdp(4);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let trials = 20_000;
+        let mean: f64 =
+            (0..trials).map(|_| b.draw_ball_count(&mut rng) as f64).sum::<f64>() / trials as f64;
+        let rate = b.total_rate();
+        assert!(
+            (mean - rate).abs() < 5.0 * (rate / trials as f64).sqrt(),
+            "mean {mean} vs rate {rate}"
+        );
+    }
+
+    #[test]
+    fn ball_position_marginal_matches_gamma() {
+        // Empirical landing frequency at (i, j) ≈ Γ_ij / e_K.
+        let d = 3;
+        let b = fig1_bdp(d);
+        let stack = ParamStack::replicated(InitiatorMatrix::FIG1, d, 0.5);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let trials = 400_000usize;
+        let mut counts = vec![0f64; 64];
+        for _ in 0..trials {
+            let (i, j) = b.drop_ball(&mut rng);
+            counts[(i * 8 + j) as usize] += 1.0;
+        }
+        let total = b.total_rate();
+        for i in 0..8u64 {
+            for j in 0..8u64 {
+                let want = stack.kron_entry(i, j) / total;
+                let got = counts[(i * 8 + j) as usize] / trials as f64;
+                let se = (want * (1.0 - want) / trials as f64).sqrt();
+                assert!(
+                    (got - want).abs() < 6.0 * se + 1e-9,
+                    "({i},{j}): got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rates_above_one_accepted() {
+        // Proposal stacks scale θ entries above 1 (Section 3.1).
+        let t = InitiatorMatrix::new(1.5, 2.0, 0.5, 3.0);
+        let b = BdpSampler::new(&[t, t]);
+        assert!((b.total_rate() - 49.0).abs() < 1e-12);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let _ = b.sample_pairs(&mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_rate_rejected() {
+        let _ = BdpSampler::new(&[InitiatorMatrix::new(-0.1, 0.2, 0.3, 0.4)]);
+    }
+
+    #[test]
+    fn multigraph_has_all_balls() {
+        let b = fig1_bdp(6);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let g = b.sample_multigraph(&mut rng);
+        assert_eq!(g.n(), 64);
+        // Poisson(2.7^6 ≈ 387) — astronomically unlikely to be 0.
+        assert!(g.num_edges() > 0);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let b = fig1_bdp(4);
+        let a: Vec<_> = b.sample_pairs(&mut Xoshiro256pp::seed_from_u64(9));
+        let c: Vec<_> = b.sample_pairs(&mut Xoshiro256pp::seed_from_u64(9));
+        assert_eq!(a, c);
+    }
+}

@@ -1,0 +1,163 @@
+//! §4.6 cost model: `O(nd)`-computable expected-work estimates.
+//!
+//! Work is counted in *ball-drop units* (one `O(d)` quadrant descent);
+//! `CostModel::calibrate` measures the machine's seconds-per-unit so the
+//! estimates convert to wall-clock predictions the hybrid sampler and the
+//! CLI can print.
+
+use crate::model::colors::ColorIndex;
+use crate::model::magm::MagmParams;
+
+/// Expected work per sampler, in ball-drop units × d.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkEstimate {
+    /// Algorithm 2 (this paper): `d·(m_F²e_M + m_F m_I(e_MK+e_KM) + m_I²e_K)`.
+    pub magm_bdp: f64,
+    /// §4.2 single proposal: `d·m²·e_K`.
+    pub simple: f64,
+    /// Quilting: `d·L²·e_K`, `L = min(m, ⌈log₂n⌉+1)`.
+    pub quilting: f64,
+    /// Naive per-pair sampling: `n²` (unit cost per pair ≈ one ball).
+    pub naive: f64,
+}
+
+impl WorkEstimate {
+    /// Name of the cheapest non-naive sampler.
+    pub fn best_bdp(&self) -> &'static str {
+        if self.magm_bdp <= self.quilting {
+            "magm-bdp"
+        } else {
+            "quilting"
+        }
+    }
+}
+
+/// The cost model: computes [`WorkEstimate`]s and converts to seconds.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Seconds per (ball × level); None until calibrated.
+    secs_per_unit: Option<f64>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CostModel {
+    pub fn new() -> Self {
+        Self {
+            secs_per_unit: None,
+        }
+    }
+
+    /// Measure seconds-per-unit with a short micro-benchmark
+    /// (≈ a few ms; run once per process).
+    pub fn calibrate(&mut self) -> f64 {
+        use crate::model::params::InitiatorMatrix;
+        use crate::sampler::bdp::BdpSampler;
+        use crate::util::rng::{SeedableRng, Xoshiro256pp};
+        let d = 16;
+        let bdp = BdpSampler::new(&vec![InitiatorMatrix::THETA1; d]);
+        let mut rng = Xoshiro256pp::seed_from_u64(0xCA11B);
+        let balls = 200_000u64;
+        let t = std::time::Instant::now();
+        let mut acc = 0u64;
+        for _ in 0..balls {
+            let (i, j) = bdp.drop_ball(&mut rng);
+            acc = acc.wrapping_add(i ^ j);
+        }
+        std::hint::black_box(acc);
+        let secs = t.elapsed().as_secs_f64() / (balls as f64 * d as f64);
+        self.secs_per_unit = Some(secs);
+        secs
+    }
+
+    /// Expected work for every sampler given the model and one
+    /// realisation's color index. `O(occupied colors)` ⊆ `O(n)`.
+    pub fn estimate(&self, params: &MagmParams, index: &ColorIndex) -> WorkEstimate {
+        let d = params.d() as f64;
+        let stats = params.edge_stats();
+        let m_f = index.m_f();
+        let m_i = index.m_i() as f64;
+        let m = index.m_max().max(1) as f64;
+        let cap = (params.n() as f64).log2().ceil() + 1.0;
+        let layers = m.min(cap);
+        let n = params.n() as f64;
+        WorkEstimate {
+            magm_bdp: d
+                * (m_f * m_f * stats.e_m
+                    + m_f * m_i * (stats.e_mk + stats.e_km)
+                    + m_i * m_i * stats.e_k),
+            simple: d * m * m * stats.e_k,
+            quilting: d * layers * layers * stats.e_k,
+            naive: n * n,
+        }
+    }
+
+    /// Convert a unit estimate to predicted seconds (calibrating lazily).
+    pub fn predict_secs(&mut self, units: f64) -> f64 {
+        let spu = match self.secs_per_unit {
+            Some(s) => s,
+            None => self.calibrate(),
+        };
+        units * spu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::magm::MagmParams;
+    use crate::model::params::InitiatorMatrix;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn setup(mu: f64, seed: u64) -> (MagmParams, ColorIndex) {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 10, mu, 1 << 10);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = params.sample_attributes(&mut rng);
+        let idx = ColorIndex::build(&params, &a);
+        (params, idx)
+    }
+
+    #[test]
+    fn estimate_matches_proposal_rates() {
+        // The magm_bdp estimate must equal d × the compiled proposal's
+        // total rate (same formula, independent code paths).
+        let (params, idx) = setup(0.4, 1);
+        let est = CostModel::new().estimate(&params, &idx);
+        let prop = crate::sampler::proposal::ProposalSet::build(&params, &idx);
+        let want = params.d() as f64 * prop.total_rate();
+        assert!(
+            (est.magm_bdp - want).abs() / want < 1e-9,
+            "{} vs {want}",
+            est.magm_bdp
+        );
+    }
+
+    #[test]
+    fn sparse_mu_favours_magm_bdp() {
+        let (params, idx) = setup(0.25, 2);
+        let est = CostModel::new().estimate(&params, &idx);
+        assert_eq!(est.best_bdp(), "magm-bdp");
+        assert!(est.magm_bdp < est.simple, "partition beats m² bound");
+    }
+
+    #[test]
+    fn calibration_returns_sane_rate() {
+        let mut cm = CostModel::new();
+        let spu = cm.calibrate();
+        // One alias draw should cost between 0.1 ns and 10 µs.
+        assert!(spu > 1e-10 && spu < 1e-5, "spu = {spu}");
+        let pred = cm.predict_secs(1e6);
+        assert!(pred > 0.0);
+    }
+
+    #[test]
+    fn naive_work_is_n_squared() {
+        let (params, idx) = setup(0.5, 3);
+        let est = CostModel::new().estimate(&params, &idx);
+        assert_eq!(est.naive, (1u64 << 20) as f64);
+    }
+}

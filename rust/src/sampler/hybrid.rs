@@ -1,0 +1,177 @@
+//! §4.6 — combining the two algorithms.
+//!
+//! "For both algorithms, it only takes O(nd) time to estimate the
+//! expected running time. Thus one can always select the best algorithm
+//! for a given set of parameter values."
+
+use super::cost::CostModel;
+use super::magm_bdp::MagmBdpSampler;
+use super::naive::{EntryMode, NaiveMagmSampler};
+use super::quilting::QuiltingSampler;
+use super::Sampler;
+use crate::graph::MultiEdgeList;
+use crate::model::colors::ColorIndex;
+use crate::model::magm::{AttributeAssignment, MagmParams};
+use crate::util::rng::Rng;
+
+/// Which sampler the cost model picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HybridChoice {
+    MagmBdp,
+    Quilting,
+    /// For tiny models the `Θ(n²)` exact sampler beats both BDP paths.
+    Naive,
+}
+
+impl HybridChoice {
+    pub fn label(&self) -> &'static str {
+        match self {
+            HybridChoice::MagmBdp => "magm-bdp",
+            HybridChoice::Quilting => "quilting",
+            HybridChoice::Naive => "naive",
+        }
+    }
+}
+
+/// Cost-model-driven sampler selection (§4.6).
+pub struct HybridSampler<'a> {
+    params: &'a MagmParams,
+    choice: HybridChoice,
+    magm_bdp: Option<MagmBdpSampler<'a>>,
+    quilting: Option<QuiltingSampler<'a>>,
+    naive: Option<NaiveMagmSampler<'a>>,
+}
+
+impl<'a> HybridSampler<'a> {
+    /// Decide from expected work (`O(nd)`), then compile only the winner.
+    pub fn new<R: Rng + ?Sized>(
+        params: &'a MagmParams,
+        assignment: &'a AttributeAssignment,
+        rng: &mut R,
+    ) -> Self {
+        let index = ColorIndex::build(params, assignment);
+        let choice = Self::choose(params, &index);
+        let (mut magm_bdp, mut quilting, mut naive) = (None, None, None);
+        match choice {
+            HybridChoice::MagmBdp => {
+                magm_bdp = Some(MagmBdpSampler::from_index(params, index))
+            }
+            HybridChoice::Quilting => {
+                quilting = Some(QuiltingSampler::new(params, assignment, rng))
+            }
+            HybridChoice::Naive => {
+                naive = Some(NaiveMagmSampler::with_mode(
+                    params,
+                    assignment,
+                    EntryMode::Poisson, // same target distribution as the BDP paths
+                ))
+            }
+        }
+        Self {
+            params,
+            choice,
+            magm_bdp,
+            quilting,
+            naive,
+        }
+    }
+
+    /// The §4.6 decision rule, exposed for tests and the CLI's `expected`
+    /// subcommand.
+    pub fn choose(params: &MagmParams, index: &ColorIndex) -> HybridChoice {
+        let est = CostModel::new().estimate(params, index);
+        let best_bdp = est.magm_bdp.min(est.quilting);
+        if est.naive < best_bdp {
+            HybridChoice::Naive
+        } else if est.magm_bdp <= est.quilting {
+            HybridChoice::MagmBdp
+        } else {
+            HybridChoice::Quilting
+        }
+    }
+
+    pub fn choice(&self) -> HybridChoice {
+        self.choice
+    }
+
+    pub fn params(&self) -> &MagmParams {
+        self.params
+    }
+}
+
+impl Sampler for HybridSampler<'_> {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        match self.choice {
+            HybridChoice::MagmBdp => self.magm_bdp.as_ref().unwrap().sample(rng),
+            HybridChoice::Quilting => self.quilting.as_ref().unwrap().sample(rng),
+            HybridChoice::Naive => self.naive.as_ref().unwrap().sample(rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::InitiatorMatrix;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn assignment(params: &MagmParams, seed: u64) -> AttributeAssignment {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        params.sample_attributes(&mut rng)
+    }
+
+    #[test]
+    fn tiny_model_picks_naive() {
+        // n = 16: n² = 256 pairs ≪ any BDP constant work.
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 4, 0.5, 16);
+        let a = assignment(&params, 1);
+        let idx = ColorIndex::build(&params, &a);
+        assert_eq!(HybridSampler::choose(&params, &idx), HybridChoice::Naive);
+    }
+
+    #[test]
+    fn sparse_mu_picks_magm_bdp() {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 12, 0.3, 1 << 12);
+        let a = assignment(&params, 2);
+        let idx = ColorIndex::build(&params, &a);
+        assert_eq!(HybridSampler::choose(&params, &idx), HybridChoice::MagmBdp);
+    }
+
+    #[test]
+    fn hybrid_samples_with_picked_backend() {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 8, 0.5, 1 << 8);
+        let a = assignment(&params, 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let h = HybridSampler::new(&params, &a, &mut rng);
+        let g = h.sample(&mut rng);
+        assert_eq!(g.n(), 1 << 8);
+        assert_eq!(h.name(), "hybrid");
+        assert!(!h.choice().label().is_empty());
+    }
+
+    #[test]
+    fn mean_edges_invariant_across_choices() {
+        // Whatever the hybrid picks, the target distribution is the same
+        // Poisson field: mean multi-edge counts agree with Algorithm 2.
+        let params = MagmParams::replicated(InitiatorMatrix::THETA2, 6, 0.5, 64);
+        let a = assignment(&params, 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let h = HybridSampler::new(&params, &a, &mut rng);
+        let b = MagmBdpSampler::new(&params, &a);
+        let reps = 30;
+        let mean_h: f64 = (0..reps)
+            .map(|_| h.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let mean_b: f64 = (0..reps)
+            .map(|_| b.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (mean_b.max(1.0) / reps as f64).sqrt();
+        assert!((mean_h - mean_b).abs() < 8.0 * se, "{mean_h} vs {mean_b}");
+    }
+}

@@ -1,0 +1,394 @@
+//! **Algorithm 2 — the paper's MAGM sampler.**
+//!
+//! Pipeline per proposal component `AB ∈ {FF, FI, IF, II}`:
+//!
+//! 1. *Propose*: the component's BDP drops `Poisson(Λ'^(AB) total)` balls
+//!    on the color grid (`O(d)` each).
+//! 2. *Thin*: each ball at `(c, c')` survives with probability
+//!    `Λ_cc' / Λ'^(AB)_cc'` — the accept-reject correction that turns the
+//!    proposal Poisson field into the target `B` of Eq. 11/12.
+//! 3. *Materialise*: a surviving ball becomes the edge `(i, j)` with `i`
+//!    uniform in `V_c` and `j` uniform in `V_{c'}` — the `B → A`
+//!    conversion of §4.1.
+//!
+//! The thinning step is abstracted behind [`AcceptBackend`] so it can run
+//! either natively (pure Rust, the Figure 5/6 benchmark path) or batched
+//! through the AOT-compiled Pallas kernel on the XLA runtime
+//! (`crate::runtime::accept::XlaAccept`, the end-to-end service path).
+
+use super::proposal::{Component, ProposalSet};
+use super::Sampler;
+use crate::graph::MultiEdgeList;
+use crate::model::colors::ColorIndex;
+use crate::model::magm::{AttributeAssignment, MagmParams};
+use crate::util::rng::{split_streams, Rng, SeedableRng, Xoshiro256pp};
+
+/// Batched evaluation of acceptance probabilities (step 2 above).
+pub trait AcceptBackend {
+    /// For each proposed `(c, c')`, write `Λ_cc' / Λ'^(AB)_cc'` into
+    /// `out` (cleared first).
+    fn accept_probs(
+        &mut self,
+        proposal: &ProposalSet,
+        component: Component,
+        pairs: &[(u64, u64)],
+        out: &mut Vec<f64>,
+    );
+
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust acceptance evaluation via the factorised endpoint lookup.
+#[derive(Debug, Default, Clone)]
+pub struct NativeAccept;
+
+impl AcceptBackend for NativeAccept {
+    fn accept_probs(
+        &mut self,
+        proposal: &ProposalSet,
+        component: Component,
+        pairs: &[(u64, u64)],
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.extend(
+            pairs
+                .iter()
+                .map(|&(c, cp)| proposal.accept_prob(component, c, cp)),
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The compiled Algorithm 2 sampler for one attribute realisation.
+#[derive(Clone, Debug)]
+pub struct MagmBdpSampler<'a> {
+    params: &'a MagmParams,
+    index: ColorIndex,
+    proposal: ProposalSet,
+}
+
+impl<'a> MagmBdpSampler<'a> {
+    /// Build from a model and one attribute realisation.
+    pub fn new(params: &'a MagmParams, assignment: &AttributeAssignment) -> Self {
+        assert!(params.n() <= u32::MAX as u64, "node ids must fit u32");
+        let index = ColorIndex::build(params, assignment);
+        let proposal = ProposalSet::build(params, &index);
+        Self {
+            params,
+            index,
+            proposal,
+        }
+    }
+
+    /// Reuse a prebuilt color index.
+    pub fn from_index(params: &'a MagmParams, index: ColorIndex) -> Self {
+        let proposal = ProposalSet::build(params, &index);
+        Self {
+            params,
+            index,
+            proposal,
+        }
+    }
+
+    pub fn proposal(&self) -> &ProposalSet {
+        &self.proposal
+    }
+
+    pub fn index(&self) -> &ColorIndex {
+        &self.index
+    }
+
+    pub fn params(&self) -> &MagmParams {
+        self.params
+    }
+
+    /// Expected proposals per realisation (the §4.5 work bound).
+    pub fn expected_proposals(&self) -> f64 {
+        self.proposal.total_rate()
+    }
+
+    /// Streaming sampler: per-ball native accept, no intermediate
+    /// buffers. Returns `(graph, proposed, accepted)`.
+    pub fn sample_counted<R: Rng + ?Sized>(&self, rng: &mut R) -> (MultiEdgeList, u64, u64) {
+        let mut g = MultiEdgeList::new(self.params.n());
+        let mut proposed = 0u64;
+        let mut accepted = 0u64;
+        for comp in Component::ALL {
+            let bdp = self.proposal.bdp(comp);
+            let balls = bdp.draw_ball_count(rng);
+            proposed += balls;
+            for _ in 0..balls {
+                let (c, cp) = bdp.drop_ball(rng);
+                let p = self.proposal.accept_prob(comp, c, cp);
+                if p > 0.0 && rng.next_f64() < p {
+                    // p > 0 implies both color classes are occupied.
+                    let i = self.index.sample_node(c, rng).expect("occupied");
+                    let j = self.index.sample_node(cp, rng).expect("occupied");
+                    g.push(i, j);
+                    accepted += 1;
+                }
+            }
+        }
+        (g, proposed, accepted)
+    }
+
+    /// Batched sampler: proposals are buffered in chunks of `batch` and
+    /// scored through an [`AcceptBackend`] (the XLA path). Statistically
+    /// identical to [`sample_counted`]; RNG schedule differs.
+    pub fn sample_batched<R: Rng + ?Sized>(
+        &self,
+        rng: &mut R,
+        backend: &mut dyn AcceptBackend,
+        batch: usize,
+    ) -> (MultiEdgeList, u64, u64) {
+        assert!(batch > 0);
+        let mut g = MultiEdgeList::new(self.params.n());
+        let mut proposed = 0u64;
+        let mut accepted = 0u64;
+        let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(batch);
+        let mut probs: Vec<f64> = Vec::with_capacity(batch);
+        for comp in Component::ALL {
+            let bdp = self.proposal.bdp(comp);
+            let mut remaining = bdp.draw_ball_count(rng);
+            proposed += remaining;
+            while remaining > 0 {
+                let take = remaining.min(batch as u64);
+                pairs.clear();
+                bdp.drop_into(rng, take, &mut pairs);
+                backend.accept_probs(&self.proposal, comp, &pairs, &mut probs);
+                debug_assert_eq!(probs.len(), pairs.len());
+                for (&(c, cp), &p) in pairs.iter().zip(probs.iter()) {
+                    if p > 0.0 && rng.next_f64() < p {
+                        let i = self.index.sample_node(c, rng).expect("occupied");
+                        let j = self.index.sample_node(cp, rng).expect("occupied");
+                        g.push(i, j);
+                        accepted += 1;
+                    }
+                }
+                remaining -= take;
+            }
+        }
+        (g, proposed, accepted)
+    }
+
+    /// Streaming sampler into an [`crate::sampler::sink::EdgeSink`] —
+    /// identical RNG schedule to [`sample_counted`](Self::sample_counted)
+    /// (same seed ⇒ same edges), but edges flow to the sink instead of
+    /// accumulating in memory. Returns `(proposed, accepted)`.
+    pub fn sample_into<R: Rng + ?Sized>(
+        &self,
+        rng: &mut R,
+        sink: &mut dyn crate::sampler::sink::EdgeSink,
+    ) -> (u64, u64) {
+        let mut proposed = 0u64;
+        let mut accepted = 0u64;
+        for comp in Component::ALL {
+            let bdp = self.proposal.bdp(comp);
+            let balls = bdp.draw_ball_count(rng);
+            proposed += balls;
+            for _ in 0..balls {
+                let (c, cp) = bdp.drop_ball(rng);
+                let p = self.proposal.accept_prob(comp, c, cp);
+                if p > 0.0 && rng.next_f64() < p {
+                    let i = self.index.sample_node(c, rng).expect("occupied");
+                    let j = self.index.sample_node(cp, rng).expect("occupied");
+                    sink.push(i, j);
+                    accepted += 1;
+                }
+            }
+        }
+        sink.finish();
+        (proposed, accepted)
+    }
+
+    /// Multi-threaded sampler: the per-component Poisson ball count is
+    /// drawn once from `seed`'s root stream, then split across `threads`
+    /// shards with independent RNG streams. Deterministic for a fixed
+    /// `(seed, threads)` pair.
+    pub fn sample_parallel(&self, seed: u64, threads: usize) -> MultiEdgeList {
+        let threads = threads.max(1);
+        let mut root = Xoshiro256pp::seed_from_u64(seed);
+        // Component ball counts from the root stream.
+        let counts: Vec<u64> = Component::ALL
+            .iter()
+            .map(|&c| self.proposal.bdp(c).draw_ball_count(&mut root))
+            .collect();
+        let shard_rngs: Vec<Xoshiro256pp> = split_streams(seed ^ 0x9E3779B97F4A7C15, threads);
+        let shards = crate::util::threadpool::scoped_chunks(threads, threads, |t, _| {
+            let mut rng = shard_rngs[t].clone();
+            let rng = &mut rng;
+            let mut g = MultiEdgeList::new(self.params.n());
+            for (ci, &comp) in Component::ALL.iter().enumerate() {
+                let total = counts[ci];
+                // Shard t handles ⌈total/threads⌉-sized slice t.
+                let per = total.div_ceil(threads as u64);
+                let lo = (t as u64 * per).min(total);
+                let hi = ((t as u64 + 1) * per).min(total);
+                let bdp = self.proposal.bdp(comp);
+                for _ in lo..hi {
+                    let (c, cp) = bdp.drop_ball(rng);
+                    let p = self.proposal.accept_prob(comp, c, cp);
+                    if p > 0.0 && rng.next_f64() < p {
+                        let i = self.index.sample_node(c, rng).expect("occupied");
+                        let j = self.index.sample_node(cp, rng).expect("occupied");
+                        g.push(i, j);
+                    }
+                }
+            }
+            g
+        });
+        let mut out = MultiEdgeList::new(self.params.n());
+        for shard in shards {
+            out.merge(shard);
+        }
+        out
+    }
+}
+
+impl Sampler for MagmBdpSampler<'_> {
+    fn name(&self) -> &'static str {
+        "magm-bdp"
+    }
+
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        self.sample_counted(rng).0
+    }
+
+    fn sample_with_report(&self, rng: &mut dyn Rng) -> super::SampleReport {
+        let t = std::time::Instant::now();
+        let (graph, proposed, accepted) = self.sample_counted(rng);
+        let mut r = super::SampleReport::new(self.name(), graph);
+        r.proposed = proposed;
+        r.accepted = accepted;
+        r.wall = t.elapsed();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::InitiatorMatrix;
+
+    fn setup(
+        d: usize,
+        mu: f64,
+        n: u64,
+        seed: u64,
+    ) -> (MagmParams, AttributeAssignment) {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = params.sample_attributes(&mut rng);
+        (params, a)
+    }
+
+    #[test]
+    fn edge_count_matches_conditional_expectation() {
+        // Given the colors, E[|E|] = Σ_cc' |V_c||V_c'| Γ_cc' (multi-graph).
+        let (params, a) = setup(5, 0.45, 200, 1);
+        let s = MagmBdpSampler::new(&params, &a);
+        let idx = s.index();
+        let mut want = 0.0;
+        for (c, _) in idx.iter() {
+            for (cp, _) in idx.iter() {
+                want += idx.count(c) as f64
+                    * idx.count(cp) as f64
+                    * params.stack().kron_entry(c, cp);
+            }
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let reps = 40;
+        let mean: f64 = (0..reps)
+            .map(|_| s.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (want / reps as f64).sqrt();
+        assert!(
+            (mean - want).abs() < 6.0 * se,
+            "mean {mean} want {want} (se {se})"
+        );
+    }
+
+    #[test]
+    fn batched_matches_streaming_statistically() {
+        let (params, a) = setup(6, 0.6, 150, 3);
+        let s = MagmBdpSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let reps = 30;
+        let mut native = NativeAccept;
+        let mean_stream: f64 = (0..reps)
+            .map(|_| s.sample_counted(&mut rng).0.num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let mean_batch: f64 = (0..reps)
+            .map(|_| s.sample_batched(&mut rng, &mut native, 64).0.num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (mean_stream.max(1.0) / reps as f64).sqrt();
+        assert!(
+            (mean_stream - mean_batch).abs() < 8.0 * se,
+            "stream {mean_stream} vs batch {mean_batch}"
+        );
+    }
+
+    #[test]
+    fn acceptance_rate_in_unit_interval_and_reported() {
+        let (params, a) = setup(6, 0.5, 100, 5);
+        let s = MagmBdpSampler::new(&params, &a);
+        let mut rng: Xoshiro256pp = SeedableRng::seed_from_u64(6);
+        let report = s.sample_with_report(&mut rng);
+        assert!(report.proposed >= report.accepted);
+        assert_eq!(report.accepted as usize, report.graph.num_edges());
+        assert!(report.acceptance_rate() <= 1.0);
+    }
+
+    #[test]
+    fn all_edges_are_valid_nodes() {
+        let (params, a) = setup(7, 0.3, 500, 7);
+        let s = MagmBdpSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let g = s.sample(&mut rng);
+        for &(i, j) in g.edges() {
+            assert!((i as u64) < params.n() && (j as u64) < params.n());
+        }
+    }
+
+    #[test]
+    fn parallel_deterministic_and_consistent() {
+        let (params, a) = setup(6, 0.5, 300, 9);
+        let s = MagmBdpSampler::new(&params, &a);
+        let g1 = s.sample_parallel(123, 4);
+        let g2 = s.sample_parallel(123, 4);
+        assert_eq!(g1.edges(), g2.edges(), "same seed+threads ⇒ same graph");
+
+        // Mean edge count agrees with the sequential path.
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let reps = 20;
+        let seq: f64 = (0..reps)
+            .map(|_| s.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let par: f64 = (0..reps)
+            .map(|r| s.sample_parallel(1000 + r, 4).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (seq.max(1.0) / reps as f64).sqrt();
+        assert!((seq - par).abs() < 8.0 * se, "seq {seq} par {par}");
+    }
+
+    #[test]
+    fn expected_proposals_matches_component_sum() {
+        let (params, a) = setup(5, 0.5, 64, 11);
+        let s = MagmBdpSampler::new(&params, &a);
+        let sum: f64 = Component::ALL
+            .iter()
+            .map(|&c| s.proposal().bdp(c).total_rate())
+            .sum();
+        assert!((s.expected_proposals() - sum).abs() < 1e-9);
+    }
+}

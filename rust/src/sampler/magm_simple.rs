@@ -1,0 +1,165 @@
+//! The §4.2 "simple illustrative proposal" — the single-BDP `m²` bound.
+//!
+//! `Θ'^(k) = m^(2/d) Θ^(k)` (Eq. 15) gives `Λ'_cc' = m² Γ_cc'` which
+//! dominates `Λ_cc' = |V_c||V_c'| Γ_cc'` since `|V_c| ≤ m := max_c |V_c|`
+//! (Eq. 14/16). Acceptance is `(|V_c|/m)(|V_c'|/m)`.
+//!
+//! Kept as an ablation baseline: it is exactly Algorithm 2 with the
+//! partition removed, so benchmarking it against [`MagmBdpSampler`]
+//! isolates the value of the frequent/infrequent split (§4.3–4.4).
+
+use super::bdp::BdpSampler;
+use super::Sampler;
+use crate::graph::MultiEdgeList;
+use crate::model::colors::ColorIndex;
+use crate::model::magm::{AttributeAssignment, MagmParams};
+use crate::model::params::InitiatorMatrix;
+use crate::util::rng::Rng;
+
+/// Single-proposal accept-reject MAGM sampler (§4.2).
+#[derive(Clone, Debug)]
+pub struct MagmSimpleSampler<'a> {
+    params: &'a MagmParams,
+    index: ColorIndex,
+    bdp: BdpSampler,
+    m: u64,
+}
+
+impl<'a> MagmSimpleSampler<'a> {
+    pub fn new(params: &'a MagmParams, assignment: &AttributeAssignment) -> Self {
+        assert!(params.n() <= u32::MAX as u64, "node ids must fit u32");
+        let index = ColorIndex::build(params, assignment);
+        let m = index.m_max().max(1);
+        let d = params.d();
+        let scale = (m as f64).powf(2.0 / d as f64);
+        let stack: Vec<InitiatorMatrix> = params
+            .stack()
+            .thetas()
+            .iter()
+            .map(|t| t.scale(scale))
+            .collect();
+        Self {
+            params,
+            index,
+            bdp: BdpSampler::new(&stack),
+            m,
+        }
+    }
+
+    /// The Eq. 14 multiplicity bound `m = max_c |V_c|`.
+    pub fn m(&self) -> u64 {
+        self.m
+    }
+
+    /// Expected proposals `m² e_K` (§4.2 complexity analysis).
+    pub fn expected_proposals(&self) -> f64 {
+        self.bdp.total_rate()
+    }
+
+    /// Streaming sample with work accounting.
+    pub fn sample_counted<R: Rng + ?Sized>(&self, rng: &mut R) -> (MultiEdgeList, u64, u64) {
+        let mut g = MultiEdgeList::new(self.params.n());
+        let m2 = (self.m * self.m) as f64;
+        let balls = self.bdp.draw_ball_count(rng);
+        let mut accepted = 0u64;
+        for _ in 0..balls {
+            let (c, cp) = self.bdp.drop_ball(rng);
+            let p = self.index.count(c) as f64 * self.index.count(cp) as f64 / m2;
+            if p > 0.0 && rng.next_f64() < p {
+                let i = self.index.sample_node(c, rng).expect("occupied");
+                let j = self.index.sample_node(cp, rng).expect("occupied");
+                g.push(i, j);
+                accepted += 1;
+            }
+        }
+        (g, balls, accepted)
+    }
+}
+
+impl Sampler for MagmSimpleSampler<'_> {
+    fn name(&self) -> &'static str {
+        "magm-simple"
+    }
+
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        self.sample_counted(rng).0
+    }
+
+    fn sample_with_report(&self, rng: &mut dyn Rng) -> super::SampleReport {
+        let t = std::time::Instant::now();
+        let (graph, proposed, accepted) = self.sample_counted(rng);
+        let mut r = super::SampleReport::new(self.name(), graph);
+        r.proposed = proposed;
+        r.accepted = accepted;
+        r.wall = t.elapsed();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn setup(d: usize, mu: f64, n: u64, seed: u64) -> (MagmParams, AttributeAssignment) {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = params.sample_attributes(&mut rng);
+        (params, a)
+    }
+
+    #[test]
+    fn expected_proposals_is_m2_ek() {
+        let (params, a) = setup(6, 0.5, 64, 1);
+        let s = MagmSimpleSampler::new(&params, &a);
+        let m2 = (s.m() * s.m()) as f64;
+        let want = m2 * params.edge_stats().e_k;
+        assert!((s.expected_proposals() - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn mean_edges_matches_magm_bdp() {
+        // Both samplers target the same distribution; their mean edge
+        // counts must agree (they differ only in proposal efficiency).
+        let (params, a) = setup(5, 0.4, 100, 2);
+        let simple = MagmSimpleSampler::new(&params, &a);
+        let full = super::super::magm_bdp::MagmBdpSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let reps = 30;
+        let mean_s: f64 = (0..reps)
+            .map(|_| simple.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let mean_f: f64 = (0..reps)
+            .map(|_| full.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (mean_f.max(1.0) / reps as f64).sqrt();
+        assert!((mean_s - mean_f).abs() < 8.0 * se, "{mean_s} vs {mean_f}");
+    }
+
+    #[test]
+    fn partition_reduces_proposals_off_half_mu() {
+        // The whole point of §4.3-4.4: for μ ≠ 0.5 the four-component
+        // proposal does (usually much) less work than the m² bound.
+        let (params, a) = setup(10, 0.25, 1 << 10, 4);
+        let simple = MagmSimpleSampler::new(&params, &a);
+        let full = super::super::magm_bdp::MagmBdpSampler::new(&params, &a);
+        assert!(
+            full.expected_proposals() < simple.expected_proposals(),
+            "partitioned {} !< simple {}",
+            full.expected_proposals(),
+            simple.expected_proposals()
+        );
+    }
+
+    #[test]
+    fn reports_work() {
+        let (params, a) = setup(5, 0.5, 50, 5);
+        let s = MagmSimpleSampler::new(&params, &a);
+        let mut rng: Xoshiro256pp = SeedableRng::seed_from_u64(6);
+        let r = s.sample_with_report(&mut rng);
+        assert_eq!(r.sampler, "magm-simple");
+        assert!(r.accepted <= r.proposed);
+    }
+}

@@ -1,0 +1,95 @@
+//! Graph samplers.
+//!
+//! * [`naive`] — exact `Θ(n²)` per-pair sampling (Bernoulli for the true
+//!   models, Poisson for the BDP approximations' ground truth).
+//! * [`bdp`] — the ball-dropping process (Algorithm 1): `O(d)` per ball.
+//! * [`kpgm_bdp`] — approximate KPGM sampling via BDP (Leskovec et al.).
+//! * [`proposal`] — the Eq. 21 four-component proposal construction.
+//! * [`magm_bdp`] — **the paper's contribution** (Algorithm 2): BDP
+//!   proposals + accept-reject thinning + color→node materialisation.
+//! * [`magm_simple`] — the §4.2 single-proposal `m²` ablation baseline.
+//! * [`quilting`] — the Yun & Vishwanathan (2012) baseline.
+//! * [`hybrid`] — §4.6 cost-model algorithm selection.
+//! * [`cost`] — `O(nd)` expected-work estimates for all of the above.
+
+pub mod bdp;
+pub mod cost;
+pub mod hybrid;
+pub mod kpgm_bdp;
+pub mod magm_bdp;
+pub mod magm_simple;
+pub mod naive;
+pub mod proposal;
+pub mod quilting;
+pub mod sink;
+pub mod undirected;
+
+pub use bdp::BdpSampler;
+pub use cost::CostModel;
+pub use hybrid::{HybridChoice, HybridSampler};
+pub use kpgm_bdp::KpgmBdpSampler;
+pub use magm_bdp::{AcceptBackend, MagmBdpSampler, NativeAccept};
+pub use magm_simple::MagmSimpleSampler;
+pub use naive::{NaiveKpgmSampler, NaiveMagmSampler};
+pub use proposal::{Component, ProposalSet};
+pub use quilting::QuiltingSampler;
+pub use sink::{CollectSink, CountSink, EdgeSink, TsvSink};
+pub use undirected::UndirectedMagmSampler;
+
+use crate::graph::MultiEdgeList;
+use crate::util::rng::Rng;
+
+/// Common interface over all graph samplers.
+///
+/// Implementations are deterministic given the RNG state; parallel
+/// variants live on the concrete types (they need to split streams).
+pub trait Sampler {
+    /// Short identifier used in reports and benches.
+    fn name(&self) -> &'static str;
+
+    /// Draw one multi-graph sample.
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList;
+
+    /// Draw a sample together with work accounting.
+    fn sample_with_report(&self, rng: &mut dyn Rng) -> SampleReport {
+        let t = std::time::Instant::now();
+        let graph = self.sample(rng);
+        let mut report = SampleReport::new(self.name(), graph);
+        report.wall = t.elapsed();
+        report
+    }
+}
+
+/// Work accounting emitted by [`Sampler::sample_with_report`].
+#[derive(Debug)]
+pub struct SampleReport {
+    pub sampler: &'static str,
+    pub graph: MultiEdgeList,
+    /// Balls proposed by the underlying BDPs (0 for naive samplers).
+    pub proposed: u64,
+    /// Proposals surviving the accept-reject step (= edges for BDP paths).
+    pub accepted: u64,
+    pub wall: std::time::Duration,
+}
+
+impl SampleReport {
+    pub fn new(sampler: &'static str, graph: MultiEdgeList) -> Self {
+        let accepted = graph.num_edges() as u64;
+        Self {
+            sampler,
+            graph,
+            proposed: accepted,
+            accepted,
+            wall: std::time::Duration::ZERO,
+        }
+    }
+
+    /// Fraction of proposals accepted (1.0 when nothing was rejected).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Exact `Θ(n²)` per-pair samplers — ground truth for everything else.
+//!
+//! Two entry modes:
+//! * **Bernoulli** — the true KPGM/MAGM distributions (simple graphs).
+//! * **Poisson** — `A_ij ~ Poisson(Γ_ij)`: the *exact* distribution the
+//!   BDP samples (Theorem 2), used by the distributional tests to compare
+//!   BDP output against per-pair ground truth.
+
+use super::Sampler;
+use crate::graph::MultiEdgeList;
+use crate::model::kpgm::KpgmParams;
+use crate::model::magm::{AttributeAssignment, MagmParams};
+use crate::util::rng::dist::poisson;
+use crate::util::rng::Rng;
+
+/// Per-entry distribution for the naive samplers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryMode {
+    /// `A_ij ~ Bernoulli(p_ij)` — the model itself.
+    Bernoulli,
+    /// `A_ij ~ Poisson(p_ij)` — the BDP's target (Theorem 2).
+    Poisson,
+}
+
+/// Exact KPGM sampler.
+#[derive(Clone, Debug)]
+pub struct NaiveKpgmSampler<'a> {
+    params: &'a KpgmParams,
+    mode: EntryMode,
+}
+
+impl<'a> NaiveKpgmSampler<'a> {
+    pub fn new(params: &'a KpgmParams) -> Self {
+        Self {
+            params,
+            mode: EntryMode::Bernoulli,
+        }
+    }
+
+    pub fn with_mode(params: &'a KpgmParams, mode: EntryMode) -> Self {
+        Self { params, mode }
+    }
+}
+
+impl Sampler for NaiveKpgmSampler<'_> {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            EntryMode::Bernoulli => "naive-kpgm",
+            EntryMode::Poisson => "naive-kpgm-poisson",
+        }
+    }
+
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        let n = self.params.n();
+        assert!(n <= 1 << 26, "naive sampler is Θ(n²); refusing n > 2^26");
+        let mut g = MultiEdgeList::new(n);
+        for i in 0..n {
+            for j in 0..n {
+                let p = self.params.gamma(i, j);
+                match self.mode {
+                    EntryMode::Bernoulli => {
+                        if rng.bernoulli(p) {
+                            g.push(i as u32, j as u32);
+                        }
+                    }
+                    EntryMode::Poisson => {
+                        for _ in 0..poisson(rng, p) {
+                            g.push(i as u32, j as u32);
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+}
+
+/// Exact MAGM sampler over a fixed attribute assignment.
+#[derive(Clone, Debug)]
+pub struct NaiveMagmSampler<'a> {
+    params: &'a MagmParams,
+    assignment: &'a AttributeAssignment,
+    mode: EntryMode,
+}
+
+impl<'a> NaiveMagmSampler<'a> {
+    pub fn new(params: &'a MagmParams, assignment: &'a AttributeAssignment) -> Self {
+        Self {
+            params,
+            assignment,
+            mode: EntryMode::Bernoulli,
+        }
+    }
+
+    pub fn with_mode(
+        params: &'a MagmParams,
+        assignment: &'a AttributeAssignment,
+        mode: EntryMode,
+    ) -> Self {
+        Self {
+            params,
+            assignment,
+            mode,
+        }
+    }
+}
+
+impl Sampler for NaiveMagmSampler<'_> {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            EntryMode::Bernoulli => "naive-magm",
+            EntryMode::Poisson => "naive-magm-poisson",
+        }
+    }
+
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        let n = self.params.n();
+        assert!(n <= 1 << 26, "naive sampler is Θ(n²); refusing n > 2^26");
+        let mut g = MultiEdgeList::new(n);
+        // Cache Γ entries per color pair: with few occupied colors the
+        // Kronecker product is recomputed vastly fewer than n² times.
+        let mut cache: std::collections::HashMap<(u64, u64), f64> = std::collections::HashMap::new();
+        let stack = self.params.stack();
+        for i in 0..n as usize {
+            let ci = self.assignment.color(i);
+            for j in 0..n as usize {
+                let cj = self.assignment.color(j);
+                let p = *cache
+                    .entry((ci, cj))
+                    .or_insert_with(|| stack.kron_entry(ci, cj));
+                match self.mode {
+                    EntryMode::Bernoulli => {
+                        if rng.bernoulli(p) {
+                            g.push(i as u32, j as u32);
+                        }
+                    }
+                    EntryMode::Poisson => {
+                        for _ in 0..poisson(rng, p) {
+                            g.push(i as u32, j as u32);
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::InitiatorMatrix;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    #[test]
+    fn kpgm_edge_count_matches_expectation() {
+        let params = KpgmParams::replicated(InitiatorMatrix::FIG1, 6);
+        let s = NaiveKpgmSampler::new(&params);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let reps = 60;
+        let mean: f64 = (0..reps)
+            .map(|_| s.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let want = params.expected_edges();
+        // Var[|E|] ≤ e_K ⇒ SE ≤ sqrt(e_K / reps).
+        let se = (want / reps as f64).sqrt();
+        assert!((mean - want).abs() < 6.0 * se, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn kpgm_bernoulli_yields_simple_graph() {
+        let params = KpgmParams::replicated(InitiatorMatrix::THETA1, 5);
+        let s = NaiveKpgmSampler::new(&params);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let g = s.sample(&mut rng);
+        let m = g.num_edges();
+        assert_eq!(g.into_simple().num_edges(), m, "Bernoulli must not duplicate");
+    }
+
+    #[test]
+    fn magm_edge_count_matches_conditional_expectation() {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA2, 4, 0.4, 50);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let a = params.sample_attributes(&mut rng);
+        // Conditional expectation given colors: Σ_ij Ψ_ij.
+        let want: f64 = (0..50usize)
+            .flat_map(|i| (0..50usize).map(move |j| (i, j)))
+            .map(|(i, j)| params.psi(&a, i, j))
+            .sum();
+        let s = NaiveMagmSampler::new(&params, &a);
+        let reps = 60;
+        let mean: f64 = (0..reps)
+            .map(|_| s.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (want / reps as f64).sqrt();
+        assert!((mean - want).abs() < 6.0 * se, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn poisson_mode_can_duplicate_and_has_higher_count_variance() {
+        // With rates near 1 the Poisson mode produces multi-edges.
+        let params = KpgmParams::replicated(InitiatorMatrix::new(0.95, 0.9, 0.9, 0.99), 3);
+        let s = NaiveKpgmSampler::with_mode(&params, EntryMode::Poisson);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut saw_dup = false;
+        for _ in 0..20 {
+            let g = s.sample(&mut rng);
+            let m = g.num_edges();
+            if g.into_simple().num_edges() < m {
+                saw_dup = true;
+                break;
+            }
+        }
+        assert!(saw_dup, "Poisson mode should duplicate at high rates");
+    }
+
+    #[test]
+    fn names_distinguish_modes() {
+        let params = KpgmParams::replicated(InitiatorMatrix::THETA1, 3);
+        assert_eq!(NaiveKpgmSampler::new(&params).name(), "naive-kpgm");
+        assert_eq!(
+            NaiveKpgmSampler::with_mode(&params, EntryMode::Poisson).name(),
+            "naive-kpgm-poisson"
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Undirected MAGM sampling — the paper's §2 note ("most of our ideas
+//! can be straightforwardly applied to the case of undirected graphs"),
+//! made concrete.
+//!
+//! For a symmetric `Θ̃` the directed Poisson field has `Γ_ij = Γ_ji`.
+//! Folding every directed ball `(i, j)` onto the unordered pair
+//! `{min, max}` superposes the two streams into `Poisson(2Γ_ij)` for
+//! `i ≠ j` (and leaves loops at `Poisson(Γ_ii)`), so thinning folded
+//! off-diagonal balls by `1/2` recovers exactly `Poisson(Γ_ij)` per
+//! unordered pair — the undirected analogue of Theorem 2.
+
+use super::magm_bdp::MagmBdpSampler;
+use super::Sampler;
+use crate::graph::MultiEdgeList;
+use crate::model::magm::{AttributeAssignment, MagmParams};
+use crate::util::rng::Rng;
+
+/// Undirected Algorithm 2: wraps the directed sampler with the
+/// fold-and-halve correction. Requires a symmetric parameter stack.
+pub struct UndirectedMagmSampler<'a> {
+    inner: MagmBdpSampler<'a>,
+}
+
+impl<'a> UndirectedMagmSampler<'a> {
+    pub fn new(params: &'a MagmParams, assignment: &AttributeAssignment) -> Self {
+        for k in 0..params.d() {
+            let t = params.stack().theta(k);
+            assert!(
+                (t.get(0, 1) - t.get(1, 0)).abs() < 1e-12,
+                "undirected sampling requires symmetric theta (level {k})"
+            );
+        }
+        Self {
+            inner: MagmBdpSampler::new(params, assignment),
+        }
+    }
+
+    /// The wrapped directed sampler (for diagnostics).
+    pub fn inner(&self) -> &MagmBdpSampler<'a> {
+        &self.inner
+    }
+
+    /// Sample an undirected multi-graph: edges are stored with
+    /// `src ≤ dst`; each unordered pair `{i, j}`, `i ≠ j`, carries
+    /// `Poisson(Γ_{c_i c_j})` multiplicity, loops `Poisson(Γ_{c_i c_i})`.
+    pub fn sample_undirected<R: Rng + ?Sized>(&self, rng: &mut R) -> MultiEdgeList {
+        let directed = self.inner.sample_counted(rng).0;
+        let mut g = MultiEdgeList::with_capacity(directed.n(), directed.num_edges() / 2 + 1);
+        for &(i, j) in directed.edges() {
+            if i == j {
+                // Diagonal: both orientations coincide; keep every ball.
+                g.push(i, j);
+            } else if rng.bernoulli(0.5) {
+                // Fold + thin by 1/2: Poisson(2Γ) → Poisson(Γ).
+                g.push(i.min(j), i.max(j));
+            }
+        }
+        g
+    }
+}
+
+impl Sampler for UndirectedMagmSampler<'_> {
+    fn name(&self) -> &'static str {
+        "magm-bdp-undirected"
+    }
+
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        self.sample_undirected(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::InitiatorMatrix;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn setup(seed: u64) -> (MagmParams, AttributeAssignment) {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 5, 0.4, 80);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = params.sample_attributes(&mut rng);
+        (params, a)
+    }
+
+    #[test]
+    fn edges_are_canonically_ordered() {
+        let (params, a) = setup(1);
+        let s = UndirectedMagmSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let g = s.sample_undirected(&mut rng);
+        for &(i, j) in g.edges() {
+            assert!(i <= j);
+        }
+    }
+
+    #[test]
+    fn pair_rate_matches_gamma() {
+        // Conditional mean multiplicity of {i, j} (i≠j) must be Γ_{c_i c_j}.
+        let (params, a) = setup(3);
+        let s = UndirectedMagmSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        // Pick the unordered pair with the largest rate for a strong test.
+        let (mut bi, mut bj, mut best) = (0usize, 1usize, -1.0f64);
+        for i in 0..80usize {
+            for j in (i + 1)..80usize {
+                let r = params.psi(&a, i, j);
+                if r > best {
+                    best = r;
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        let reps = 2500;
+        let mut total = 0usize;
+        for _ in 0..reps {
+            let g = s.sample_undirected(&mut rng);
+            total += g
+                .edges()
+                .iter()
+                .filter(|&&(x, y)| (x as usize, y as usize) == (bi, bj))
+                .count();
+        }
+        let mean = total as f64 / reps as f64;
+        let se = (best / reps as f64).sqrt();
+        assert!((mean - best).abs() < 6.0 * se, "mean {mean} want {best}");
+    }
+
+    #[test]
+    fn total_edges_half_of_directed_plus_diagonal() {
+        let (params, a) = setup(5);
+        let undirected = UndirectedMagmSampler::new(&params, &a);
+        let directed = MagmBdpSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let reps = 80;
+        let mu: f64 = (0..reps)
+            .map(|_| undirected.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let md: f64 = (0..reps)
+            .map(|_| directed.sample(&mut rng).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        // E[undirected] = (E[directed] + E[diagonal]) / 2 ≈ E[directed]/2.
+        let se = (md.max(1.0) / reps as f64).sqrt() * 3.0;
+        assert!(
+            (mu - md / 2.0).abs() < 6.0 * se + md * 0.02,
+            "undirected {mu} vs directed/2 {}",
+            md / 2.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn asymmetric_theta_rejected() {
+        let params = MagmParams::replicated(InitiatorMatrix::new(0.2, 0.7, 0.3, 0.9), 3, 0.5, 8);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let a = params.sample_attributes(&mut rng);
+        let _ = UndirectedMagmSampler::new(&params, &a);
+    }
+}

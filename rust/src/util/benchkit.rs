@@ -1,0 +1,270 @@
+//! Benchmark harness (replaces `criterion`).
+//!
+//! Measures wall-clock time of a closure with warmup, adaptive iteration
+//! counts and robust summary statistics (median ± MAD). Benches are plain
+//! `harness = false` binaries under `rust/benches/`; each one regenerates
+//! one of the paper's figures as aligned text columns (and optionally CSV
+//! under `bench_out/`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Median absolute deviation (seconds).
+    pub mad: f64,
+    /// Iterations actually timed.
+    pub iters: usize,
+    /// Optional work units per iteration (for throughput reporting).
+    pub units: Option<f64>,
+}
+
+impl Measurement {
+    /// Units per second if `units` was provided.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units.map(|u| u / self.median)
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} ± {:>10}  ({} iters",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mad),
+            self.iters
+        )?;
+        if let Some(tp) = self.throughput() {
+            write!(f, ", {:.3e} units/s", tp)?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Minimum total measurement time.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Max timed iterations (caps long benches).
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // MAGBDP_BENCH_FAST=1 slashes times for CI smoke runs.
+        let fast = std::env::var("MAGBDP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        if fast {
+            Self {
+                measure_time: Duration::from_millis(200),
+                warmup_time: Duration::from_millis(50),
+                max_iters: 30,
+            }
+        } else {
+            Self {
+                measure_time: Duration::from_secs(2),
+                warmup_time: Duration::from_millis(300),
+                max_iters: 1000,
+            }
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, returning a summary. `f` receives the iteration index.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut(usize) -> T) -> Measurement {
+        // Warmup + pilot to size iterations.
+        let warm_start = Instant::now();
+        let mut pilot = Vec::new();
+        let mut i = 0usize;
+        while warm_start.elapsed() < self.warmup_time || pilot.is_empty() {
+            let t = Instant::now();
+            std::hint::black_box(f(i));
+            pilot.push(t.elapsed().as_secs_f64());
+            i += 1;
+            if i > 10_000 {
+                break;
+            }
+        }
+        let pilot_med = stats::quantile(&pilot, 0.5).max(1e-9);
+        let iters = ((self.measure_time.as_secs_f64() / pilot_med).ceil() as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for k in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f(i + k));
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            median: stats::quantile(&samples, 0.5),
+            mad: stats::mad(&samples),
+            iters,
+            units: None,
+        }
+    }
+
+    /// As [`run`], attaching a work-unit count for throughput.
+    pub fn run_with_units<T>(
+        &self,
+        name: &str,
+        units: f64,
+        f: impl FnMut(usize) -> T,
+    ) -> Measurement {
+        let mut m = self.run(name, f);
+        m.units = Some(units);
+        m
+    }
+}
+
+/// Accumulates rows and renders/exports a results table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as aligned text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write as CSV under `bench_out/<stem>.csv` (best-effort).
+    pub fn write_csv(&self, stem: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::Path::new("bench_out").join(format!("{stem}.csv"));
+        let mut body = self.header.join(",");
+        body.push('\n');
+        for row in &self.rows {
+            body.push_str(&row.join(","));
+            body.push('\n');
+        }
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_something() {
+        let b = Bench {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 50,
+        };
+        let m = b.run("noop-ish", |_| {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.median > 0.0);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bench {
+            measure_time: Duration::from_millis(10),
+            warmup_time: Duration::from_millis(2),
+            max_iters: 20,
+        };
+        let m = b.run_with_units("t", 100.0, |_| std::thread::sleep(Duration::from_micros(50)));
+        let tp = m.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 100.0 / 40e-6);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).contains("ns"));
+        assert!(fmt_duration(5e-6).contains("µs"));
+        assert!(fmt_duration(5e-3).contains("ms"));
+        assert!(fmt_duration(5.0).contains(" s"));
+    }
+}

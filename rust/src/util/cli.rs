@@ -1,0 +1,260 @@
+//! Command-line argument parser (replaces `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and auto-generated help.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+/// Parse error with a human-readable message.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// A subcommand parser.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Register `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse raw tokens (not including the subcommand name itself).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.help())))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("flag --{key} takes no value")));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} requires a value")))?
+                        }
+                    };
+                    args.values.insert(key, value);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.parse::<T>()
+            .map_err(|e| CliError(format!("--{name} {raw:?}: {e}")))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+/// Parse a comma-separated list of floats (e.g. `--mus 0.3,0.5,0.7`).
+pub fn parse_f64_list(s: &str) -> Result<Vec<f64>, CliError> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|e| CliError(format!("bad float {t:?}: {e}")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("sample", "sample a graph")
+            .opt("d", "levels", Some("14"))
+            .opt("mu", "attribute probability", Some("0.5"))
+            .flag("simple", "collapse duplicate edges")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&toks(&[])).unwrap();
+        assert_eq!(a.u64("d").unwrap(), 14);
+        assert_eq!(a.f64("mu").unwrap(), 0.5);
+        assert!(!a.flag("simple"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&toks(&["--d", "10", "--mu=0.3", "--simple"])).unwrap();
+        assert_eq!(a.u64("d").unwrap(), 10);
+        assert_eq!(a.f64("mu").unwrap(), 0.3);
+        assert!(a.flag("simple"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&toks(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&toks(&["--d"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cmd().parse(&toks(&["--simple=yes"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cmd().parse(&toks(&["out.tsv", "--d", "9"])).unwrap();
+        assert_eq!(a.positionals(), &["out.tsv".to_string()]);
+    }
+
+    #[test]
+    fn float_list() {
+        assert_eq!(
+            parse_f64_list("0.3, 0.5,0.7").unwrap(),
+            vec![0.3, 0.5, 0.7]
+        );
+        assert!(parse_f64_list("0.3,x").is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--d"));
+        assert!(h.contains("--simple"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Config-file parser (replaces `serde` + `toml` for our needs).
+//!
+//! Grammar: an INI/TOML subset —
+//!
+//! ```text
+//! # comment
+//! key = value
+//! [section]
+//! theta = 0.15, 0.7, 0.7, 0.85   # comma lists
+//! ```
+//!
+//! Values stay strings until typed accessors are called; sections flatten
+//! to `section.key`. Used by the CLI's `--config` option and the service's
+//! job files.
+
+use std::collections::BTreeMap;
+
+/// A flat `section.key -> value` map.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+/// Parse/lookup error.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError(format!("line {}: unterminated section", lineno + 1)))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError(format!("line {}: expected key = value", lineno + 1)))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            entries.insert(full_key, unquote(value.trim()).to_string());
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("read {path}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, ConfigError> {
+        self.get(key)
+            .ok_or_else(|| ConfigError(format!("missing config key {key:?}")))
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ConfigError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| ConfigError(format!("{key} = {raw:?}: {e}"))),
+        }
+    }
+
+    pub fn f64_list(&self, key: &str) -> Result<Vec<f64>, ConfigError> {
+        self.require(key)?
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|e| ConfigError(format!("{key}: bad float {t:?}: {e}")))
+            })
+            .collect()
+    }
+
+    /// All keys under a section prefix (`"sec"` matches `sec.*`).
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        let pat = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&pat))
+            .map(|k| k.as_str())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn unquote(s: &str) -> &str {
+    let b = s.as_bytes();
+    if b.len() >= 2 && (b[0] == b'"' && b[b.len() - 1] == b'"') {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# global
+seed = 42
+[model]
+d = 14
+mu = 0.4
+theta = 0.15, 0.7, 0.7, 0.85
+name = "theta one"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("seed"), Some("42"));
+        assert_eq!(c.get_or("model.d", 0u32).unwrap(), 14);
+        assert_eq!(c.get_or("model.mu", 0.0).unwrap(), 0.4);
+        assert_eq!(
+            c.f64_list("model.theta").unwrap(),
+            vec![0.15, 0.7, 0.7, 0.85]
+        );
+        assert_eq!(c.get("model.name"), Some("theta one"));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let c = Config::parse("").unwrap();
+        assert!(c.is_empty());
+        assert_eq!(c.get_or("x", 7i32).unwrap(), 7);
+        assert!(c.require("x").is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let c = Config::parse("a = 1 # trailing\n# full line\nb = 2").unwrap();
+        assert_eq!(c.get("a"), Some("1"));
+        assert_eq!(c.get("b"), Some("2"));
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn section_keys_lists() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys = c.section_keys("model");
+        assert!(keys.contains(&"model.d"));
+        assert!(keys.contains(&"model.mu"));
+        assert!(!keys.contains(&"seed"));
+    }
+
+    #[test]
+    fn type_error_reported() {
+        let c = Config::parse("x = abc").unwrap();
+        assert!(c.get_or("x", 0i64).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Zero-dependency substrates.
+//!
+//! The offline build environment vendors only the `xla` and `anyhow`
+//! crates, so everything a systems library normally pulls from the
+//! ecosystem — PRNGs, distribution samplers, CLI parsing, a thread pool,
+//! metrics, statistics, property testing, benchmarking — is implemented
+//! here from scratch and unit-tested in place.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod logging;
+pub mod metrics;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

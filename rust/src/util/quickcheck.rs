@@ -1,0 +1,282 @@
+//! Property-testing mini-framework (replaces `proptest`).
+//!
+//! A property is a predicate over values drawn from a [`Gen`]erator; the
+//! runner draws `cases` random inputs and, on failure, greedily shrinks
+//! the input through the generator's `shrink` candidates before reporting
+//! the minimal counterexample. Deterministic per seed.
+//!
+//! ```no_run
+//! use magbdp::util::quickcheck::*;
+//! check(100, u64s(0..1000), |&x| x.checked_add(1).is_some());
+//! ```
+
+use super::rng::{Rng, SeedableRng, Xoshiro256pp};
+
+/// A generator of values of type `T` with shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    /// Draw a random value.
+    fn gen(&self, rng: &mut dyn Rng) -> Self::Value;
+
+    /// Candidate "smaller" values to try during shrinking (may be empty).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Outcome of a failed property check.
+#[derive(Debug)]
+pub struct Failure<T: std::fmt::Debug> {
+    pub original: T,
+    pub minimal: T,
+    pub shrink_steps: usize,
+    pub case: usize,
+}
+
+/// Run `prop` on `cases` random inputs from `gen`. Panics with the
+/// shrunk counterexample on failure. Seed is fixed for reproducibility;
+/// use [`check_seeded`] to vary it.
+pub fn check<G: Gen>(cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    check_seeded(0xC0FFEE, cases, gen, prop)
+}
+
+/// As [`check`] with an explicit seed.
+pub fn check_seeded<G: Gen>(seed: u64, cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    if let Err(f) = run(seed, cases, &gen, &prop) {
+        panic!(
+            "property failed (case {}/{cases}):\n  original: {:?}\n  minimal ({} shrink steps): {:?}",
+            f.case, f.original, f.shrink_steps, f.minimal
+        );
+    }
+}
+
+/// Non-panicking runner; returns the failure if any.
+pub fn run<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> Result<(), Failure<G::Value>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let v = gen.gen(&mut rng);
+        if !prop(&v) {
+            let original = v.clone();
+            let mut current = v;
+            let mut steps = 0usize;
+            // Greedy shrink: repeatedly take the first failing candidate.
+            'outer: loop {
+                for cand in gen.shrink(&current) {
+                    if !prop(&cand) {
+                        current = cand;
+                        steps += 1;
+                        if steps > 10_000 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return Err(Failure {
+                original,
+                minimal: current,
+                shrink_steps: steps,
+                case,
+            });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- builders
+
+/// Uniform u64 in a range.
+pub struct U64s(pub std::ops::Range<u64>);
+
+/// Uniform u64 generator over `range`.
+pub fn u64s(range: std::ops::Range<u64>) -> U64s {
+    U64s(range)
+}
+
+impl Gen for U64s {
+    type Value = u64;
+
+    fn gen(&self, rng: &mut dyn Rng) -> u64 {
+        self.0.start + rng.next_below(self.0.end - self.0.start)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0.start {
+            out.push(self.0.start);
+            out.push(self.0.start + (v - self.0.start) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in a range.
+pub struct F64s(pub std::ops::Range<f64>);
+
+/// Uniform f64 generator over `range`.
+pub fn f64s(range: std::ops::Range<f64>) -> F64s {
+    F64s(range)
+}
+
+impl Gen for F64s {
+    type Value = f64;
+
+    fn gen(&self, rng: &mut dyn Rng) -> f64 {
+        self.0.start + rng.next_f64() * (self.0.end - self.0.start)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = self.0.start + (v - self.0.start) / 2.0;
+        if (mid - v).abs() > 1e-9 {
+            vec![self.0.start, mid]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vector of values from an element generator, length in `len`.
+pub struct VecOf<G>(pub G, pub std::ops::Range<usize>);
+
+/// Generator of vectors with element generator `g` and length in `len`.
+pub fn vec_of<G: Gen>(g: G, len: std::ops::Range<usize>) -> VecOf<G> {
+    VecOf(g, len)
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+
+    fn gen(&self, rng: &mut dyn Rng) -> Self::Value {
+        let n = self.1.start + rng.next_below((self.1.end - self.1.start).max(1) as u64) as usize;
+        (0..n).map(|_| self.0.gen(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        // Drop halves / single elements first (structural shrink)…
+        if v.len() > self.1.start {
+            out.push(v[..v.len() / 2.max(self.1.start)].to_vec());
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            out.push(minus_last);
+        }
+        // …then shrink each element.
+        for (i, e) in v.iter().enumerate() {
+            for cand in self.0.shrink(e) {
+                let mut copy = v.clone();
+                copy[i] = cand;
+                out.push(copy);
+            }
+        }
+        out.retain(|c| c.len() >= self.1.start);
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A, B>(pub A, pub B);
+
+/// Generator of `(A, B)` pairs.
+pub fn pair_of<A: Gen, B: Gen>(a: A, b: B) -> PairOf<A, B> {
+    PairOf(a, b)
+}
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn gen(&self, rng: &mut dyn Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Generator from a plain closure (no shrinking).
+pub struct FromFn<F>(pub F);
+
+/// Generator that calls `f(rng)`; no shrinking.
+pub fn from_fn<T: Clone + std::fmt::Debug, F: Fn(&mut dyn Rng) -> T>(f: F) -> FromFn<F> {
+    FromFn(f)
+}
+
+impl<T: Clone + std::fmt::Debug, F: Fn(&mut dyn Rng) -> T> Gen for FromFn<F> {
+    type Value = T;
+
+    fn gen(&self, rng: &mut dyn Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(200, u64s(0..1000), |&x| x < 1000);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let f = run(1, 500, &u64s(0..1000), &|&x| x < 500).unwrap_err();
+        assert_eq!(f.minimal, 500, "shrinks to the smallest failure");
+    }
+
+    #[test]
+    fn vec_gen_respects_length() {
+        let g = vec_of(u64s(0..10), 2..5);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..100 {
+            let v = g.gen(&mut rng);
+            assert!((2..5).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn vec_shrink_never_below_min_len() {
+        let g = vec_of(u64s(0..10), 2..5);
+        let shrunk = g.shrink(&vec![9, 9, 9, 9]);
+        assert!(shrunk.iter().all(|v| v.len() >= 2));
+        assert!(!shrunk.is_empty());
+    }
+
+    #[test]
+    fn pair_shrinks_componentwise() {
+        let g = pair_of(u64s(0..10), u64s(0..10));
+        let shrunk = g.shrink(&(5, 7));
+        assert!(shrunk.iter().any(|&(a, b)| a < 5 && b == 7));
+        assert!(shrunk.iter().any(|&(a, b)| a == 5 && b < 7));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_panics_on_failure() {
+        check(100, u64s(0..10), |&x| x != 3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = run(7, 100, &u64s(0..1_000_000), &|&x| x < 900_000).err();
+        let b = run(7, 100, &u64s(0..1_000_000), &|&x| x < 900_000).err();
+        assert_eq!(a.map(|f| f.original), b.map(|f| f.original));
+    }
+}

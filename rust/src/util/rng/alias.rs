@@ -1,0 +1,155 @@
+//! Walker/Vose alias method — O(1) categorical sampling.
+//!
+//! Each level of the ball-dropping quadrant descent (Algorithm 1) picks one
+//! of the four quadrants with probability ∝ θ_ab. With an alias table per
+//! level that choice costs one uniform draw and one comparison, which is
+//! what makes the per-ball cost a clean O(d).
+
+use super::Rng;
+
+/// Precomputed alias table over `k` categories.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// Acceptance thresholds scaled to u64 for a float-free fast path.
+    prob: Vec<u64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalised).
+    ///
+    /// Panics if the weights are empty, contain a negative/NaN value, or
+    /// all are zero.
+    pub fn new(weights: &[f64]) -> Self {
+        let k = weights.len();
+        assert!(k > 0, "alias table over zero categories");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "alias weights must be finite and non-negative"
+        );
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "alias weights sum to zero");
+
+        // Vose's stable two-worklist construction.
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * k as f64 / total).collect();
+        let mut small: Vec<usize> = Vec::with_capacity(k);
+        let mut large: Vec<usize> = Vec::with_capacity(k);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        let mut prob = vec![0u64; k];
+        let mut alias = vec![0u32; k];
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            // prob[s] is the chance to KEEP s rather than divert to alias.
+            prob[s] = (scaled[s].min(1.0) * u64::MAX as f64) as u64;
+            alias[s] = l as u32;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are exactly 1 up to float error: always keep.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = u64::MAX;
+            alias[i] = i as u32;
+        }
+        Self { prob, alias }
+    }
+
+    /// Number of categories.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if the table has no categories (never: `new` panics on empty).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw a category index in O(1).
+    #[inline]
+    pub fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> usize {
+        let i = rng.next_index(self.prob.len());
+        if rng.next_u64() <= self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn empirical(weights: &[f64], trials: usize, seed: u64) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut counts = vec![0f64; weights.len()];
+        for _ in 0..trials {
+            counts[table.sample(&mut rng)] += 1.0;
+        }
+        counts.iter().map(|c| c / trials as f64).collect()
+    }
+
+    #[test]
+    fn matches_weights_uniform() {
+        let freq = empirical(&[1.0, 1.0, 1.0, 1.0], 100_000, 1);
+        for f in freq {
+            assert!((f - 0.25).abs() < 0.01, "{f}");
+        }
+    }
+
+    #[test]
+    fn matches_weights_skewed() {
+        let w = [0.4, 0.7, 0.7, 0.9]; // a KPGM initiator, unnormalised
+        let total: f64 = w.iter().sum();
+        let freq = empirical(&w, 200_000, 2);
+        for (f, wi) in freq.iter().zip(&w) {
+            assert!((f - wi / total).abs() < 0.01, "{f} vs {}", wi / total);
+        }
+    }
+
+    #[test]
+    fn zero_weight_category_never_sampled() {
+        let freq = empirical(&[0.0, 1.0, 2.0, 0.0], 50_000, 3);
+        assert_eq!(freq[0], 0.0);
+        assert_eq!(freq[3], 0.0);
+    }
+
+    #[test]
+    fn single_category() {
+        let freq = empirical(&[5.0], 100, 4);
+        assert_eq!(freq[0], 1.0);
+    }
+
+    #[test]
+    fn many_categories_uniformity() {
+        let w = vec![1.0; 257]; // non-power-of-two
+        let freq = empirical(&w, 257 * 2000, 5);
+        for f in freq {
+            assert!((f - 1.0 / 257.0).abs() < 0.002);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to zero")]
+    fn all_zero_weights_panics() {
+        let _ = AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_weight_panics() {
+        let _ = AliasTable::new(&[0.5, -0.1]);
+    }
+}

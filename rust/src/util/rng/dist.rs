@@ -1,0 +1,375 @@
+//! Distribution samplers over any [`Rng`].
+//!
+//! The ball-dropping machinery needs exactly three non-uniform
+//! distributions, all implemented here from the literature:
+//!
+//! * **Poisson** — the number of balls a BDP drops (Theorem 2 / Alg. 1):
+//!   Knuth inversion-by-multiplication for small rates, Hörmann's PTRS
+//!   transformed rejection (1993) for large rates, both exact.
+//! * **Binomial** — thinning `B'` into `B` with the acceptance ratio
+//!   `Λ/Λ'` (§4.1): explicit-trials for tiny `n`, geometric skip sampling
+//!   for small `n·p`, Hörmann's BTRS transformed rejection for the bulk.
+//! * **Exponential / Normal** — used by the statistics tests and the
+//!   service's synthetic arrival processes.
+
+use super::Rng;
+
+/// `ln(k!)` — exact table for `k < 1024`, Stirling's series beyond.
+///
+/// The rejection samplers compare *logs* of probability ratios, so ~1e-12
+/// absolute accuracy (Stirling with three correction terms) is far more
+/// than needed.
+pub fn ln_factorial(k: u64) -> f64 {
+    // Lazily built exact prefix table.
+    const TABLE_LEN: usize = 1024;
+    static TABLE: std::sync::OnceLock<Vec<f64>> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = Vec::with_capacity(TABLE_LEN);
+        let mut acc = 0.0f64;
+        t.push(0.0);
+        for i in 1..TABLE_LEN {
+            acc += (i as f64).ln();
+            t.push(acc);
+        }
+        t
+    });
+    if (k as usize) < TABLE_LEN {
+        return table[k as usize];
+    }
+    let x = k as f64;
+    // Stirling: ln k! = k ln k − k + ½ln(2πk) + 1/(12k) − 1/(360k³) + 1/(1260k⁵)
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    x * x.ln() - x
+        + 0.5 * (2.0 * std::f64::consts::PI * x).ln()
+        + inv * (1.0 / 12.0 - inv2 * (1.0 / 360.0 - inv2 / 1260.0))
+}
+
+/// Exponential(rate) via inversion.
+#[inline]
+pub fn exponential<R: Rng + ?Sized>(rng: &mut R, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    -rng.next_f64_open().ln() / rate
+}
+
+/// Standard normal via the Marsaglia polar method.
+pub fn standard_normal<R: Rng + ?Sized>(rng: &mut R) -> f64 {
+    loop {
+        let u = 2.0 * rng.next_f64() - 1.0;
+        let v = 2.0 * rng.next_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Poisson(λ). Exact for all λ ≥ 0 (returns 0 for λ = 0).
+pub fn poisson<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    debug_assert!(lambda >= 0.0 && lambda.is_finite(), "poisson rate {lambda}");
+    if lambda <= 0.0 {
+        0
+    } else if lambda < 30.0 {
+        poisson_knuth(rng, lambda)
+    } else {
+        poisson_ptrs(rng, lambda)
+    }
+}
+
+/// Knuth's product-of-uniforms inversion — expected O(λ) uniforms.
+fn poisson_knuth<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    let l = (-lambda).exp();
+    let mut k = 0u64;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.next_f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Hörmann's PTRS transformed-rejection Poisson sampler (valid for λ ≥ 10).
+fn poisson_ptrs<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    let log_lambda = lambda.ln();
+    let b = 0.931 + 2.53 * lambda.sqrt();
+    let a = -0.059 + 0.02483 * b;
+    let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+    let v_r = 0.9277 - 3.6224 / (b - 2.0);
+    loop {
+        let u = rng.next_f64() - 0.5;
+        let v = rng.next_f64();
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+        if us >= 0.07 && v <= v_r {
+            return k as u64;
+        }
+        if k < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let ik = k as u64;
+        if (v * inv_alpha / (a / (us * us) + b)).ln()
+            <= k * log_lambda - lambda - ln_factorial(ik)
+        {
+            return ik;
+        }
+    }
+}
+
+/// Binomial(n, p). Exact for all `0 ≤ p ≤ 1`.
+pub fn binomial<R: Rng + ?Sized>(rng: &mut R, n: u64, p: f64) -> u64 {
+    debug_assert!((0.0..=1.0).contains(&p), "binomial p {p}");
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    // Mirror to p ≤ 1/2 so the samplers' preconditions hold.
+    if p > 0.5 {
+        return n - binomial(rng, n, 1.0 - p);
+    }
+    let np = n as f64 * p;
+    if n <= 64 {
+        binomial_trials(rng, n, p)
+    } else if np < 10.0 {
+        binomial_geometric(rng, n, p)
+    } else {
+        binomial_btrs(rng, n, p)
+    }
+}
+
+/// Explicit Bernoulli trials — O(n), used only for tiny n.
+fn binomial_trials<R: Rng + ?Sized>(rng: &mut R, n: u64, p: f64) -> u64 {
+    let mut k = 0;
+    for _ in 0..n {
+        if rng.next_f64() < p {
+            k += 1;
+        }
+    }
+    k
+}
+
+/// Geometric-skip ("first success") sampling — expected O(np + 1).
+fn binomial_geometric<R: Rng + ?Sized>(rng: &mut R, n: u64, p: f64) -> u64 {
+    let log_q = (1.0 - p).ln(); // p < 1 guaranteed by caller
+    let mut count = 0u64;
+    let mut pos = 0.0f64;
+    loop {
+        // Number of failures before next success ~ floor(ln U / ln(1-p)).
+        pos += (rng.next_f64_open().ln() / log_q).floor() + 1.0;
+        if pos > n as f64 {
+            return count;
+        }
+        count += 1;
+    }
+}
+
+/// Hörmann's BTRS transformed rejection (1993) — requires `np ≥ 10`, `p ≤ ½`.
+fn binomial_btrs<R: Rng + ?Sized>(rng: &mut R, n: u64, p: f64) -> u64 {
+    let nf = n as f64;
+    let spq = (nf * p * (1.0 - p)).sqrt();
+    let b = 1.15 + 2.53 * spq;
+    let a = -0.0873 + 0.0248 * b + 0.01 * p;
+    let c = nf * p + 0.5;
+    let v_r = 0.92 - 4.2 / b;
+    let ur_vr = 0.86 * v_r;
+    let alpha = (2.83 + 5.1 / b) * spq;
+    let lpq = (p / (1.0 - p)).ln();
+    let m = ((nf + 1.0) * p).floor(); // mode
+    let h = ln_factorial(m as u64) + ln_factorial((nf - m) as u64);
+    loop {
+        let mut v = rng.next_f64();
+        if v <= ur_vr {
+            let u = v / v_r - 0.43;
+            let k = ((2.0 * a / (0.5 - u.abs()) + b) * u + c).floor();
+            return k as u64;
+        }
+        let u = if v >= v_r {
+            rng.next_f64() - 0.5
+        } else {
+            let mut u = v / v_r - 0.93;
+            u = if u < 0.0 { -0.5 - u } else { 0.5 - u };
+            v = rng.next_f64() * v_r;
+            u
+        };
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + c).floor();
+        if k < 0.0 || k > nf {
+            continue;
+        }
+        v = v * alpha / (a / (us * us) + b);
+        if v.ln()
+            <= h - ln_factorial(k as u64) - ln_factorial((nf - k) as u64) + (k - m) * lpq
+        {
+            return k as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{SeedableRng, Xoshiro256pp};
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+        (mean, var)
+    }
+
+    #[test]
+    fn ln_factorial_agrees_across_table_boundary() {
+        // Stirling branch vs exact recurrence at the 1024 cut.
+        let exact_1023 = ln_factorial(1023);
+        let stirling_1024 = ln_factorial(1024);
+        let recur = exact_1023 + (1024f64).ln();
+        assert!((stirling_1024 - recur).abs() < 1e-9);
+        assert!((ln_factorial(5) - 120f64.ln()).abs() < 1e-12);
+        assert_eq!(ln_factorial(0), 0.0);
+        assert_eq!(ln_factorial(1), 0.0);
+    }
+
+    #[test]
+    fn poisson_moments_small_and_large() {
+        let mut rng = Xoshiro256pp::seed_from_u64(100);
+        for &lambda in &[0.1, 1.0, 5.0, 29.9, 30.1, 100.0, 5000.0] {
+            let xs: Vec<f64> = (0..40_000).map(|_| poisson(&mut rng, lambda) as f64).collect();
+            let (mean, var) = moments(&xs);
+            let se = (lambda / xs.len() as f64).sqrt();
+            assert!(
+                (mean - lambda).abs() < 6.0 * se.max(1e-3),
+                "lambda={lambda} mean={mean}"
+            );
+            // Var = lambda; sampling error of var ~ lambda*sqrt(2/n)+...
+            assert!(
+                (var - lambda).abs() < 0.1 * lambda.max(1.0),
+                "lambda={lambda} var={var}"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_zero_rate() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        assert_eq!(poisson(&mut rng, 0.0), 0);
+    }
+
+    #[test]
+    fn poisson_chi_square_small_lambda() {
+        // Exact pmf check at lambda = 3 over bins 0..=10.
+        let lambda = 3.0;
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let n = 200_000usize;
+        let mut counts = [0f64; 11];
+        for _ in 0..n {
+            let k = poisson(&mut rng, lambda);
+            if (k as usize) < counts.len() {
+                counts[k as usize] += 1.0;
+            }
+        }
+        let mut chi2 = 0.0;
+        for (k, &obs) in counts.iter().enumerate() {
+            let pk =
+                (-lambda + k as f64 * lambda.ln() - ln_factorial(k as u64)).exp();
+            let exp = pk * n as f64;
+            chi2 += (obs - exp) * (obs - exp) / exp;
+        }
+        // 10 dof, 99.9th percentile ≈ 29.6.
+        assert!(chi2 < 29.6, "chi2 = {chi2}");
+    }
+
+    #[test]
+    fn binomial_moments_all_regimes() {
+        let mut rng = Xoshiro256pp::seed_from_u64(200);
+        for &(n, p) in &[
+            (1u64, 0.3),
+            (10, 0.5),
+            (64, 0.02),
+            (1000, 0.001), // geometric-skip branch
+            (1000, 0.2),   // BTRS branch
+            (1 << 20, 0.4),
+            (100, 0.97), // mirrored
+        ] {
+            let xs: Vec<f64> = (0..30_000).map(|_| binomial(&mut rng, n, p) as f64).collect();
+            let (mean, var) = moments(&xs);
+            let m = n as f64 * p;
+            let v = n as f64 * p * (1.0 - p);
+            let se = (v / xs.len() as f64).sqrt();
+            assert!(
+                (mean - m).abs() < 6.0 * se.max(1e-3),
+                "n={n} p={p} mean={mean} want {m}"
+            );
+            assert!((var - v).abs() < 0.12 * v.max(0.05), "n={n} p={p} var={var} want {v}");
+        }
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        assert_eq!(binomial(&mut rng, 0, 0.5), 0);
+        assert_eq!(binomial(&mut rng, 10, 0.0), 0);
+        assert_eq!(binomial(&mut rng, 10, 1.0), 10);
+        for _ in 0..100 {
+            let k = binomial(&mut rng, 7, 0.5);
+            assert!(k <= 7);
+        }
+    }
+
+    #[test]
+    fn binomial_chi_square_btrs() {
+        // Exact pmf check in the BTRS regime: n = 200, p = 0.3.
+        let (n, p) = (200u64, 0.3);
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let trials = 100_000usize;
+        let lo = 40usize;
+        let hi = 80usize;
+        let mut counts = vec![0f64; hi - lo + 1];
+        let mut other = 0f64;
+        for _ in 0..trials {
+            let k = binomial(&mut rng, n, p) as usize;
+            if (lo..=hi).contains(&k) {
+                counts[k - lo] += 1.0;
+            } else {
+                other += 1.0;
+            }
+        }
+        let pmf = |k: u64| -> f64 {
+            (ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+                + k as f64 * p.ln()
+                + (n - k) as f64 * (1.0 - p).ln())
+            .exp()
+        };
+        let mut chi2 = 0.0;
+        let mut p_in = 0.0;
+        for (i, &obs) in counts.iter().enumerate() {
+            let pk = pmf((lo + i) as u64);
+            p_in += pk;
+            let exp = pk * trials as f64;
+            chi2 += (obs - exp) * (obs - exp) / exp;
+        }
+        let exp_other = (1.0 - p_in) * trials as f64;
+        chi2 += (other - exp_other) * (other - exp_other) / exp_other.max(1.0);
+        // ~41 dof, 99.9th percentile ≈ 74.7.
+        assert!(chi2 < 74.7, "chi2 = {chi2}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let xs: Vec<f64> = (0..50_000).map(|_| exponential(&mut rng, 2.0)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let xs: Vec<f64> = (0..50_000).map(|_| standard_normal(&mut rng)).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Pseudo-random number generation.
+//!
+//! No `rand` crate is available offline, so this module implements the
+//! PRNGs and distribution samplers the library needs:
+//!
+//! * [`SplitMix64`] — seeding / stream-splitting generator (Steele et al.).
+//! * [`Xoshiro256pp`] — the workhorse generator (Blackman & Vigna,
+//!   xoshiro256++ 1.0) with `jump()` for independent parallel streams.
+//! * [`Pcg32`] — a small-state alternative used where many cheap
+//!   generators are needed (O'Neill, PCG-XSH-RR 64/32).
+//! * [`dist`] — Uniform, Bernoulli, Exponential, Normal, **Poisson**
+//!   (inversion for small rates, Hörmann's PTRS transformed rejection for
+//!   large), **Binomial** (inversion / BTRS) — the distributions at the
+//!   heart of the ball-dropping process.
+//! * [`alias`] — Walker/Vose alias tables for O(1) categorical sampling
+//!   (used per level of the BDP quadrant descent).
+
+pub mod alias;
+pub mod dist;
+mod pcg;
+mod splitmix;
+mod xoshiro;
+
+pub use pcg::Pcg32;
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256pp;
+
+/// A source of uniformly distributed 64-bit words.
+///
+/// All distribution samplers in [`dist`] are generic over this trait.
+pub trait Rng {
+    /// Next uniformly distributed `u64`.
+    fn next_u64(&mut self) -> u64;
+
+    /// Next uniformly distributed `u32`.
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of entropy.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // 53 high bits scaled by 2^-53.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `(0, 1]` — safe as an argument to `ln()`.
+    #[inline]
+    fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            // Rejection zone to remove modulo bias.
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` index in `[0, len)`.
+    #[inline]
+    fn next_index(&mut self, len: usize) -> usize {
+        self.next_below(len as u64) as usize
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T])
+    where
+        Self: Sized,
+    {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Construction from a 64-bit seed (deterministic, well-mixed).
+pub trait SeedableRng: Sized {
+    fn seed_from_u64(seed: u64) -> Self;
+}
+
+/// Derive `n` independent generators for parallel shards.
+///
+/// Stream `i` is seeded from `SplitMix64(seed).nth_output(i)`; SplitMix64's
+/// output function is a bijection on `u64`, so distinct shards never share
+/// a seed, and xoshiro's own mixing makes correlated seeds harmless.
+pub fn split_streams<R: SeedableRng>(seed: u64, n: usize) -> Vec<R> {
+    let mut root = SplitMix64::seed_from_u64(seed);
+    (0..n).map(|_| R::seed_from_u64(root.next_u64())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_below_is_in_range() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for bound in [1u64, 2, 3, 7, 100, 1 << 33] {
+            for _ in 0..200 {
+                assert!(rng.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_below_is_roughly_uniform() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut counts = [0usize; 7];
+        let trials = 70_000;
+        for _ in 0..trials {
+            counts[rng.next_below(7) as usize] += 1;
+        }
+        let expect = trials as f64 / 7.0;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn next_f64_is_in_unit_interval() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = rng.next_f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_are_distinct() {
+        let streams: Vec<Xoshiro256pp> = split_streams(9, 8);
+        let mut firsts: Vec<u64> = streams
+            .into_iter()
+            .map(|mut r| r.next_u64())
+            .collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 8);
+    }
+
+    #[test]
+    fn split_streams_deterministic() {
+        let a: Vec<u64> = split_streams::<Xoshiro256pp>(5, 4)
+            .into_iter()
+            .map(|mut r| r.next_u64())
+            .collect();
+        let b: Vec<u64> = split_streams::<Xoshiro256pp>(5, 4)
+            .into_iter()
+            .map(|mut r| r.next_u64())
+            .collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,237 @@
+//! Statistics toolkit (replaces `statrs`): moments, quantiles,
+//! distribution pmfs/cdfs, chi-square and KS goodness-of-fit tests, and a
+//! least-squares line fit. Used by the distributional integration tests
+//! (Theorems 2–4) and by the benchmark harness's scaling analysis.
+
+use super::rng::dist::ln_factorial;
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Median absolute deviation (robust spread), scaled for normal consistency.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let med = quantile(xs, 0.5);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    1.4826 * quantile(&devs, 0.5)
+}
+
+/// Empirical quantile (linear interpolation between order statistics).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Poisson pmf `P[X = k]` computed in log space.
+pub fn poisson_pmf(lambda: f64, k: u64) -> f64 {
+    if lambda <= 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    (-lambda + k as f64 * lambda.ln() - ln_factorial(k)).exp()
+}
+
+/// Binomial pmf `P[X = k]` computed in log space.
+pub fn binomial_pmf(n: u64, p: f64, k: u64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    if p >= 1.0 {
+        return if k == n { 1.0 } else { 0.0 };
+    }
+    (ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+        + k as f64 * p.ln()
+        + (n - k) as f64 * (1.0 - p).ln())
+    .exp()
+}
+
+/// Pearson chi-square statistic for observed counts vs expected counts.
+///
+/// Bins with expected count below `min_expected` are pooled into a single
+/// tail bin (standard practice to keep the χ² approximation valid).
+/// Returns `(statistic, degrees_of_freedom)`.
+pub fn chi_square(observed: &[f64], expected: &[f64], min_expected: f64) -> (f64, usize) {
+    assert_eq!(observed.len(), expected.len());
+    let mut chi2 = 0.0;
+    let mut dof = 0usize;
+    let mut pool_obs = 0.0;
+    let mut pool_exp = 0.0;
+    for (&o, &e) in observed.iter().zip(expected) {
+        if e < min_expected {
+            pool_obs += o;
+            pool_exp += e;
+        } else {
+            chi2 += (o - e) * (o - e) / e;
+            dof += 1;
+        }
+    }
+    if pool_exp >= min_expected {
+        chi2 += (pool_obs - pool_exp) * (pool_obs - pool_exp) / pool_exp;
+        dof += 1;
+    }
+    (chi2, dof.saturating_sub(1))
+}
+
+/// Conservative χ² critical value at significance ~0.001 via the
+/// Wilson–Hilferty cube approximation (accurate to <1% for dof ≥ 3).
+pub fn chi_square_critical_999(dof: usize) -> f64 {
+    let k = dof.max(1) as f64;
+    let z = 3.0902; // z_{0.999}
+    let t = 1.0 - 2.0 / (9.0 * k) + z * (2.0 / (9.0 * k)).sqrt();
+    k * t * t * t
+}
+
+/// Two-sided Kolmogorov–Smirnov statistic between a sample and a CDF.
+pub fn ks_statistic(sample: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    let mut xs = sample.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        let f = cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+/// KS critical value at alpha=0.001 (asymptotic): `1.949 / sqrt(n)`.
+pub fn ks_critical_999(n: usize) -> f64 {
+    1.949 / (n as f64).sqrt()
+}
+
+/// Least-squares fit `y ≈ a + b·x`; returns `(a, b, r²)`.
+///
+/// Used to verify the paper's near-linear runtime scaling in `e_M`
+/// (Figure 5): fit log-runtime on log-edges and check slope ≈ 1.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_pmf_sums_to_one() {
+        let s: f64 = (0..200).map(|k| poisson_pmf(12.5, k)).sum();
+        assert!((s - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn binomial_pmf_sums_to_one() {
+        let s: f64 = (0..=60).map(|k| binomial_pmf(60, 0.33, k)).sum();
+        assert!((s - 1.0).abs() < 1e-10);
+        assert_eq!(binomial_pmf(5, 0.5, 6), 0.0);
+    }
+
+    #[test]
+    fn chi_square_perfect_fit_is_zero() {
+        let obs = [10.0, 20.0, 30.0];
+        let (chi2, dof) = chi_square(&obs, &obs, 1.0);
+        assert_eq!(chi2, 0.0);
+        assert_eq!(dof, 2);
+    }
+
+    #[test]
+    fn chi_square_pools_small_bins() {
+        let obs = [50.0, 50.0, 0.4, 0.3, 0.3];
+        let exp = [50.0, 50.0, 0.4, 0.3, 0.3];
+        let (_, dof) = chi_square(&obs, &exp, 5.0);
+        // Three tiny bins pool into none (pooled expected 1.0 < 5) => 2 bins.
+        assert_eq!(dof, 1);
+    }
+
+    #[test]
+    fn chi_square_critical_reasonable() {
+        // Known values: chi2_{0.999, 10} ≈ 29.59, chi2_{0.999, 40} ≈ 73.40.
+        assert!((chi_square_critical_999(10) - 29.59).abs() < 0.7);
+        assert!((chi_square_critical_999(40) - 73.40).abs() < 1.2);
+    }
+
+    #[test]
+    fn ks_uniform_sample_passes() {
+        // A perfectly spaced grid has KS distance 1/(2n).
+        let n = 1000;
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5) / n as f64).collect();
+        let d = ks_statistic(&xs, |x| x.clamp(0.0, 1.0));
+        assert!(d <= 0.5 / n as f64 + 1e-12, "d = {d}");
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,213 @@
+//! Fixed-size thread pool with scoped parallel helpers (replaces `rayon`).
+//!
+//! The sampling workload is embarrassingly parallel (independent ball
+//! ranges / shards), so a simple shared-queue pool is sufficient; work
+//! items are boxed closures and results flow back through channels.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming a shared FIFO queue.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to ≥ 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("magbdp-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // queue closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            size,
+        }
+    }
+
+    /// Pool with one worker per available CPU.
+    pub fn with_default_parallelism() -> Self {
+        Self::new(default_parallelism())
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Run `f(i)` for `i in 0..n` on the pool; collect results in order.
+    ///
+    /// `f` must be `Clone + Send` (it is shared across workers); results
+    /// are gathered through a channel and reordered by index.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + Clone + 'static,
+    {
+        let (tx, rx) = channel::<(usize, T)>();
+        for i in 0..n {
+            let tx = tx.clone();
+            let f = f.clone();
+            self.execute(move || {
+                let _ = tx.send((i, f(i)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|v| v.expect("worker panicked")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Available CPU parallelism (≥ 1), overridable via `MAGBDP_THREADS`.
+pub fn default_parallelism() -> usize {
+    if let Ok(v) = std::env::var("MAGBDP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Scoped parallel map without a persistent pool: splits `0..n` into
+/// `threads` contiguous chunks, runs `f(chunk_index, range)` on scoped
+/// threads, returns per-chunk results in chunk order.
+///
+/// This is the primitive the sharded samplers use: each chunk owns an
+/// independent RNG stream, so results are deterministic for a fixed
+/// `(seed, threads)` pair regardless of scheduling.
+pub fn scoped_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Send + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = (0..threads).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (t, slot) in out.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let lo = (t * chunk).min(n);
+                let hi = ((t + 1) * chunk).min(n);
+                *slot = Some(f(t, lo..hi));
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("scoped thread panicked")).collect()
+}
+
+/// A monotonically increasing work counter shared across shards (used for
+/// progress reporting in long benches).
+#[derive(Clone, Default)]
+pub struct Progress {
+    done: Arc<AtomicUsize>,
+}
+
+impl Progress {
+    pub fn tick(&self, n: usize) {
+        self.done.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map_indexed(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn execute_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn scoped_chunks_covers_range_exactly() {
+        let ranges = scoped_chunks(17, 4, |_, r| r);
+        let mut covered: Vec<usize> = ranges.into_iter().flatten().collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_chunks_single_thread() {
+        let sums = scoped_chunks(10, 1, |_, r| r.sum::<usize>());
+        assert_eq!(sums, vec![45]);
+    }
+
+    #[test]
+    fn scoped_chunks_more_threads_than_items() {
+        let ranges = scoped_chunks(2, 8, |_, r| r.len());
+        assert_eq!(ranges.iter().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn progress_counts() {
+        let p = Progress::default();
+        let q = p.clone();
+        p.tick(3);
+        q.tick(4);
+        assert_eq!(p.get(), 7);
+    }
+}

@@ -1,0 +1,81 @@
+//! Lightweight wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of `f`, returning `(result, elapsed)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A stopwatch accumulating named spans (used by the samplers' reports).
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    spans: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, recording its duration under `name`.
+    pub fn span<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        self.record(name, dt);
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn record(&mut self, name: &str, dt: Duration) {
+        if let Some((_, acc)) = self.spans.iter_mut().find(|(n, _)| n == name) {
+            *acc += dt;
+        } else {
+            self.spans.push((name.to_string(), dt));
+        }
+    }
+
+    /// All recorded spans in insertion order.
+    pub fn spans(&self) -> &[(String, Duration)] {
+        &self.spans
+    }
+
+    /// Total across all spans.
+    pub fn total(&self) -> Duration {
+        self.spans.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+impl std::fmt::Display for Stopwatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (name, dt) in &self.spans {
+            writeln!(f, "{name:>24}: {:>10.3} ms", dt.as_secs_f64() * 1e3)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate() {
+        let mut sw = Stopwatch::new();
+        sw.record("a", Duration::from_millis(3));
+        sw.record("b", Duration::from_millis(5));
+        sw.record("a", Duration::from_millis(2));
+        assert_eq!(sw.spans().len(), 2);
+        assert_eq!(sw.spans()[0].1, Duration::from_millis(5));
+        assert_eq!(sw.total(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn span_returns_value() {
+        let mut sw = Stopwatch::new();
+        let v = sw.span("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(sw.spans().len(), 1);
+    }
+}

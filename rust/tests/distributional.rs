@@ -1,0 +1,284 @@
+//! Distributional integration tests: the theorems of the paper, verified
+//! by simulation against exact ground truth.
+
+use magbdp::model::{ColorIndex, InitiatorMatrix, KpgmParams, MagmParams};
+use magbdp::sampler::naive::{EntryMode, NaiveKpgmSampler, NaiveMagmSampler};
+use magbdp::sampler::{KpgmBdpSampler, MagmBdpSampler, QuiltingSampler, Sampler};
+use magbdp::util::rng::{SeedableRng, Xoshiro256pp};
+use magbdp::util::stats;
+
+/// Theorem 2: under a BDP, each `A_ij` is an independent
+/// `Poisson(Γ_ij)`. Chi-square the empirical multiplicity distribution
+/// of tracked entries against the exact Poisson pmf.
+#[test]
+fn theorem2_bdp_entries_are_poisson() {
+    let d = 3;
+    let params = KpgmParams::replicated(InitiatorMatrix::FIG2, d); // large entries ⇒ multi-edges
+    let sampler = KpgmBdpSampler::new(&params);
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBDF);
+    let reps = 30_000usize;
+
+    // Track a diverse set of cells: corners + middles.
+    let cells: [(u32, u32); 4] = [(0, 0), (7, 7), (0, 7), (3, 5)];
+    let mut hists = vec![vec![0f64; 12]; cells.len()];
+    for _ in 0..reps {
+        let g = sampler.sample(&mut rng);
+        let mut counts = [0usize; 4];
+        for &(i, j) in g.edges() {
+            for (k, &(a, b)) in cells.iter().enumerate() {
+                if (i, j) == (a, b) {
+                    counts[k] += 1;
+                }
+            }
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            let bin = c.min(hists[k].len() - 1);
+            hists[k][bin] += 1.0;
+        }
+    }
+    for (k, &(i, j)) in cells.iter().enumerate() {
+        let lambda = params.gamma(i as u64, j as u64);
+        let expected: Vec<f64> = (0..hists[k].len())
+            .map(|c| {
+                let p = if c + 1 == hists[k].len() {
+                    // Tail bin: P[X ≥ c].
+                    1.0 - (0..c).map(|x| stats::poisson_pmf(lambda, x as u64)).sum::<f64>()
+                } else {
+                    stats::poisson_pmf(lambda, c as u64)
+                };
+                p * reps as f64
+            })
+            .collect();
+        let (chi2, dof) = stats::chi_square(&hists[k], &expected, 5.0);
+        let crit = stats::chi_square_critical_999(dof);
+        assert!(
+            chi2 < crit,
+            "cell ({i},{j}) λ={lambda:.3}: chi2 {chi2:.1} ≥ crit {crit:.1} (dof {dof})"
+        );
+    }
+}
+
+/// Theorem 2 corollary: total ball count is Poisson(e_K) — variance
+/// equals mean (unlike the Bernoulli model where it is strictly less).
+#[test]
+fn theorem2_total_edges_poisson_moments() {
+    let params = KpgmParams::replicated(InitiatorMatrix::FIG1, 6);
+    let sampler = KpgmBdpSampler::new(&params);
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let xs: Vec<f64> = (0..4000)
+        .map(|_| sampler.sample(&mut rng).num_edges() as f64)
+        .collect();
+    let e_k = params.expected_edges();
+    let mean = stats::mean(&xs);
+    let var = stats::variance(&xs);
+    assert!((mean - e_k).abs() < 6.0 * (e_k / xs.len() as f64).sqrt());
+    assert!((var - e_k).abs() < 0.1 * e_k, "var {var} vs e_K {e_k}");
+}
+
+/// BDP-KPGM and per-pair Poisson sampling must produce the same
+/// distribution: compare degree-distribution TV distance.
+#[test]
+fn bdp_matches_naive_poisson_kpgm() {
+    let d = 6;
+    let params = KpgmParams::replicated(InitiatorMatrix::THETA1, d);
+    let bdp = KpgmBdpSampler::new(&params);
+    let naive = NaiveKpgmSampler::with_mode(&params, EntryMode::Poisson);
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let reps = 200;
+    let mut hist_bdp = vec![0f64; 64];
+    let mut hist_naive = vec![0f64; 64];
+    for _ in 0..reps {
+        for (hist, g) in [
+            (&mut hist_bdp, bdp.sample(&mut rng)),
+            (&mut hist_naive, naive.sample(&mut rng)),
+        ] {
+            let graph = magbdp::graph::Graph::from_edges(g.n(), g.edges().to_vec());
+            for v in 0..g.n() as u32 {
+                let deg = graph.out_degree(v).min(hist.len() - 1);
+                hist[deg] += 1.0;
+            }
+        }
+    }
+    let total: f64 = hist_bdp.iter().sum();
+    let tv: f64 = hist_bdp
+        .iter()
+        .zip(&hist_naive)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / (2.0 * total);
+    assert!(tv < 0.03, "degree-distribution TV distance {tv}");
+}
+
+/// Algorithm 2 (MAGM-BDP) vs per-pair Poisson MAGM: same conditional
+/// distribution given the attribute realisation.
+#[test]
+fn magm_bdp_matches_naive_poisson_magm() {
+    let params = MagmParams::replicated(InitiatorMatrix::THETA2, 5, 0.35, 120);
+    let mut rng = Xoshiro256pp::seed_from_u64(13);
+    let assignment = params.sample_attributes(&mut rng);
+    let ours = MagmBdpSampler::new(&params, &assignment);
+    let naive = NaiveMagmSampler::with_mode(&params, &assignment, EntryMode::Poisson);
+
+    let reps = 150;
+    let ours_counts: Vec<f64> = (0..reps)
+        .map(|_| ours.sample(&mut rng).num_edges() as f64)
+        .collect();
+    let naive_counts: Vec<f64> = (0..reps)
+        .map(|_| naive.sample(&mut rng).num_edges() as f64)
+        .collect();
+    let (mo, mn) = (stats::mean(&ours_counts), stats::mean(&naive_counts));
+    let se = ((stats::variance(&ours_counts) + stats::variance(&naive_counts)) / reps as f64)
+        .sqrt();
+    assert!((mo - mn).abs() < 5.0 * se, "means {mo} vs {mn} (se {se})");
+
+    // Per-node out-degree means agree (a much finer check than totals).
+    let mut deg_ours = vec![0f64; 120];
+    let mut deg_naive = vec![0f64; 120];
+    for _ in 0..reps {
+        for (acc, g) in [(&mut deg_ours, ours.sample(&mut rng)), (&mut deg_naive, naive.sample(&mut rng))] {
+            for &(i, _) in g.edges() {
+                acc[i as usize] += 1.0;
+            }
+        }
+    }
+    let mut worst_z: f64 = 0.0;
+    for i in 0..120 {
+        let a = deg_ours[i] / reps as f64;
+        let b = deg_naive[i] / reps as f64;
+        // Poisson row sums: var ≈ mean.
+        let se = ((a + b).max(0.05) / reps as f64).sqrt();
+        worst_z = worst_z.max((a - b).abs() / se);
+    }
+    // 120 comparisons: Bonferroni-ish bound at z = 5.
+    assert!(worst_z < 5.0, "worst per-node z-score {worst_z}");
+}
+
+/// Theorem 3: `m_F, m_I ≤ log₂ n` with high probability; check across
+/// seeds and μ values at moderate n.
+#[test]
+fn theorem3_multiplicity_bounds_hold_whp() {
+    let d = 12;
+    let n = 1u64 << d;
+    let log2n = d as f64;
+    let mut violations = 0usize;
+    let mut total = 0usize;
+    for mu in [0.3, 0.5, 0.7] {
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+        for seed in 0..20 {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let a = params.sample_attributes(&mut rng);
+            let idx = ColorIndex::build(&params, &a);
+            total += 2;
+            if idx.m_f() > log2n {
+                violations += 1;
+            }
+            if idx.m_i() as f64 > log2n {
+                violations += 1;
+            }
+        }
+    }
+    // "whp" at n = 4096: allow a small number of boundary violations.
+    assert!(
+        violations * 20 <= total,
+        "{violations}/{total} multiplicity-bound violations"
+    );
+}
+
+/// Quilting in its exact regime (μ = 0.5) matches Algorithm 2's
+/// conditional mean per color pair.
+#[test]
+fn quilting_exact_regime_matches_bdp_sampler() {
+    let params = MagmParams::replicated(InitiatorMatrix::FIG1, 5, 0.5, 32);
+    let mut rng = Xoshiro256pp::seed_from_u64(17);
+    let assignment = params.sample_attributes(&mut rng);
+    let quilt = QuiltingSampler::new(&params, &assignment, &mut rng);
+    if !quilt.is_exact() {
+        // Extremely unlikely at μ=0.5, n=32; skip rather than mislead.
+        eprintln!("skipping: realisation fell outside the exact regime");
+        return;
+    }
+    let ours = MagmBdpSampler::new(&params, &assignment);
+    let reps = 400;
+    let mut sum_q = 0f64;
+    let mut sum_b = 0f64;
+    for _ in 0..reps {
+        sum_q += quilt.sample(&mut rng).num_edges() as f64;
+        sum_b += ours.sample(&mut rng).num_edges() as f64;
+    }
+    let (mq, mb) = (sum_q / reps as f64, sum_b / reps as f64);
+    let se = (mb.max(1.0) / reps as f64).sqrt();
+    assert!((mq - mb).abs() < 6.0 * se, "{mq} vs {mb}");
+}
+
+/// The generalised model (Eq. 3): heterogeneous per-level Θ^(k), μ^(k).
+/// Algorithm 2's conditional mean must match the brute-force
+/// Σ |V_c||V_c'| Γ_cc' with the mixed stack.
+#[test]
+fn heterogeneous_levels_sample_correctly() {
+    use magbdp::model::ParamStack;
+    let stack = ParamStack::new(
+        vec![
+            InitiatorMatrix::THETA1,
+            InitiatorMatrix::THETA2,
+            InitiatorMatrix::FIG1,
+            InitiatorMatrix::FIG2,
+        ],
+        vec![0.2, 0.5, 0.8, 0.4],
+    );
+    let params = MagmParams::new(stack, 150);
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let assignment = params.sample_attributes(&mut rng);
+    let sampler = MagmBdpSampler::new(&params, &assignment);
+    let idx = sampler.index();
+    let mut want = 0.0;
+    for (c, _) in idx.iter() {
+        for (cp, _) in idx.iter() {
+            want += idx.count(c) as f64
+                * idx.count(cp) as f64
+                * params.stack().kron_entry(c, cp);
+        }
+    }
+    let reps = 60;
+    let mean: f64 = (0..reps)
+        .map(|_| sampler.sample(&mut rng).num_edges() as f64)
+        .sum::<f64>()
+        / reps as f64;
+    let se = (want / reps as f64).sqrt();
+    assert!((mean - want).abs() < 6.0 * se, "mean {mean} want {want}");
+}
+
+/// The Bernoulli-vs-Poisson gap (§3, Taylor expansion): for small rates
+/// the simple-graph edge count of the BDP is close to, but below, the
+/// Bernoulli model's.
+#[test]
+fn bernoulli_poisson_gap_is_second_order() {
+    let d = 6;
+    let params = KpgmParams::replicated(InitiatorMatrix::THETA1, d);
+    let bernoulli = NaiveKpgmSampler::new(&params);
+    let bdp = KpgmBdpSampler::new(&params);
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+    let reps = 200;
+    let mean_bern: f64 = (0..reps)
+        .map(|_| bernoulli.sample(&mut rng).num_edges() as f64)
+        .sum::<f64>()
+        / reps as f64;
+    let mean_bdp_simple: f64 = (0..reps)
+        .map(|_| bdp.sample(&mut rng).into_simple().num_edges() as f64)
+        .sum::<f64>()
+        / reps as f64;
+    // Exact expectations: Σ p_ij vs Σ (1 - exp(-p_ij)).
+    let n = params.n();
+    let mut exact_bern = 0.0;
+    let mut exact_bdp = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let p = params.gamma(i, j);
+            exact_bern += p;
+            exact_bdp += 1.0 - (-p).exp();
+        }
+    }
+    assert!(exact_bdp < exact_bern);
+    let se = (exact_bern / reps as f64).sqrt();
+    assert!((mean_bern - exact_bern).abs() < 6.0 * se);
+    assert!((mean_bdp_simple - exact_bdp).abs() < 6.0 * se);
+}

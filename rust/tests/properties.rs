@@ -1,0 +1,183 @@
+//! Property-based integration tests (via the in-house quickcheck
+//! substrate): invariants that must hold for *arbitrary* parameters, not
+//! just the paper's presets.
+
+use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
+use magbdp::sampler::proposal::{Component, ProposalSet};
+use magbdp::sampler::{BdpSampler, CostModel};
+use magbdp::util::quickcheck::{check, from_fn};
+use magbdp::util::rng::Rng;
+
+/// A random MAGM scenario: θ entries in (0.05, 0.95), μ in (0.05, 0.95),
+/// d in 1..=8, n in 8..=256, plus a seed for the attribute draw.
+#[derive(Clone, Debug)]
+struct Scenario {
+    theta: [f64; 4],
+    mu: f64,
+    d: usize,
+    n: u64,
+    seed: u64,
+}
+
+fn scenarios() -> impl magbdp::util::quickcheck::Gen<Value = Scenario> {
+    from_fn(|rng: &mut dyn Rng| Scenario {
+        theta: [
+            0.05 + 0.9 * rng.next_f64(),
+            0.05 + 0.9 * rng.next_f64(),
+            0.05 + 0.9 * rng.next_f64(),
+            0.05 + 0.9 * rng.next_f64(),
+        ],
+        mu: 0.05 + 0.9 * rng.next_f64(),
+        d: 1 + rng.next_below(8) as usize,
+        n: 8 + rng.next_below(249),
+        seed: rng.next_u64(),
+    })
+}
+
+fn build(s: &Scenario) -> (MagmParams, ColorIndex, ProposalSet) {
+    let theta = InitiatorMatrix::new(s.theta[0], s.theta[1], s.theta[2], s.theta[3]);
+    let params = MagmParams::replicated(theta, s.d, s.mu, s.n);
+    let mut rng = magbdp::util::rng::Xoshiro256pp::seed_from_u64(s.seed);
+    use magbdp::util::rng::SeedableRng;
+    let _ = &mut rng;
+    let mut rng = <magbdp::util::rng::Xoshiro256pp as SeedableRng>::seed_from_u64(s.seed);
+    let a = params.sample_attributes(&mut rng);
+    let idx = ColorIndex::build(&params, &a);
+    let prop = ProposalSet::build(&params, &idx);
+    (params, idx, prop)
+}
+
+/// Theorem 4 as a universal property: Λ ≤ Λ' for the matching component
+/// at every color pair, for random parameters and realisations.
+#[test]
+fn prop_theorem4_domination() {
+    check(60, scenarios(), |s| {
+        let (params, idx, prop) = build(s);
+        let nc = 1u64 << s.d;
+        for c in 0..nc {
+            for cp in 0..nc {
+                let lam = prop.lambda(&params, &idx, c, cp);
+                let comp = Component(idx.class_of(&params, c), idx.class_of(&params, cp));
+                let lam_p = prop.lambda_prime(comp, c, cp);
+                if lam > lam_p * (1.0 + 1e-9) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Acceptance probabilities are always in [0, 1].
+#[test]
+fn prop_acceptance_in_unit_interval() {
+    check(60, scenarios(), |s| {
+        let (_, _, prop) = build(s);
+        let nc = 1u64 << s.d;
+        Component::ALL.iter().all(|&comp| {
+            (0..nc).all(|c| {
+                (0..nc).all(|cp| {
+                    let p = prop.accept_prob(comp, c, cp);
+                    (0.0..=1.0 + 1e-9).contains(&p)
+                })
+            })
+        })
+    });
+}
+
+/// The four components' total rate matches the §4.5 closed form
+/// m_F²e_M + m_F m_I e_MK + m_I m_F e_KM + m_I² e_K.
+#[test]
+fn prop_total_rate_closed_form() {
+    check(60, scenarios(), |s| {
+        let (params, idx, prop) = build(s);
+        let st = params.edge_stats();
+        let m_f = idx.m_f();
+        let m_i = idx.m_i() as f64;
+        let want =
+            m_f * m_f * st.e_m + m_f * m_i * st.e_mk + m_i * m_f * st.e_km + m_i * m_i * st.e_k;
+        (prop.total_rate() - want).abs() <= 1e-6 * want.max(1.0)
+    });
+}
+
+/// Cost-model estimate equals d × the compiled proposal rate (the two
+/// are independent implementations of the same formula).
+#[test]
+fn prop_cost_model_matches_proposal() {
+    check(40, scenarios(), |s| {
+        let (params, idx, prop) = build(s);
+        let est = CostModel::new().estimate(&params, &idx);
+        let want = s.d as f64 * prop.total_rate();
+        (est.magm_bdp - want).abs() <= 1e-6 * want.max(1.0)
+    });
+}
+
+/// BDP total-rate composition: a BDP built from any non-negative stack
+/// has total rate = product of per-level sums, and every dropped ball
+/// lands inside the 2^d grid.
+#[test]
+fn prop_bdp_rate_and_support() {
+    check(40, scenarios(), |s| {
+        let theta = InitiatorMatrix::new(
+            s.theta[0] * 2.0, // exercise rates > 1 too
+            s.theta[1],
+            s.theta[2],
+            s.theta[3] * 1.5,
+        );
+        let stack = vec![theta; s.d];
+        let bdp = BdpSampler::new(&stack);
+        let want: f64 = stack.iter().map(|t| t.sum()).product();
+        if (bdp.total_rate() - want).abs() > 1e-9 * want {
+            return false;
+        }
+        use magbdp::util::rng::SeedableRng;
+        let mut rng =
+            <magbdp::util::rng::Xoshiro256pp as SeedableRng>::seed_from_u64(s.seed);
+        (0..200).all(|_| {
+            let (i, j) = bdp.drop_ball(&mut rng);
+            i < bdp.side() && j < bdp.side()
+        })
+    });
+}
+
+/// μ = 0.5 with n = 2^d ⇒ e_M = e_K for ANY θ (Section 2.2 note).
+#[test]
+fn prop_em_equals_ek_at_half() {
+    check(60, scenarios(), |s| {
+        let theta = InitiatorMatrix::new(s.theta[0], s.theta[1], s.theta[2], s.theta[3]);
+        let params = MagmParams::replicated(theta, s.d, 0.5, 1u64 << s.d);
+        let st = params.edge_stats();
+        (st.e_m - st.e_k).abs() <= 1e-9 * st.e_k.max(1e-12)
+    });
+}
+
+/// Color probabilities are a distribution; expected color counts sum to n.
+#[test]
+fn prop_color_probabilities_normalised() {
+    check(60, scenarios(), |s| {
+        let theta = InitiatorMatrix::new(s.theta[0], s.theta[1], s.theta[2], s.theta[3]);
+        let params = MagmParams::replicated(theta, s.d, s.mu, s.n);
+        let total: f64 = (0..(1u64 << s.d))
+            .map(|c| params.expected_color_count(c))
+            .sum();
+        (total - s.n as f64).abs() < 1e-6 * s.n as f64
+    });
+}
+
+/// Multi→simple conversion never increases edge count and is idempotent.
+#[test]
+fn prop_simple_graph_dedup() {
+    check(40, scenarios(), |s| {
+        let (params, _, _) = build(s);
+        use magbdp::sampler::Sampler;
+        use magbdp::util::rng::SeedableRng;
+        let mut rng =
+            <magbdp::util::rng::Xoshiro256pp as SeedableRng>::seed_from_u64(s.seed ^ 1);
+        let a = params.sample_attributes(&mut rng);
+        let sampler = magbdp::sampler::MagmBdpSampler::new(&params, &a);
+        let g = sampler.sample(&mut rng);
+        let multi = g.num_edges();
+        let simple = g.into_simple();
+        simple.num_edges() <= multi
+    });
+}

@@ -1,0 +1,111 @@
+//! Coordinator/service integration: trace execution, mixed algorithms,
+//! XLA-backed jobs, metrics, determinism under parallelism.
+
+use magbdp::coordinator::{GenerationService, JobSpec};
+
+#[test]
+fn mixed_algorithm_trace_runs_clean() {
+    let svc = GenerationService::new(4);
+    let trace = "\
+# mixed workload
+d=8 mu=0.4 seed=1 algo=magm-bdp
+d=8 mu=0.4 seed=1 algo=simple
+d=8 mu=0.4 seed=1 algo=quilting
+d=8 mu=0.4 seed=1 algo=hybrid
+theta=0.35,0.52,0.52,0.95 d=9 mu=0.6 seed=2 algo=magm-bdp
+";
+    let results = svc.run_trace(trace).expect("trace parses");
+    assert_eq!(results.len(), 5);
+    for r in &results {
+        assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+        assert!(r.edges > 0, "job {} produced no edges", r.id);
+    }
+    // Same model/seed across algorithms ⇒ edge counts in the same ballpark
+    // (they share the attribute realisation because seed fixes it).
+    let counts: Vec<u64> = results[..4].iter().map(|r| r.edges).collect();
+    let max = *counts.iter().max().unwrap() as f64;
+    let min = *counts.iter().min().unwrap() as f64;
+    assert!(max / min < 1.6, "edge counts diverge: {counts:?}");
+
+    assert_eq!(svc.metrics().counter("service.jobs").get(), 5);
+    assert!(svc.metrics().histogram("service.job_latency_ns").count() == 5);
+}
+
+#[test]
+fn xla_job_through_service() {
+    let svc = GenerationService::new(2);
+    let results = svc
+        .run_trace("d=8 mu=0.5 seed=7 algo=magm-bdp-xla\nd=8 mu=0.5 seed=7 algo=magm-bdp\n")
+        .expect("trace parses");
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    // Same seed ⇒ same attribute realisation; counts must be within
+    // Poisson noise of each other.
+    let (a, b) = (results[0].edges as f64, results[1].edges as f64);
+    assert!((a - b).abs() < 8.0 * a.max(b).sqrt().max(1.0), "{a} vs {b}");
+    assert!(svc.metrics().counter("service.xla_dispatches").get() >= 1);
+}
+
+#[test]
+fn bad_job_line_is_rejected_not_run() {
+    let svc = GenerationService::new(1);
+    let err = svc.run_trace("d=8 mu=0.4\nfrobnicate=yes\n").unwrap_err();
+    assert!(err.contains("unknown key"));
+}
+
+#[test]
+fn service_parallelism_does_not_change_results() {
+    let trace: String = (0..8)
+        .map(|i| format!("d=7 mu=0.45 seed={} algo=magm-bdp\n", 100 + i))
+        .collect();
+    let serial: Vec<u64> = GenerationService::new(1)
+        .run_trace(&trace)
+        .unwrap()
+        .iter()
+        .map(|r| r.edges)
+        .collect();
+    let parallel: Vec<u64> = GenerationService::new(8)
+        .run_trace(&trace)
+        .unwrap()
+        .iter()
+        .map(|r| r.edges)
+        .collect();
+    assert_eq!(serial, parallel, "job results must not depend on pool size");
+}
+
+#[test]
+fn failure_injection_xla_capacity_exceeded() {
+    // d = 22 exceeds the accept artifact's n_max (2^20 colors): the job
+    // must fail with a structured error while the service keeps running
+    // and subsequent jobs succeed.
+    let svc = GenerationService::new(2);
+    let results = svc
+        .run_trace(
+            "d=22 mu=0.5 n=100 seed=1 algo=magm-bdp-xla\n\
+             d=6 mu=0.5 seed=2 algo=magm-bdp\n",
+        )
+        .expect("trace parses");
+    assert_eq!(results.len(), 2);
+    let err = results[0].error.as_ref().expect("capacity error surfaced");
+    assert!(err.contains("n_max") || err.contains("exceed"), "{err}");
+    assert!(results[1].error.is_none(), "healthy job must still run");
+    assert_eq!(svc.metrics().counter("service.errors").get(), 1);
+}
+
+#[test]
+fn collect_graph_round_trips_through_tsv() {
+    let mut spec = JobSpec::parse_line(0, "d=6 mu=0.5 seed=5").unwrap();
+    spec.collect_graph = true;
+    let metrics = magbdp::util::metrics::Registry::new();
+    let result = magbdp::coordinator::service::run_job(&spec, &metrics);
+    let edges = result.edges_list.expect("collected");
+
+    let dir = std::env::temp_dir().join("magbdp-service-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("job.tsv").to_string_lossy().into_owned();
+    magbdp::graph::io::write_tsv(&path, &edges).unwrap();
+    let back = magbdp::graph::io::read_tsv(&path).unwrap();
+    assert_eq!(back, edges);
+}
