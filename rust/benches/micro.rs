@@ -9,13 +9,18 @@
 //!   * end-to-end Algorithm 2 per-ball cost
 //!   * XLA acceptance batch dispatch (per-pair amortised cost)
 //!
+//! Results additionally land in the machine-readable `BENCH_micro.json`
+//! at the repo root (see `benchkit::publish_json`), so the perf
+//! trajectory is trackable across PRs.
+//!
 //! Run: `cargo bench --bench micro`
 
 use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
+use magbdp::sampler::bdp::BallBatch;
 use magbdp::sampler::magm_bdp::AcceptBackend;
 use magbdp::sampler::proposal::Component;
 use magbdp::sampler::{BdpSampler, MagmBdpSampler, Sampler};
-use magbdp::util::benchkit::Bench;
+use magbdp::util::benchkit::{publish_json, Bench};
 use magbdp::util::rng::dist::{binomial, poisson};
 use magbdp::util::rng::{alias::AliasTable, Rng, SeedableRng, Xoshiro256pp};
 
@@ -143,11 +148,15 @@ fn main() {
     for m in &results {
         println!("{m}");
     }
+    match publish_json("micro", &results) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_micro.json: {e}"),
+    }
 }
 
 fn xla_micro(
     bench: &Bench,
-) -> anyhow::Result<Vec<magbdp::util::benchkit::Measurement>> {
+) -> magbdp::util::error::Result<Vec<magbdp::util::benchkit::Measurement>> {
     let params = MagmParams::replicated(InitiatorMatrix::THETA1, 12, 0.4, 1 << 12);
     let mut rng = Xoshiro256pp::seed_from_u64(8);
     let assignment = params.sample_attributes(&mut rng);
@@ -156,14 +165,18 @@ fn xla_micro(
     let mut backend = magbdp::runtime::XlaAccept::new(&params, &index)?;
     let batch = backend.batch_capacity();
     let bdp = sampler.proposal().bdp(Component::FF).clone();
-    let pairs: Vec<(u64, u64)> = (0..batch).map(|_| bdp.drop_ball(&mut rng)).collect();
+    let mut balls = BallBatch::with_capacity(batch);
+    for _ in 0..batch {
+        let (c, cp) = bdp.drop_ball(&mut rng);
+        balls.push(c, cp);
+    }
     let mut out = Vec::new();
     let proposal = sampler.proposal().clone();
     let m = bench.run_with_units(
         &format!("xla accept_batch dispatch ({batch} pairs)"),
         batch as f64,
         move |_| {
-            backend.accept_probs(&proposal, Component::FF, &pairs, &mut out);
+            backend.accept_probs(&proposal, Component::FF, &balls, &mut out);
             out.len()
         },
     );

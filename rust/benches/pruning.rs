@@ -1,0 +1,131 @@
+//! Occupancy-pruned descent vs the plain descent — the §Perf evidence
+//! for the pruned hot path.
+//!
+//! Sparse configuration from the acceptance criteria: `d = 16`,
+//! `n = 2^10`, `μ = 0.3` — `2^16` colors over `2^10` nodes, so ≥ 98% of
+//! colors are unoccupied and almost every proposed ball is a
+//! sure-rejection. The paper's Algorithm 2 pays a full `O(d)` descent
+//! plus an acceptance lookup to discover that; the pruned descent aborts
+//! at the first dead prefix boundary.
+//!
+//! Measured quantities (per *proposed* ball, i.e. wall time divided by
+//! balls drawn, not by survivors):
+//!   * `unpruned`: `drop_ball` + acceptance lookup (the pre-pruning hot
+//!     path, reconstructed inline).
+//!   * `pruned`: `ProposalSet::drop_pruned` + acceptance lookup on
+//!     survivors (the production hot path).
+//!
+//! Also times one full `sample_counted` realisation for context, prints
+//! the speedup, and records everything into `BENCH_micro.json`
+//! (section "pruning").
+//!
+//! Run: `cargo bench --bench pruning`
+
+use magbdp::model::{InitiatorMatrix, MagmParams};
+use magbdp::sampler::proposal::Component;
+use magbdp::sampler::MagmBdpSampler;
+use magbdp::util::benchkit::{publish_json, Bench};
+use magbdp::util::rng::{SeedableRng, Xoshiro256pp};
+
+fn main() {
+    let bench = Bench::new();
+    let (d, n, mu) = (16usize, 1u64 << 10, 0.3f64);
+    let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let assignment = params.sample_attributes(&mut rng);
+    let sampler = MagmBdpSampler::new(&params, &assignment);
+    let prop = sampler.proposal().clone();
+
+    let balls_per_iter = 100_000u64;
+    let mut results = Vec::new();
+
+    // Survival diagnostics: how much work the prune actually removes.
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut survivors = 0u64;
+        for _ in 0..balls_per_iter {
+            if prop.drop_pruned(Component::FF, &mut rng).is_some() {
+                survivors += 1;
+            }
+        }
+        println!(
+            "config d={d} n=2^10 mu={mu}: occupied colors = {}, FF survival rate = {:.4}%",
+            sampler.index().occupied_colors(),
+            100.0 * survivors as f64 / balls_per_iter as f64
+        );
+    }
+
+    // Unpruned per-proposed-ball cost: full descent + acceptance lookup
+    // (exactly the pre-pruning hot path of sample_counted).
+    let unpruned = {
+        let prop = prop.clone();
+        let bdp = prop.bdp(Component::FF).clone();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        bench.run_with_units(
+            &format!("unpruned drop+accept per ball (FF d={d} n=2^10 mu={mu})"),
+            balls_per_iter as f64,
+            move |_| {
+                let mut acc = 0.0f64;
+                for _ in 0..balls_per_iter {
+                    let (c, cp) = bdp.drop_ball(&mut rng);
+                    acc += prop.accept_prob(Component::FF, c, cp);
+                }
+                acc
+            },
+        )
+    };
+    println!("{unpruned}");
+
+    // Pruned per-proposed-ball cost: the production hot path.
+    let pruned = {
+        let prop = prop.clone();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        bench.run_with_units(
+            &format!("pruned drop+accept per ball (FF d={d} n=2^10 mu={mu})"),
+            balls_per_iter as f64,
+            move |_| {
+                let mut acc = 0.0f64;
+                for _ in 0..balls_per_iter {
+                    if let Some((c, cp)) = prop.drop_pruned(Component::FF, &mut rng) {
+                        acc += prop.accept_prob(Component::FF, c, cp);
+                    }
+                }
+                acc
+            },
+        )
+    };
+    println!("{pruned}");
+
+    // One full realisation for context (all four components, pruned).
+    let full = {
+        let expected = sampler.expected_proposals();
+        bench.run_with_units(
+            &format!("algorithm2 sample_counted (d={d} n=2^10 mu={mu}, ~{expected:.0} balls)"),
+            expected,
+            |i| {
+                let mut rng = Xoshiro256pp::seed_from_u64(100 + i as u64);
+                sampler.sample_counted(&mut rng).1
+            },
+        )
+    };
+    println!("{full}");
+
+    let speedup = unpruned.median / pruned.median;
+    println!("\nspeedup per proposed ball (unpruned / pruned): {speedup:.2}×");
+
+    results.push(unpruned);
+    results.push(pruned);
+    results.push(full);
+    match publish_json("pruning", &results) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_micro.json: {e}"),
+    }
+
+    // The acceptance bar for this optimisation: ≥ 2× on sure-rejections
+    // in the sparse regime.
+    assert!(
+        speedup >= 2.0,
+        "pruned descent must be ≥ 2× faster per proposed ball (got {speedup:.2}×)"
+    );
+    println!("ok: pruned descent ≥ 2× faster per proposed ball in the sparse regime");
+}

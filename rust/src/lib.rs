@@ -24,7 +24,9 @@
 //!   graph-generation service.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/
 //!   Pallas artifacts (`artifacts/*.hlo.txt`) and evaluates acceptance
-//!   probabilities on the XLA backend.
+//!   probabilities on the XLA backend. Gated behind the `xla-runtime`
+//!   cargo feature (the hermetic default build ships API-compatible
+//!   stubs that report the runtime unavailable).
 //!
 //! ## Quickstart
 //!

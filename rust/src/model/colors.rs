@@ -1,7 +1,26 @@
 //! Color machinery of Section 4: node groups `V_c`, the frequent /
 //! infrequent partition, and the multiplicity bounds `m_F`, `m_I`.
-
-use std::collections::HashMap;
+//!
+//! # Index layout (§Perf optimization: flat CSR)
+//!
+//! `ColorIndex` is the hot lookup on Algorithm 2's accept/materialise
+//! path (`count`, `sample_node` run once or twice per *accepted* ball,
+//! and the occupancy data feeds the pruned descent for every *proposed*
+//! ball), so it is stored as a flat CSR structure rather than a hash map:
+//!
+//! * `perm`    — all node ids, sorted by `(color, node)`: the nodes of one
+//!   color are one contiguous slice (node ids ascending within a color).
+//! * `keys`    — the occupied colors, ascending. `offsets[s]..offsets[s+1]`
+//!   is `keys[s]`'s window into `perm` (classic CSR offsets).
+//! * `dense_lut` — for `d ≤ 22`, a `2^d`-entry color → slot+1 table
+//!   (0 = unoccupied) making `count`/`nodes`/`sample_node` two branch-light
+//!   O(1) loads with no hashing. Above `d = 22` the table would exceed
+//!   16 MiB, so lookups binary-search the sorted `keys` instead.
+//!
+//! Iteration over occupied colors is in ascending color order (it walks
+//! `keys`), which makes every consumer — `ProposalSet::build`,
+//! `counts_f32`, the quilting bucketiser — deterministic and
+//! prefetch-friendly, unlike the old `HashMap` ordering.
 
 use super::magm::{AttributeAssignment, MagmParams};
 use crate::util::rng::Rng;
@@ -15,6 +34,9 @@ pub enum ColorClass {
     Infrequent,
 }
 
+/// Colors up to `2^22` get the dense color → slot table (≤ 16 MiB).
+const DENSE_LUT_MAX_D: usize = 22;
+
 /// Index over a concrete attribute assignment: `V_c` membership lists
 /// (Eq. 10), per-color counts, and the observed multiplicities
 /// `m_F = max_{c∈F} |V_c| / E[|V_c|]`, `m_I = max_{c∈I} |V_c|` (Eq. 19).
@@ -22,8 +44,14 @@ pub enum ColorClass {
 pub struct ColorIndex {
     d: usize,
     n: u64,
-    /// Occupied colors only: color -> node ids (sorted ascending).
-    nodes_by_color: HashMap<u64, Vec<u32>>,
+    /// Node ids sorted by `(color, node)` — CSR values.
+    perm: Vec<u32>,
+    /// Occupied colors, ascending — CSR row keys.
+    keys: Vec<u64>,
+    /// CSR offsets into `perm`; `len == keys.len() + 1`.
+    offsets: Vec<u32>,
+    /// color → slot+1 (0 = unoccupied), present iff `d ≤ DENSE_LUT_MAX_D`.
+    dense_lut: Option<Vec<u32>>,
     m_f: f64,
     m_i: u64,
 }
@@ -31,31 +59,138 @@ pub struct ColorIndex {
 impl ColorIndex {
     /// Build from a MAGM and one attribute realisation.
     pub fn build(params: &MagmParams, assignment: &AttributeAssignment) -> Self {
+        Self::build_with_lut_threshold(params, assignment, DENSE_LUT_MAX_D)
+    }
+
+    /// Test hook: build with an explicit dense-LUT depth threshold, so the
+    /// binary-search path is exercisable at small `d`.
+    #[doc(hidden)]
+    pub fn build_with_lut_threshold(
+        params: &MagmParams,
+        assignment: &AttributeAssignment,
+        lut_max_d: usize,
+    ) -> Self {
         assert_eq!(assignment.n() as u64, params.n(), "assignment size mismatch");
         assert_eq!(assignment.d(), params.d(), "assignment depth mismatch");
-        let mut nodes_by_color: HashMap<u64, Vec<u32>> = HashMap::new();
-        for (i, &c) in assignment.colors().iter().enumerate() {
-            nodes_by_color.entry(c).or_default().push(i as u32);
-        }
+        let n = params.n();
+        assert!(n <= u32::MAX as u64, "CSR offsets need n ≤ u32::MAX");
+        let d = params.d();
+        let colors = assignment.colors();
+
+        let (keys, offsets, perm) = if d <= lut_max_d && d <= DENSE_LUT_MAX_D {
+            Self::build_csr_counting(d, colors)
+        } else {
+            Self::build_csr_sorting(colors)
+        };
+        let dense_lut = if d <= lut_max_d && d <= DENSE_LUT_MAX_D {
+            let mut lut = vec![0u32; 1usize << d];
+            for (slot, &c) in keys.iter().enumerate() {
+                lut[c as usize] = slot as u32 + 1;
+            }
+            Some(lut)
+        } else {
+            None
+        };
+
         let mut m_f = 0.0f64;
         let mut m_i = 0u64;
-        for (&c, nodes) in &nodes_by_color {
+        for (slot, &c) in keys.iter().enumerate() {
+            let cnt = (offsets[slot + 1] - offsets[slot]) as u64;
             let expected = params.expected_color_count(c);
             if expected >= 1.0 {
-                m_f = m_f.max(nodes.len() as f64 / expected);
+                m_f = m_f.max(cnt as f64 / expected);
             } else {
-                m_i = m_i.max(nodes.len() as u64);
+                m_i = m_i.max(cnt);
             }
         }
         // m_F ≥ 1 keeps the FF proposal valid even when every frequent
         // color is under-occupied in this realisation (Λ' must dominate
         // the EXPECTED-count-based rates of Eq. 21).
         Self {
-            d: params.d(),
-            n: params.n(),
-            nodes_by_color,
+            d,
+            n,
+            perm,
+            keys,
+            offsets,
+            dense_lut,
             m_f: m_f.max(1.0),
             m_i: m_i.max(1),
+        }
+    }
+
+    /// Counting-sort CSR build: O(n + 2^d), used when the per-color count
+    /// array fits comfortably in memory.
+    fn build_csr_counting(d: usize, colors: &[u64]) -> (Vec<u64>, Vec<u32>, Vec<u32>) {
+        let num_colors = 1usize << d;
+        let mut counts = vec![0u32; num_colors];
+        for &c in colors {
+            counts[c as usize] += 1;
+        }
+        let occupied = counts.iter().filter(|&&c| c > 0).count();
+        let mut keys = Vec::with_capacity(occupied);
+        let mut offsets = Vec::with_capacity(occupied + 1);
+        offsets.push(0u32);
+        // slot_of[c] = CSR slot of color c (valid only for occupied c).
+        let mut slot_of = counts; // reuse the allocation
+        let mut acc = 0u32;
+        for c in 0..num_colors {
+            let cnt = slot_of[c];
+            if cnt > 0 {
+                keys.push(c as u64);
+                slot_of[c] = keys.len() as u32 - 1;
+                acc += cnt;
+                offsets.push(acc);
+            }
+        }
+        let mut cursor: Vec<u32> = offsets[..occupied].to_vec();
+        let mut perm = vec![0u32; colors.len()];
+        for (i, &c) in colors.iter().enumerate() {
+            let s = slot_of[c as usize] as usize;
+            perm[cursor[s] as usize] = i as u32;
+            cursor[s] += 1;
+        }
+        (keys, offsets, perm)
+    }
+
+    /// Comparison-sort CSR build: O(n log n), independent of `2^d` — the
+    /// deep-`d` path where a counting array would not fit.
+    fn build_csr_sorting(colors: &[u64]) -> (Vec<u64>, Vec<u32>, Vec<u32>) {
+        let mut pairs: Vec<(u64, u32)> = colors
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as u32))
+            .collect();
+        pairs.sort_unstable();
+        let mut keys = Vec::new();
+        let mut offsets = vec![0u32];
+        let mut perm = Vec::with_capacity(pairs.len());
+        for (i, &(c, node)) in pairs.iter().enumerate() {
+            if i == 0 || keys.last() != Some(&c) {
+                if i > 0 {
+                    offsets.push(i as u32);
+                }
+                keys.push(c);
+            }
+            perm.push(node);
+        }
+        offsets.push(pairs.len() as u32);
+        (keys, offsets, perm)
+    }
+
+    /// CSR slot of a color, `None` if unoccupied.
+    #[inline]
+    fn slot(&self, c: u64) -> Option<usize> {
+        match &self.dense_lut {
+            Some(lut) => {
+                if c >= lut.len() as u64 {
+                    return None;
+                }
+                match lut[c as usize] {
+                    0 => None,
+                    s => Some(s as usize - 1),
+                }
+            }
+            None => self.keys.binary_search(&c).ok(),
         }
     }
 
@@ -72,24 +207,35 @@ impl ColorIndex {
     /// `|V_c|` — zero for unoccupied colors.
     #[inline]
     pub fn count(&self, c: u64) -> u64 {
-        self.nodes_by_color.get(&c).map_or(0, |v| v.len() as u64)
+        match self.slot(c) {
+            Some(s) => (self.offsets[s + 1] - self.offsets[s]) as u64,
+            None => 0,
+        }
     }
 
-    /// The nodes with color `c` (empty slice if none).
+    /// The nodes with color `c` (empty slice if none), ids ascending.
     #[inline]
     pub fn nodes(&self, c: u64) -> &[u32] {
-        self.nodes_by_color.get(&c).map_or(&[], |v| v.as_slice())
+        match self.slot(c) {
+            Some(s) => &self.perm[self.offsets[s] as usize..self.offsets[s + 1] as usize],
+            None => &[],
+        }
     }
 
     /// Number of distinct occupied colors.
     #[inline]
     pub fn occupied_colors(&self) -> usize {
-        self.nodes_by_color.len()
+        self.keys.len()
     }
 
-    /// Iterate `(color, nodes)` over occupied colors (arbitrary order).
+    /// Iterate `(color, nodes)` over occupied colors, colors ascending.
     pub fn iter(&self) -> impl Iterator<Item = (u64, &[u32])> {
-        self.nodes_by_color.iter().map(|(&c, v)| (c, v.as_slice()))
+        self.keys.iter().enumerate().map(move |(s, &c)| {
+            (
+                c,
+                &self.perm[self.offsets[s] as usize..self.offsets[s + 1] as usize],
+            )
+        })
     }
 
     /// Observed `m_F` (≥ 1).
@@ -106,9 +252,9 @@ impl ColorIndex {
 
     /// `max_c |V_c|` — the §4.2 simple-proposal multiplicity `m` (Eq. 14).
     pub fn m_max(&self) -> u64 {
-        self.nodes_by_color
-            .values()
-            .map(|v| v.len() as u64)
+        self.offsets
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as u64)
             .max()
             .unwrap_or(0)
     }
@@ -134,7 +280,8 @@ impl ColorIndex {
     }
 
     /// Dense `|V_c|` table as f32, zero-padded to `n_max` — the layout the
-    /// `accept_batch` AOT artifact expects.
+    /// `accept_batch` AOT artifact expects. Walks occupied colors in
+    /// ascending order.
     pub fn counts_f32(&self, n_max: usize) -> Vec<f32> {
         assert!(
             (1usize << self.d) <= n_max,
@@ -142,8 +289,8 @@ impl ColorIndex {
             1u64 << self.d
         );
         let mut out = vec![0.0f32; n_max];
-        for (&c, v) in &self.nodes_by_color {
-            out[c as usize] = v.len() as f32;
+        for (s, &c) in self.keys.iter().enumerate() {
+            out[c as usize] = (self.offsets[s + 1] - self.offsets[s]) as f32;
         }
         out
     }
@@ -154,6 +301,7 @@ mod tests {
     use super::*;
     use crate::model::params::InitiatorMatrix;
     use crate::util::rng::{SeedableRng, Xoshiro256pp};
+    use std::collections::HashMap;
 
     fn setup(d: usize, mu: f64, n: u64, seed: u64) -> (MagmParams, ColorIndex) {
         let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
@@ -181,6 +329,55 @@ mod tests {
         // An out-of-range color is simply unoccupied.
         assert_eq!(idx.count(u64::MAX >> 1), 0);
         assert!(idx.nodes(u64::MAX >> 1).is_empty());
+    }
+
+    #[test]
+    fn iter_is_sorted_and_nodes_ascend() {
+        let (_, idx) = setup(7, 0.45, 800, 10);
+        let mut prev_color = None;
+        for (c, nodes) in idx.iter() {
+            if let Some(p) = prev_color {
+                assert!(c > p, "colors must ascend: {p} then {c}");
+            }
+            prev_color = Some(c);
+            assert!(nodes.windows(2).all(|w| w[0] < w[1]), "node ids ascend");
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_paths_agree() {
+        // Same realisation through the LUT path and the binary-search
+        // path must index identically.
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 9, 0.35, 600);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let a = params.sample_attributes(&mut rng);
+        let dense = ColorIndex::build_with_lut_threshold(&params, &a, 22);
+        let sparse = ColorIndex::build_with_lut_threshold(&params, &a, 0);
+        assert_eq!(dense.occupied_colors(), sparse.occupied_colors());
+        assert_eq!(dense.m_f(), sparse.m_f());
+        assert_eq!(dense.m_i(), sparse.m_i());
+        for c in 0..params.num_colors() {
+            assert_eq!(dense.count(c), sparse.count(c), "c={c}");
+            assert_eq!(dense.nodes(c), sparse.nodes(c), "c={c}");
+        }
+    }
+
+    #[test]
+    fn deep_d_uses_sorting_path_correctly() {
+        // d = 24 > DENSE_LUT_MAX_D exercises the production sorting build.
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 24, 0.5, 500);
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let a = params.sample_attributes(&mut rng);
+        let idx = ColorIndex::build(&params, &a);
+        let mut want: HashMap<u64, Vec<u32>> = HashMap::new();
+        for (i, &c) in a.colors().iter().enumerate() {
+            want.entry(c).or_default().push(i as u32);
+        }
+        assert_eq!(idx.occupied_colors(), want.len());
+        for (c, nodes) in want {
+            assert_eq!(idx.nodes(c), nodes.as_slice(), "c={c}");
+        }
+        assert_eq!(idx.count(1u64 << 23 | 1), idx.nodes(1u64 << 23 | 1).len() as u64);
     }
 
     #[test]

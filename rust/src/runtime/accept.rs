@@ -9,174 +9,250 @@
 //! lookup, which is exactly what makes the parity integration test a
 //! strong cross-check of both.
 //!
-//! The `|V_c|` table and target `Θ` literal are built once per sampler
-//! instance; per call only the (tiny) proposal stack and the color
-//! vectors are marshalled.
+//! Proposals arrive as [`BallBatch`] structure-of-arrays chunks, so the
+//! row/column vectors marshal straight into the artifact's two `i32`
+//! input buffers with no tuple unpacking.
+//!
+//! Like [`super::XlaRuntime`], the real implementation is gated behind
+//! the `xla-runtime` feature; the default build gets an API-compatible
+//! stub whose constructor reports the runtime as unavailable.
 
-use anyhow::{ensure, Context, Result};
-
-use super::XlaRuntime;
-use crate::model::colors::ColorIndex;
-use crate::model::magm::MagmParams;
-use crate::model::params::InitiatorMatrix;
 use crate::sampler::magm_bdp::AcceptBackend;
-use crate::sampler::proposal::{Component, ProposalSet};
 
-/// Batched acceptance-probability evaluation on the PJRT runtime.
-///
-/// The target `Θ` stack and the `|V_c|` table (up to 4 MiB) are uploaded
-/// to device-resident buffers once at construction and reused across all
-/// dispatches (§Perf optimization 3); only the per-call proposal stack
-/// (384 B) and the color vectors are marshalled per dispatch.
-pub struct XlaAccept {
-    rt: &'static XlaRuntime,
-    d_max: usize,
-    batch: usize,
-    theta: xla::PjRtBuffer,
-    counts: xla::PjRtBuffer,
-    // SAFETY: `buffer_from_host_literal` does NOT await the host→device
-    // copy (see xla_rs.cc); the source literals must stay alive as long
-    // as their buffers do.
-    _theta_lit: xla::Literal,
-    _counts_lit: xla::Literal,
-    /// Pairs scored through the artifact (for reports/metrics).
-    pub pairs_scored: u64,
-    /// Artifact invocations (each scores up to `batch` pairs).
-    pub dispatches: u64,
-}
+#[cfg(feature = "xla-runtime")]
+mod real {
+    use super::AcceptBackend;
+    use crate::model::colors::ColorIndex;
+    use crate::model::magm::MagmParams;
+    use crate::model::params::InitiatorMatrix;
+    use crate::runtime::XlaRuntime;
+    use crate::sampler::bdp::BallBatch;
+    use crate::sampler::proposal::{Component, ProposalSet};
+    use crate::util::error::{Context, Result};
 
-impl XlaAccept {
-    /// Build the per-realisation state (counts table + target Θ literal).
-    pub fn new(params: &MagmParams, index: &ColorIndex) -> Result<Self> {
-        let rt = XlaRuntime::global()?;
-        let meta = rt.meta("accept_batch")?;
-        let d_max = meta.u64("d_max")? as usize;
-        let batch = meta.u64("batch")? as usize;
-        let n_max = meta.u64("n_max")? as usize;
-        ensure!(
-            params.d() <= d_max,
-            "model depth {} exceeds artifact d_max {d_max}",
-            params.d()
-        );
-        ensure!(
-            (1u64 << params.d()) as usize <= n_max,
-            "2^d colors exceed artifact n_max {n_max}"
-        );
-        let theta_lit = xla::Literal::vec1(&params.stack().padded_theta_f32(d_max))
-            .reshape(&[d_max as i64, 2, 2])
-            .context("reshape theta literal")?;
-        let theta = rt.upload(&theta_lit)?;
-        let counts_lit = xla::Literal::vec1(&index.counts_f32(n_max));
-        let counts = rt.upload(&counts_lit)?;
-        Ok(Self {
-            rt,
-            d_max,
-            batch,
-            theta,
-            counts,
-            _theta_lit: theta_lit,
-            _counts_lit: counts_lit,
-            pairs_scored: 0,
-            dispatches: 0,
-        })
+    /// Batched acceptance-probability evaluation on the PJRT runtime.
+    ///
+    /// The target `Θ` stack and the `|V_c|` table (up to 4 MiB) are uploaded
+    /// to device-resident buffers once at construction and reused across all
+    /// dispatches (§Perf optimization 3); only the per-call proposal stack
+    /// (384 B) and the color vectors are marshalled per dispatch.
+    pub struct XlaAccept {
+        rt: &'static XlaRuntime,
+        d_max: usize,
+        batch: usize,
+        theta: xla::PjRtBuffer,
+        counts: xla::PjRtBuffer,
+        // SAFETY: `buffer_from_host_literal` does NOT await the host→device
+        // copy (see xla_rs.cc); the source literals must stay alive as long
+        // as their buffers do.
+        _theta_lit: xla::Literal,
+        _counts_lit: xla::Literal,
+        /// Pairs scored through the artifact (for reports/metrics).
+        pub pairs_scored: u64,
+        /// Artifact invocations (each scores up to `batch` pairs).
+        pub dispatches: u64,
     }
 
-    /// Artifact batch capacity (pairs per dispatch).
-    pub fn batch_capacity(&self) -> usize {
-        self.batch
-    }
-
-    /// Pad a proposal component stack to the artifact layout and upload.
-    /// Returns the buffer TOGETHER with its backing literal — the literal
-    /// must outlive every use of the buffer (async H2D copy).
-    fn component_buffer(
-        &self,
-        stack: &[InitiatorMatrix],
-    ) -> Result<(xla::PjRtBuffer, xla::Literal)> {
-        let mut flat: Vec<f32> = Vec::with_capacity(self.d_max * 4);
-        for t in stack {
-            flat.extend(t.flat().iter().map(|&x| x as f32));
+    impl XlaAccept {
+        /// Build the per-realisation state (counts table + target Θ literal).
+        pub fn new(params: &MagmParams, index: &ColorIndex) -> Result<Self> {
+            let rt = XlaRuntime::global()?;
+            let meta = rt.meta("accept_batch")?;
+            let d_max = meta.u64("d_max")? as usize;
+            let batch = meta.u64("batch")? as usize;
+            let n_max = meta.u64("n_max")? as usize;
+            crate::ensure!(
+                params.d() <= d_max,
+                "model depth {} exceeds artifact d_max {d_max}",
+                params.d()
+            );
+            crate::ensure!(
+                (1u64 << params.d()) as usize <= n_max,
+                "2^d colors exceed artifact n_max {n_max}"
+            );
+            let theta_lit = xla::Literal::vec1(&params.stack().padded_theta_f32(d_max))
+                .reshape(&[d_max as i64, 2, 2])
+                .context("reshape theta literal")?;
+            let theta = rt.upload(&theta_lit)?;
+            let counts_lit = xla::Literal::vec1(&index.counts_f32(n_max));
+            let counts = rt.upload(&counts_lit)?;
+            Ok(Self {
+                rt,
+                d_max,
+                batch,
+                theta,
+                counts,
+                _theta_lit: theta_lit,
+                _counts_lit: counts_lit,
+                pairs_scored: 0,
+                dispatches: 0,
+            })
         }
-        flat.resize(self.d_max * 4, 1.0);
-        let lit = xla::Literal::vec1(&flat)
-            .reshape(&[self.d_max as i64, 2, 2])
-            .context("reshape proposal literal")?;
-        let buf = self.rt.upload(&lit)?;
-        Ok((buf, lit))
-    }
 
-    /// Score one chunk (≤ batch) of pairs; appends to `out`.
-    fn score_chunk(
-        &mut self,
-        theta_prime: &xla::PjRtBuffer,
-        pairs: &[(u64, u64)],
-        out: &mut Vec<f64>,
-    ) -> Result<()> {
-        let mut cs: Vec<i32> = pairs.iter().map(|&(c, _)| c as i32).collect();
-        let mut ct: Vec<i32> = pairs.iter().map(|&(_, c)| c as i32).collect();
-        cs.resize(self.batch, 0);
-        ct.resize(self.batch, 0);
-        // Bind the literals so they outlive the (async-copied) buffers.
-        let cs_lit = xla::Literal::vec1(&cs);
-        let ct_lit = xla::Literal::vec1(&ct);
-        let cs_buf = self.rt.upload(&cs_lit)?;
-        let ct_buf = self.rt.upload(&ct_lit)?;
-        let result = self.rt.run_b(
-            "accept_batch",
-            &[&self.theta, theta_prime, &self.counts, &cs_buf, &ct_buf],
-        )?;
-        drop((cs_lit, ct_lit)); // safe: run_b synchronised on the result
-        let probs = result.to_vec::<f32>()?;
-        ensure!(probs.len() == self.batch, "bad result length {}", probs.len());
-        out.extend(probs[..pairs.len()].iter().map(|&p| p as f64));
-        self.pairs_scored += pairs.len() as u64;
-        self.dispatches += 1;
-        Ok(())
-    }
+        /// Artifact batch capacity (pairs per dispatch).
+        pub fn batch_capacity(&self) -> usize {
+            self.batch
+        }
 
-    /// Fallible core of the backend trait method.
-    pub fn try_accept_probs(
-        &mut self,
-        proposal: &ProposalSet,
-        component: Component,
-        pairs: &[(u64, u64)],
-        out: &mut Vec<f64>,
-    ) -> Result<()> {
-        out.clear();
-        if pairs.is_empty() {
-            return Ok(());
-        }
-        let (theta_prime, _theta_prime_lit) = self.component_buffer(proposal.stack(component))?;
-        for chunk in pairs.chunks(self.batch) {
-            self.score_chunk(&theta_prime, chunk, out)?;
-        }
-        // The artifact computes Λ/Λ' WITHOUT the Algorithm 2 class
-        // indicator (that is coordinator logic, not kernel math); apply
-        // it here so the backend contract matches NativeAccept.
-        for (p, &(c, cp)) in out.iter_mut().zip(pairs) {
-            if proposal.accept_prob(component, c, cp) == 0.0 {
-                *p = 0.0;
+        /// Pad a proposal component stack to the artifact layout and upload.
+        /// Returns the buffer TOGETHER with its backing literal — the literal
+        /// must outlive every use of the buffer (async H2D copy).
+        fn component_buffer(
+            &self,
+            stack: &[InitiatorMatrix],
+        ) -> Result<(xla::PjRtBuffer, xla::Literal)> {
+            let mut flat: Vec<f32> = Vec::with_capacity(self.d_max * 4);
+            for t in stack {
+                flat.extend(t.flat().iter().map(|&x| x as f32));
             }
+            flat.resize(self.d_max * 4, 1.0);
+            let lit = xla::Literal::vec1(&flat)
+                .reshape(&[self.d_max as i64, 2, 2])
+                .context("reshape proposal literal")?;
+            let buf = self.rt.upload(&lit)?;
+            Ok((buf, lit))
         }
-        Ok(())
+
+        /// Score one chunk (≤ batch) of pairs; appends to `out`.
+        fn score_chunk(
+            &mut self,
+            theta_prime: &xla::PjRtBuffer,
+            rows: &[u64],
+            cols: &[u64],
+            out: &mut Vec<f64>,
+        ) -> Result<()> {
+            let mut cs: Vec<i32> = rows.iter().map(|&c| c as i32).collect();
+            let mut ct: Vec<i32> = cols.iter().map(|&c| c as i32).collect();
+            cs.resize(self.batch, 0);
+            ct.resize(self.batch, 0);
+            // Bind the literals so they outlive the (async-copied) buffers.
+            let cs_lit = xla::Literal::vec1(&cs);
+            let ct_lit = xla::Literal::vec1(&ct);
+            let cs_buf = self.rt.upload(&cs_lit)?;
+            let ct_buf = self.rt.upload(&ct_lit)?;
+            let result = self.rt.run_b(
+                "accept_batch",
+                &[&self.theta, theta_prime, &self.counts, &cs_buf, &ct_buf],
+            )?;
+            drop((cs_lit, ct_lit)); // safe: run_b synchronised on the result
+            let probs = result.to_vec::<f32>().context("accept_batch result")?;
+            crate::ensure!(probs.len() == self.batch, "bad result length {}", probs.len());
+            out.extend(probs[..rows.len()].iter().map(|&p| p as f64));
+            self.pairs_scored += rows.len() as u64;
+            self.dispatches += 1;
+            Ok(())
+        }
+
+        /// Fallible core of the backend trait method.
+        pub fn try_accept_probs(
+            &mut self,
+            proposal: &ProposalSet,
+            component: Component,
+            balls: &BallBatch,
+            out: &mut Vec<f64>,
+        ) -> Result<()> {
+            out.clear();
+            if balls.is_empty() {
+                return Ok(());
+            }
+            let (theta_prime, _theta_prime_lit) =
+                self.component_buffer(proposal.stack(component))?;
+            for (rows, cols) in balls
+                .rows
+                .chunks(self.batch)
+                .zip(balls.cols.chunks(self.batch))
+            {
+                self.score_chunk(&theta_prime, rows, cols, out)?;
+            }
+            // The artifact computes Λ/Λ' WITHOUT the Algorithm 2 class
+            // indicator (that is coordinator logic, not kernel math); apply
+            // it here so the backend contract matches NativeAccept.
+            for (p, (c, cp)) in out.iter_mut().zip(balls.iter()) {
+                if proposal.accept_prob(component, c, cp) == 0.0 {
+                    *p = 0.0;
+                }
+            }
+            Ok(())
+        }
+    }
+
+    impl AcceptBackend for XlaAccept {
+        fn accept_probs(
+            &mut self,
+            proposal: &ProposalSet,
+            component: Component,
+            balls: &BallBatch,
+            out: &mut Vec<f64>,
+        ) {
+            // Backend failures (lost artifacts, PJRT errors) are fatal for
+            // the sampling request — surface them loudly.
+            self.try_accept_probs(proposal, component, balls, out)
+                .expect("XLA acceptance evaluation failed");
+        }
+
+        fn name(&self) -> &'static str {
+            "xla"
+        }
     }
 }
 
-impl AcceptBackend for XlaAccept {
-    fn accept_probs(
-        &mut self,
-        proposal: &ProposalSet,
-        component: Component,
-        pairs: &[(u64, u64)],
-        out: &mut Vec<f64>,
-    ) {
-        // Backend failures (lost artifacts, PJRT errors) are fatal for
-        // the sampling request — surface them loudly.
-        self.try_accept_probs(proposal, component, pairs, out)
-            .expect("XLA acceptance evaluation failed");
+#[cfg(feature = "xla-runtime")]
+pub use real::XlaAccept;
+
+#[cfg(not(feature = "xla-runtime"))]
+mod stub {
+    use super::AcceptBackend;
+    use crate::model::colors::ColorIndex;
+    use crate::model::magm::MagmParams;
+    use crate::sampler::bdp::BallBatch;
+    use crate::sampler::proposal::{Component, ProposalSet};
+    use crate::util::error::Result;
+
+    /// Placeholder for builds without the `xla-runtime` feature: the
+    /// constructor always fails, so the backend methods are unreachable.
+    pub struct XlaAccept {
+        /// Pairs scored through the artifact (for reports/metrics).
+        pub pairs_scored: u64,
+        /// Artifact invocations (each scores up to `batch` pairs).
+        pub dispatches: u64,
     }
 
-    fn name(&self) -> &'static str {
-        "xla"
+    impl XlaAccept {
+        pub fn new(_params: &MagmParams, _index: &ColorIndex) -> Result<Self> {
+            crate::bail!("{}", crate::runtime::UNAVAILABLE)
+        }
+
+        pub fn batch_capacity(&self) -> usize {
+            0
+        }
+
+        pub fn try_accept_probs(
+            &mut self,
+            _proposal: &ProposalSet,
+            _component: Component,
+            _balls: &BallBatch,
+            _out: &mut Vec<f64>,
+        ) -> Result<()> {
+            crate::bail!("{}", crate::runtime::UNAVAILABLE)
+        }
+    }
+
+    impl AcceptBackend for XlaAccept {
+        fn accept_probs(
+            &mut self,
+            _proposal: &ProposalSet,
+            _component: Component,
+            _balls: &BallBatch,
+            _out: &mut Vec<f64>,
+        ) {
+            unreachable!("stub XlaAccept cannot be constructed");
+        }
+
+        fn name(&self) -> &'static str {
+            "xla"
+        }
     }
 }
+
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::XlaAccept;

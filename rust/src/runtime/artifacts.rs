@@ -9,7 +9,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// Parsed `NAME.meta` manifest.
 #[derive(Clone, Debug)]

@@ -5,198 +5,285 @@
 //! compiles it once, and the compiled executable is cached for the
 //! process lifetime. All entry points were lowered with
 //! `return_tuple=True`, so outputs unwrap with `to_tuple1()`.
+//!
+//! # Feature gating
+//!
+//! The PJRT client lives in the vendored `xla` crate, which is not part
+//! of the hermetic default build. The real implementation compiles only
+//! with `--features xla-runtime` AND the vendored crate added to the
+//! manifest (path dependency or workspace `[patch]`); the feature alone
+//! fails to compile by design — see the note in `Cargo.toml`. Without
+//! the feature, API-compatible stubs keep every caller — CLI
+//! subcommands, the service's `magm-bdp-xla` algorithm, benches —
+//! compiling, and report the runtime as unavailable at *call* time,
+//! which is exactly how those callers already handle missing artifacts.
 
 pub mod accept;
 pub mod artifacts;
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
-
-use anyhow::{Context, Result};
-
 pub use accept::XlaAccept;
 pub use artifacts::{artifacts_dir, Artifact, ArtifactMeta};
 
-/// A process-wide PJRT CPU client + compiled-executable cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    dir: std::path::PathBuf,
-}
+/// The error every stub entry point returns.
+#[cfg(not(feature = "xla-runtime"))]
+pub(crate) const UNAVAILABLE: &str =
+    "XLA runtime not built in (enable the `xla-runtime` feature and vendor the `xla` crate)";
 
-// The xla crate wraps C++ objects behind raw pointers without Send/Sync
-// markers; PJRT's CPU client is thread-safe for compile/execute, and all
-// mutable runtime state is behind the Mutex above.
-unsafe impl Send for XlaRuntime {}
-unsafe impl Sync for XlaRuntime {}
+#[cfg(feature = "xla-runtime")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
 
-impl XlaRuntime {
-    /// Create a client against the discovered artifacts directory.
-    pub fn new() -> Result<Self> {
-        let dir = artifacts_dir()?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self {
-            client,
-            executables: Mutex::new(HashMap::new()),
-            dir,
-        })
+    use super::artifacts::{self, ArtifactMeta};
+    use crate::util::error::{Context, Result};
+
+    /// A process-wide PJRT CPU client + compiled-executable cache.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+        dir: std::path::PathBuf,
     }
 
-    /// Process-global runtime (compiles each artifact at most once).
-    pub fn global() -> Result<&'static XlaRuntime> {
-        static GLOBAL: OnceLock<Result<XlaRuntime>> = OnceLock::new();
-        match GLOBAL.get_or_init(XlaRuntime::new) {
-            Ok(rt) => Ok(rt),
-            Err(e) => anyhow::bail!("XLA runtime unavailable: {e}"),
+    // The xla crate wraps C++ objects behind raw pointers without Send/Sync
+    // markers; PJRT's CPU client is thread-safe for compile/execute, and all
+    // mutable runtime state is behind the Mutex above.
+    unsafe impl Send for XlaRuntime {}
+    unsafe impl Sync for XlaRuntime {}
+
+    impl XlaRuntime {
+        /// Create a client against the discovered artifacts directory.
+        pub fn new() -> Result<Self> {
+            let dir = artifacts::artifacts_dir()?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Self {
+                client,
+                executables: Mutex::new(HashMap::new()),
+                dir,
+            })
         }
-    }
 
-    /// Platform string (e.g. `"cpu"`), for diagnostics.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Artifacts directory in use.
-    pub fn dir(&self) -> &std::path::Path {
-        &self.dir
-    }
-
-    /// The artifact manifest (for shape constants like `d_max`).
-    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
-        Ok(artifacts::load_artifact(&self.dir, name)?.meta)
-    }
-
-    /// Fetch (compiling and caching on first use) an executable.
-    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.executables.lock().unwrap().get(name) {
-            return Ok(Arc::clone(exe));
+        /// Process-global runtime (compiles each artifact at most once).
+        pub fn global() -> Result<&'static XlaRuntime> {
+            static GLOBAL: OnceLock<Result<XlaRuntime>> = OnceLock::new();
+            match GLOBAL.get_or_init(XlaRuntime::new) {
+                Ok(rt) => Ok(rt),
+                Err(e) => crate::bail!("XLA runtime unavailable: {e:#}"),
+            }
         }
-        let artifact = artifacts::load_artifact(&self.dir, name)?;
-        let path = artifact.hlo_path.to_string_lossy().into_owned();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(
+
+        /// Platform string (e.g. `"cpu"`), for diagnostics.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Artifacts directory in use.
+        pub fn dir(&self) -> &std::path::Path {
+            &self.dir
+        }
+
+        /// The artifact manifest (for shape constants like `d_max`).
+        pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+            Ok(artifacts::load_artifact(&self.dir, name)?.meta)
+        }
+
+        /// Fetch (compiling and caching on first use) an executable.
+        pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.executables.lock().unwrap().get(name) {
+                return Ok(Arc::clone(exe));
+            }
+            let artifact = artifacts::load_artifact(&self.dir, name)?;
+            let path = artifact.hlo_path.to_string_lossy().into_owned();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("compile artifact {name}"))?,
+            );
+            self.executables
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), Arc::clone(&exe));
+            Ok(exe)
+        }
+
+        /// Execute an artifact on literal inputs; returns the unwrapped
+        /// 1-tuple result literal.
+        pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("execute artifact {name}"))?;
+            let literal = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetch result of {name}"))?;
+            literal
+                .to_tuple1()
+                .with_context(|| format!("unwrap 1-tuple result of {name}"))
+        }
+
+        /// Upload a literal to a device-resident buffer (amortises repeated
+        /// large inputs — e.g. the 4 MiB `|V_c|` table — across dispatches).
+        pub fn upload(&self, literal: &xla::Literal) -> Result<xla::PjRtBuffer> {
             self.client
-                .compile(&comp)
-                .with_context(|| format!("compile artifact {name}"))?,
-        );
-        self.executables
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&exe));
-        Ok(exe)
-    }
+                .buffer_from_host_literal(None, literal)
+                .context("upload literal to device")
+        }
 
-    /// Execute an artifact on literal inputs; returns the unwrapped
-    /// 1-tuple result literal.
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("execute artifact {name}"))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetch result of {name}"))?;
-        literal
-            .to_tuple1()
-            .with_context(|| format!("unwrap 1-tuple result of {name}"))
-    }
+        /// As [`run`](Self::run) but over device-resident buffers.
+        pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute_b(inputs)
+                .with_context(|| format!("execute artifact {name} (buffers)"))?;
+            let literal = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetch result of {name}"))?;
+            literal
+                .to_tuple1()
+                .with_context(|| format!("unwrap 1-tuple result of {name}"))
+        }
 
-    /// Upload a literal to a device-resident buffer (amortises repeated
-    /// large inputs — e.g. the 4 MiB `|V_c|` table — across dispatches).
-    pub fn upload(&self, literal: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, literal)
-            .context("upload literal to device")
-    }
+        /// Evaluate the `edge_stats` artifact: `(e_K, e_M, e_KM, e_MK)`.
+        ///
+        /// Mirrors [`crate::model::MagmParams::edge_stats`]; the integration
+        /// tests assert parity between the two.
+        pub fn edge_stats(&self, params: &crate::model::MagmParams) -> Result<[f64; 4]> {
+            let meta = self.meta("edge_stats")?;
+            let d_max = meta.u64("d_max")? as usize;
+            let stack = params.stack();
+            let theta = xla::Literal::vec1(&stack.padded_theta_f32(d_max))
+                .reshape(&[d_max as i64, 2, 2])
+                .context("reshape theta literal")?;
+            let mu = xla::Literal::vec1(&stack.padded_mu_f32(d_max));
+            let mask = xla::Literal::vec1(&stack.level_mask_f32(d_max));
+            let n = xla::Literal::scalar(params.n() as f32);
+            let out = self.run("edge_stats", &[theta, mu, mask, n])?;
+            let v = out.to_vec::<f32>().context("edge_stats result")?;
+            crate::ensure!(v.len() == 4, "edge_stats returned {} values", v.len());
+            Ok([v[0] as f64, v[1] as f64, v[2] as f64, v[3] as f64])
+        }
 
-    /// As [`run`](Self::run) but over device-resident buffers.
-    pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute_b(inputs)
-            .with_context(|| format!("execute artifact {name} (buffers)"))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetch result of {name}"))?;
-        literal
-            .to_tuple1()
-            .with_context(|| format!("unwrap 1-tuple result of {name}"))
-    }
+        /// Evaluate the `gamma_tile` artifact: a `tile × tile` window of `Γ`.
+        pub fn gamma_tile(
+            &self,
+            stack: &crate::model::ParamStack,
+            row0: u32,
+            col0: u32,
+        ) -> Result<Vec<Vec<f64>>> {
+            let meta = self.meta("gamma_tile")?;
+            let d_max = meta.u64("d_max")? as usize;
+            let tile = meta.u64("tile")? as usize;
+            let theta = xla::Literal::vec1(&stack.padded_theta_f32(d_max))
+                .reshape(&[d_max as i64, 2, 2])
+                .context("reshape theta literal")?;
+            let base = xla::Literal::vec1(&[row0 as i32, col0 as i32]);
+            let out = self.run("gamma_tile", &[theta, base])?;
+            let flat = out.to_vec::<f32>().context("gamma_tile result")?;
+            crate::ensure!(flat.len() == tile * tile, "bad tile size {}", flat.len());
+            Ok(flat
+                .chunks(tile)
+                .map(|row| row.iter().map(|&x| x as f64).collect())
+                .collect())
+        }
 
-    /// Evaluate the `edge_stats` artifact: `(e_K, e_M, e_KM, e_MK)`.
-    ///
-    /// Mirrors [`crate::model::MagmParams::edge_stats`]; the integration
-    /// tests assert parity between the two.
-    pub fn edge_stats(&self, params: &crate::model::MagmParams) -> Result<[f64; 4]> {
-        let meta = self.meta("edge_stats")?;
-        let d_max = meta.u64("d_max")? as usize;
-        let stack = params.stack();
-        let theta = xla::Literal::vec1(&stack.padded_theta_f32(d_max))
-            .reshape(&[d_max as i64, 2, 2])?;
-        let mu = xla::Literal::vec1(&stack.padded_mu_f32(d_max));
-        let mask = xla::Literal::vec1(&stack.level_mask_f32(d_max));
-        let n = xla::Literal::scalar(params.n() as f32);
-        let out = self.run("edge_stats", &[theta, mu, mask, n])?;
-        let v = out.to_vec::<f32>()?;
-        anyhow::ensure!(v.len() == 4, "edge_stats returned {} values", v.len());
-        Ok([v[0] as f64, v[1] as f64, v[2] as f64, v[3] as f64])
-    }
-
-    /// Evaluate the `gamma_tile` artifact: a `tile × tile` window of `Γ`.
-    pub fn gamma_tile(
-        &self,
-        stack: &crate::model::ParamStack,
-        row0: u32,
-        col0: u32,
-    ) -> Result<Vec<Vec<f64>>> {
-        let meta = self.meta("gamma_tile")?;
-        let d_max = meta.u64("d_max")? as usize;
-        let tile = meta.u64("tile")? as usize;
-        let theta = xla::Literal::vec1(&stack.padded_theta_f32(d_max))
-            .reshape(&[d_max as i64, 2, 2])?;
-        let base = xla::Literal::vec1(&[row0 as i32, col0 as i32]);
-        let out = self.run("gamma_tile", &[theta, base])?;
-        let flat = out.to_vec::<f32>()?;
-        anyhow::ensure!(flat.len() == tile * tile, "bad tile size {}", flat.len());
-        Ok(flat
-            .chunks(tile)
-            .map(|row| row.iter().map(|&x| x as f64).collect())
-            .collect())
-    }
-
-    /// Evaluate the `kron_batch` artifact for up to `batch` color pairs
-    /// (inputs are padded to the artifact's static batch size).
-    pub fn kron_batch(
-        &self,
-        stack: &crate::model::ParamStack,
-        cs: &[u64],
-        ct: &[u64],
-    ) -> Result<Vec<f64>> {
-        anyhow::ensure!(cs.len() == ct.len(), "cs/ct length mismatch");
-        let meta = self.meta("kron_batch")?;
-        let d_max = meta.u64("d_max")? as usize;
-        let batch = meta.u64("batch")? as usize;
-        anyhow::ensure!(
-            cs.len() <= batch,
-            "batch {} exceeds artifact capacity {batch}",
-            cs.len()
-        );
-        let theta = xla::Literal::vec1(&stack.padded_theta_f32(d_max))
-            .reshape(&[d_max as i64, 2, 2])?;
-        let pad = |xs: &[u64]| -> Vec<i32> {
-            let mut v: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
-            v.resize(batch, 0);
-            v
-        };
-        let cs_l = xla::Literal::vec1(&pad(cs));
-        let ct_l = xla::Literal::vec1(&pad(ct));
-        let out = self.run("kron_batch", &[theta, cs_l, ct_l])?;
-        let flat = out.to_vec::<f32>()?;
-        Ok(flat[..cs.len()].iter().map(|&x| x as f64).collect())
+        /// Evaluate the `kron_batch` artifact for up to `batch` color pairs
+        /// (inputs are padded to the artifact's static batch size).
+        pub fn kron_batch(
+            &self,
+            stack: &crate::model::ParamStack,
+            cs: &[u64],
+            ct: &[u64],
+        ) -> Result<Vec<f64>> {
+            crate::ensure!(cs.len() == ct.len(), "cs/ct length mismatch");
+            let meta = self.meta("kron_batch")?;
+            let d_max = meta.u64("d_max")? as usize;
+            let batch = meta.u64("batch")? as usize;
+            crate::ensure!(
+                cs.len() <= batch,
+                "batch {} exceeds artifact capacity {batch}",
+                cs.len()
+            );
+            let theta = xla::Literal::vec1(&stack.padded_theta_f32(d_max))
+                .reshape(&[d_max as i64, 2, 2])
+                .context("reshape theta literal")?;
+            let pad = |xs: &[u64]| -> Vec<i32> {
+                let mut v: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
+                v.resize(batch, 0);
+                v
+            };
+            let cs_l = xla::Literal::vec1(&pad(cs));
+            let ct_l = xla::Literal::vec1(&pad(ct));
+            let out = self.run("kron_batch", &[theta, cs_l, ct_l])?;
+            let flat = out.to_vec::<f32>().context("kron_batch result")?;
+            Ok(flat[..cs.len()].iter().map(|&x| x as f64).collect())
+        }
     }
 }
+
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::XlaRuntime;
+
+#[cfg(not(feature = "xla-runtime"))]
+mod stub {
+    use super::artifacts::ArtifactMeta;
+    use crate::util::error::Result;
+
+    /// API-compatible placeholder for builds without the `xla-runtime`
+    /// feature: construction always fails, so the methods below are
+    /// unreachable but keep callers type-checking.
+    pub struct XlaRuntime {
+        _priv: (),
+    }
+
+    impl XlaRuntime {
+        pub fn new() -> Result<Self> {
+            crate::bail!("{}", super::UNAVAILABLE)
+        }
+
+        pub fn global() -> Result<&'static XlaRuntime> {
+            crate::bail!("{}", super::UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn dir(&self) -> &std::path::Path {
+            std::path::Path::new("")
+        }
+
+        pub fn meta(&self, _name: &str) -> Result<ArtifactMeta> {
+            crate::bail!("{}", super::UNAVAILABLE)
+        }
+
+        pub fn edge_stats(&self, _params: &crate::model::MagmParams) -> Result<[f64; 4]> {
+            crate::bail!("{}", super::UNAVAILABLE)
+        }
+
+        pub fn gamma_tile(
+            &self,
+            _stack: &crate::model::ParamStack,
+            _row0: u32,
+            _col0: u32,
+        ) -> Result<Vec<Vec<f64>>> {
+            crate::bail!("{}", super::UNAVAILABLE)
+        }
+
+        pub fn kron_batch(
+            &self,
+            _stack: &crate::model::ParamStack,
+            _cs: &[u64],
+            _ct: &[u64],
+        ) -> Result<Vec<f64>> {
+            crate::bail!("{}", super::UNAVAILABLE)
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::XlaRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -206,5 +293,12 @@ mod tests {
     #[test]
     fn artifact_names_cover_aot_outputs() {
         assert_eq!(super::artifacts::ARTIFACT_NAMES.len(), 4);
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = super::XlaRuntime::global().unwrap_err();
+        assert!(format!("{err}").contains("xla-runtime"));
     }
 }

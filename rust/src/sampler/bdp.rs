@@ -9,6 +9,25 @@
 //! The per-level quadrant choice uses a precomputed alias table, so one
 //! ball costs exactly `d` alias draws — the `O(d)` per-edge bound the
 //! complexity analysis of §4.5 builds on.
+//!
+//! # Occupancy-pruned descent (§Perf optimization)
+//!
+//! When the BDP proposes *color* pairs for Algorithm 2, a ball landing on
+//! an unoccupied color (or one outside the component's class) is rejected
+//! with probability 1 by the thinning step — yet the plain descent still
+//! pays all `d` levels before that is known. In the sparse regime
+//! (`2^d ≫ n`) almost every ball is such a sure-rejection.
+//!
+//! [`PrefixFilter`] fixes this: built from the occupied color set, it
+//! holds one bitmap per fused-chunk boundary marking which low-bit
+//! prefixes can still reach an occupied color (levels are little-endian,
+//! so after the chunk covering levels `0..L` the low `L` bits of both
+//! coordinates are final). [`BdpSampler::drop_ball_pruned`] tests the
+//! row/column prefixes after every chunk and aborts the moment either
+//! side is dead. Pruning removes exactly the mass the thinning step
+//! assigns acceptance probability 0, so the surviving-ball distribution
+//! is untouched; sure-rejections shrink from `O(d)` to the depth of the
+//! first dead prefix (typically one chunk).
 
 use crate::graph::MultiEdgeList;
 use crate::model::params::InitiatorMatrix;
@@ -24,6 +43,13 @@ use crate::util::rng::Rng;
 /// unfused per-level descent, <5% further gain beyond FUSE=4.
 const FUSE: usize = 4;
 
+/// Cap on a single `Vec::reserve` ahead of a ball-drop loop: a
+/// pathological Poisson draw (corrupt rates, adversarial config) must not
+/// turn into one absurd up-front allocation. Growth beyond the cap is
+/// amortised by the usual doubling. Shared by every sampler that
+/// pre-sizes from an expected ball count.
+pub(crate) const RESERVE_CHUNK: u64 = 1 << 20;
+
 /// One fused chunk: an alias table over `4^len` (a, b) combinations.
 #[derive(Clone, Debug)]
 struct FusedLevel {
@@ -32,6 +58,110 @@ struct FusedLevel {
     base: usize,
     /// Number of model levels in the chunk.
     len: usize,
+}
+
+/// Prefix-occupancy bitmaps at fused-chunk boundaries.
+///
+/// `masks[i]` (when present) covers the boundary after chunk `i`, i.e.
+/// levels `0..ends[i]`: bit `p` is set iff some color in the generating
+/// set has low `ends[i]` bits equal to `p`. Boundaries deeper than
+/// [`Self::MAX_PREFIX_BITS`] carry no bitmap (the memory would be
+/// exponential) — [`alive`](Self::alive) then answers `true`, i.e. "can't
+/// prune here", which is always sound.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixFilter {
+    ends: Vec<usize>,
+    masks: Vec<Option<Vec<u64>>>,
+}
+
+impl PrefixFilter {
+    /// Deepest boundary that gets a bitmap (2^24 bits = 2 MiB).
+    pub const MAX_PREFIX_BITS: usize = 24;
+
+    /// Build for the chunk boundaries `ends` (ascending, as returned by
+    /// [`BdpSampler::chunk_ends`]) from a set of colors.
+    pub fn build<I: IntoIterator<Item = u64>>(ends: &[usize], colors: I) -> Self {
+        debug_assert!(ends.windows(2).all(|w| w[0] < w[1]), "ends must ascend");
+        let mut masks: Vec<Option<Vec<u64>>> = ends
+            .iter()
+            .map(|&e| {
+                (e <= Self::MAX_PREFIX_BITS).then(|| vec![0u64; (1usize << e).div_ceil(64)])
+            })
+            .collect();
+        for c in colors {
+            for (&e, mask) in ends.iter().zip(masks.iter_mut()) {
+                if let Some(bits) = mask {
+                    let p = c & ((1u64 << e) - 1);
+                    bits[(p >> 6) as usize] |= 1u64 << (p & 63);
+                }
+            }
+        }
+        Self {
+            ends: ends.to_vec(),
+            masks,
+        }
+    }
+
+    /// Can a color with this low-bit `prefix` (after chunk `chunk_idx`)
+    /// still be in the generating set? `true` when unknown (no bitmap).
+    #[inline]
+    pub fn alive(&self, chunk_idx: usize, prefix: u64) -> bool {
+        match self.masks.get(chunk_idx) {
+            Some(Some(bits)) => (bits[(prefix >> 6) as usize] >> (prefix & 63)) & 1 == 1,
+            _ => true,
+        }
+    }
+
+    /// The chunk boundaries this filter was built for.
+    pub fn ends(&self) -> &[usize] {
+        &self.ends
+    }
+}
+
+/// A chunk of ball coordinates in structure-of-arrays layout: two flat
+/// arrays the accept/materialise stages stream through — the same shape
+/// the XLA `accept_batch` artifact marshals, so the native and XLA
+/// backends share one vectorisable inner loop.
+#[derive(Clone, Debug, Default)]
+pub struct BallBatch {
+    pub rows: Vec<u64>,
+    pub cols: Vec<u64>,
+}
+
+impl BallBatch {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.cols.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, row: u64, col: u64) {
+        self.rows.push(row);
+        self.cols.push(col);
+    }
+
+    /// Iterate `(row, col)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.rows.iter().zip(&self.cols).map(|(&r, &c)| (r, c))
+    }
 }
 
 /// A compiled ball-dropping process over a `2^d × 2^d` grid.
@@ -98,6 +228,12 @@ impl BdpSampler {
         self.total_rate
     }
 
+    /// The level indices at which each fused chunk ends (`[4, 8, …, d]`
+    /// for FUSE = 4) — the boundaries a [`PrefixFilter`] must cover.
+    pub fn chunk_ends(&self) -> Vec<usize> {
+        self.levels.iter().map(|c| c.base + c.len).collect()
+    }
+
     /// Drop a single ball: one `(row, col)` coordinate distributed
     /// `∝ Γ_ij` (little-endian level order: level `k` decides bit `k`).
     #[inline]
@@ -116,23 +252,91 @@ impl BdpSampler {
         (row, col)
     }
 
+    /// Drop a single ball through the occupancy filters: `None` means the
+    /// descent was aborted because no color pair consistent with the
+    /// partial prefix can survive thinning (a sure-rejection). The
+    /// distribution of `Some` balls equals the plain descent conditioned
+    /// on both endpoints being alive.
+    #[inline]
+    pub fn drop_ball_pruned<R: Rng + ?Sized>(
+        &self,
+        row_filter: &PrefixFilter,
+        col_filter: &PrefixFilter,
+        rng: &mut R,
+    ) -> Option<(u64, u64)> {
+        // Length-only check: exact boundary equality is established at
+        // filter build time, and chunk_ends() would allocate per ball.
+        debug_assert_eq!(row_filter.ends().len(), self.levels.len());
+        debug_assert_eq!(col_filter.ends().len(), self.levels.len());
+        let mut row = 0u64;
+        let mut col = 0u64;
+        for (ci, chunk) in self.levels.iter().enumerate() {
+            let cat = chunk.table.sample(rng) as u64;
+            for j in 0..chunk.len {
+                let pair = (cat >> (2 * j)) & 3;
+                row |= (pair >> 1) << (chunk.base + j);
+                col |= (pair & 1) << (chunk.base + j);
+            }
+            if !row_filter.alive(ci, row) || !col_filter.alive(ci, col) {
+                return None;
+            }
+        }
+        Some((row, col))
+    }
+
     /// Number of balls for one realisation: `X ~ Poisson(total_rate)`.
     #[inline]
     pub fn draw_ball_count<R: Rng + ?Sized>(&self, rng: &mut R) -> u64 {
         poisson(rng, self.total_rate)
     }
 
-    /// Drop `count` balls, appending coordinates to `out`.
+    /// Split `count` into reservation-sized chunks (each ≤ RESERVE_CHUNK).
+    fn reserve_chunks(count: u64) -> impl Iterator<Item = usize> {
+        (0..count.div_ceil(RESERVE_CHUNK).min(usize::MAX as u64)).map(move |i| {
+            (count - i * RESERVE_CHUNK).min(RESERVE_CHUNK) as usize
+        })
+    }
+
+    /// Drop `count` balls, appending coordinates to `out`. Capacity is
+    /// reserved in capped chunks so a pathological `count` cannot request
+    /// an absurd allocation up front.
     pub fn drop_into<R: Rng + ?Sized>(
         &self,
         rng: &mut R,
         count: u64,
         out: &mut Vec<(u64, u64)>,
     ) {
-        out.reserve(count as usize);
-        for _ in 0..count {
-            out.push(self.drop_ball(rng));
+        for chunk in Self::reserve_chunks(count) {
+            out.reserve(chunk);
+            for _ in 0..chunk {
+                out.push(self.drop_ball(rng));
+            }
         }
+    }
+
+    /// Drop `count` balls through the filters, appending the survivors to
+    /// `out` (SoA layout); returns the number of survivors. Reservation
+    /// is capped exactly as in [`drop_into`](Self::drop_into).
+    pub fn drop_pruned_into<R: Rng + ?Sized>(
+        &self,
+        rng: &mut R,
+        count: u64,
+        row_filter: &PrefixFilter,
+        col_filter: &PrefixFilter,
+        out: &mut BallBatch,
+    ) -> u64 {
+        let before = out.len() as u64;
+        // Survivor count is data-dependent; reserving one capped chunk up
+        // front covers the common all-survive case cheaply.
+        let cap = count.min(RESERVE_CHUNK) as usize;
+        out.rows.reserve(cap);
+        out.cols.reserve(cap);
+        for _ in 0..count {
+            if let Some((r, c)) = self.drop_ball_pruned(row_filter, col_filter, rng) {
+                out.push(r, c);
+            }
+        }
+        out.len() as u64 - before
     }
 
     /// One full realisation as coordinate pairs (Algorithm 1 verbatim).
@@ -148,7 +352,8 @@ impl BdpSampler {
     pub fn sample_multigraph<R: Rng + ?Sized>(&self, rng: &mut R) -> MultiEdgeList {
         assert!(self.d <= 32, "node ids exceed u32");
         let count = self.draw_ball_count(rng);
-        let mut g = MultiEdgeList::with_capacity(self.side(), count as usize);
+        let mut g =
+            MultiEdgeList::with_capacity(self.side(), count.min(RESERVE_CHUNK) as usize);
         for _ in 0..count {
             let (i, j) = self.drop_ball(rng);
             g.push(i as u32, j as u32);
@@ -257,5 +462,124 @@ mod tests {
         let a: Vec<_> = b.sample_pairs(&mut Xoshiro256pp::seed_from_u64(9));
         let c: Vec<_> = b.sample_pairs(&mut Xoshiro256pp::seed_from_u64(9));
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn chunk_ends_cover_depth() {
+        for d in [1usize, 3, 4, 5, 8, 13] {
+            let ends = fig1_bdp(d).chunk_ends();
+            assert_eq!(*ends.last().unwrap(), d, "d={d}");
+            assert!(ends.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn reserve_chunks_sum_and_cap() {
+        for count in [0u64, 1, 100, RESERVE_CHUNK, RESERVE_CHUNK + 1, 5 * RESERVE_CHUNK + 7] {
+            let chunks: Vec<usize> = BdpSampler::reserve_chunks(count).collect();
+            assert_eq!(chunks.iter().map(|&c| c as u64).sum::<u64>(), count);
+            assert!(chunks.iter().all(|&c| c as u64 <= RESERVE_CHUNK));
+        }
+        // A pathological count must not map to a pathological first chunk.
+        let first = BdpSampler::reserve_chunks(u64::MAX / 2).next().unwrap();
+        assert_eq!(first as u64, RESERVE_CHUNK);
+    }
+
+    #[test]
+    fn prefix_filter_membership() {
+        // Colors {0b0011, 0b1100} over d = 4 with boundaries [2, 4].
+        let f = PrefixFilter::build(&[2, 4], [0b0011u64, 0b1100]);
+        // Low-2-bit prefixes alive: 0b11 (from 0b0011) and 0b00.
+        assert!(f.alive(0, 0b11));
+        assert!(f.alive(0, 0b00));
+        assert!(!f.alive(0, 0b01));
+        assert!(!f.alive(0, 0b10));
+        // Full membership at the final boundary.
+        assert!(f.alive(1, 0b0011));
+        assert!(f.alive(1, 0b1100));
+        assert!(!f.alive(1, 0b0111));
+        // Out-of-range chunk index cannot prune.
+        assert!(f.alive(9, 0b0101));
+    }
+
+    #[test]
+    fn prefix_filter_deep_boundaries_never_prune() {
+        let f = PrefixFilter::build(&[4, 30], [5u64]);
+        assert!(f.alive(0, 5));
+        assert!(!f.alive(0, 6));
+        // Boundary 30 > MAX_PREFIX_BITS: no bitmap, always alive.
+        assert!(f.alive(1, 123456));
+    }
+
+    #[test]
+    fn pruned_descent_matches_conditional_distribution() {
+        // Survivors of the pruned descent must be distributed like plain
+        // balls conditioned on landing in alive × alive.
+        let d = 6;
+        let b = fig1_bdp(d);
+        let ends = b.chunk_ends();
+        let alive: Vec<u64> = vec![3, 17, 42, 63];
+        let f = PrefixFilter::build(&ends, alive.iter().copied());
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let trials = 200_000usize;
+        let mut survivors = 0usize;
+        let mut hit = std::collections::HashMap::<(u64, u64), f64>::new();
+        for _ in 0..trials {
+            if let Some((r, c)) = b.drop_ball_pruned(&f, &f, &mut rng) {
+                assert!(alive.contains(&r) && alive.contains(&c));
+                survivors += 1;
+                *hit.entry((r, c)).or_default() += 1.0;
+            }
+        }
+        // Compare survivor frequency against the exact conditional law.
+        let stack = ParamStack::replicated(InitiatorMatrix::FIG1, d, 0.5);
+        let mass: f64 = alive
+            .iter()
+            .flat_map(|&r| alive.iter().map(move |&c| (r, c)))
+            .map(|(r, c)| stack.kron_entry(r, c))
+            .sum();
+        let total_rate = b.total_rate();
+        // Survivor rate itself matches the alive mass fraction.
+        let want_rate = mass / total_rate;
+        let got_rate = survivors as f64 / trials as f64;
+        let se = (want_rate * (1.0 - want_rate) / trials as f64).sqrt();
+        assert!(
+            (got_rate - want_rate).abs() < 6.0 * se,
+            "survival rate {got_rate} vs {want_rate}"
+        );
+        for (&(r, c), &count) in &hit {
+            let want = stack.kron_entry(r, c) / mass;
+            let got = count / survivors as f64;
+            let se = (want * (1.0 - want) / survivors as f64).sqrt();
+            assert!(
+                (got - want).abs() < 6.0 * se + 1e-9,
+                "({r},{c}): got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_descent_with_full_occupancy_never_prunes() {
+        let d = 5;
+        let b = fig1_bdp(d);
+        let f = PrefixFilter::build(&b.chunk_ends(), 0..(1u64 << d));
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        for _ in 0..2000 {
+            assert!(b.drop_ball_pruned(&f, &f, &mut rng).is_some());
+        }
+    }
+
+    #[test]
+    fn drop_pruned_into_counts_survivors() {
+        let d = 8;
+        let b = fig1_bdp(d);
+        let f = PrefixFilter::build(&b.chunk_ends(), [0u64, 1, 2, 3]);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut out = BallBatch::default();
+        let survivors = b.drop_pruned_into(&mut rng, 50_000, &f, &f, &mut out);
+        assert_eq!(survivors as usize, out.len());
+        assert!(out.iter().all(|(r, c)| r < 4 && c < 4));
+        // Sparse occupancy at d=8: the vast majority must be pruned.
+        assert!(survivors < 5_000, "survivors {survivors}");
     }
 }

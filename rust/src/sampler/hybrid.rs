@@ -97,6 +97,23 @@ impl<'a> HybridSampler<'a> {
     pub fn params(&self) -> &MagmParams {
         self.params
     }
+
+    /// Multi-threaded sampling where the picked backend supports it
+    /// (Algorithm 2's sharded pipeline); the baselines fall back to a
+    /// seeded sequential draw. Deterministic for fixed `(seed, threads)`
+    /// whatever the cost model picked.
+    pub fn sample_parallel(&self, seed: u64, threads: usize) -> MultiEdgeList {
+        match self.choice {
+            HybridChoice::MagmBdp => {
+                self.magm_bdp.as_ref().unwrap().sample_parallel(seed, threads)
+            }
+            _ => {
+                use crate::util::rng::{SeedableRng, Xoshiro256pp};
+                let mut rng = Xoshiro256pp::seed_from_u64(seed);
+                self.sample(&mut rng)
+            }
+        }
+    }
 }
 
 impl Sampler for HybridSampler<'_> {
@@ -151,6 +168,19 @@ mod tests {
         assert_eq!(g.n(), 1 << 8);
         assert_eq!(h.name(), "hybrid");
         assert!(!h.choice().label().is_empty());
+    }
+
+    #[test]
+    fn parallel_is_deterministic_for_every_choice() {
+        for (d, n) in [(4usize, 16u64), (12, 1 << 12)] {
+            let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, 0.3, n);
+            let a = assignment(&params, 7);
+            let mut rng = Xoshiro256pp::seed_from_u64(8);
+            let h = HybridSampler::new(&params, &a, &mut rng);
+            let g1 = h.sample_parallel(42, 4);
+            let g2 = h.sample_parallel(42, 4);
+            assert_eq!(g1.edges(), g2.edges(), "choice {:?}", h.choice());
+        }
     }
 
     #[test]

@@ -59,11 +59,14 @@ impl Sampler for KpgmBdpSampler {
         }
         // Compensation: drop until distinct-edge count reaches ⌈e_K⌉
         // (or a ball budget of 10·e_K is exhausted — guards the dense
-        // regime where distinct pairs saturate).
+        // regime where distinct pairs saturate). Up-front reservations
+        // are capped: a pathological rate must not become one absurd
+        // allocation (growth past the cap amortises via doubling).
         let target = self.bdp.total_rate().ceil() as usize;
+        let reserve = target.min(super::bdp::RESERVE_CHUNK as usize);
+        let mut seen = std::collections::HashSet::with_capacity(reserve * 2);
+        let mut g = MultiEdgeList::with_capacity(self.n, reserve);
         let budget = (self.bdp.total_rate() * 10.0).ceil() as u64;
-        let mut seen = std::collections::HashSet::with_capacity(target * 2);
-        let mut g = MultiEdgeList::with_capacity(self.n, target);
         let mut dropped = 0u64;
         while seen.len() < target && dropped < budget {
             let (i, j) = self.bdp.drop_ball(rng);

@@ -3,8 +3,13 @@
 //! Pipeline per proposal component `AB ∈ {FF, FI, IF, II}`:
 //!
 //! 1. *Propose*: the component's BDP drops `Poisson(Λ'^(AB) total)` balls
-//!    on the color grid (`O(d)` each).
-//! 2. *Thin*: each ball at `(c, c')` survives with probability
+//!    on the color grid. The descent is occupancy-pruned (see
+//!    [`crate::sampler::bdp`]): a ball whose partial prefix can no longer
+//!    reach an occupied `(c, c')` pair of the component's classes aborts
+//!    immediately — sure-rejections cost `O(depth of first dead prefix)`
+//!    instead of `O(d)`, and the surviving-ball distribution is exactly
+//!    the plain descent conditioned on non-zero acceptance.
+//! 2. *Thin*: each surviving ball at `(c, c')` survives with probability
 //!    `Λ_cc' / Λ'^(AB)_cc'` — the accept-reject correction that turns the
 //!    proposal Poisson field into the target `B` of Eq. 11/12.
 //! 3. *Materialise*: a surviving ball becomes the edge `(i, j)` with `i`
@@ -15,23 +20,29 @@
 //! either natively (pure Rust, the Figure 5/6 benchmark path) or batched
 //! through the AOT-compiled Pallas kernel on the XLA runtime
 //! (`crate::runtime::accept::XlaAccept`, the end-to-end service path).
+//! Both backends consume the same [`BallBatch`] structure-of-arrays
+//! chunks and feed the same thin-and-materialise inner loop, so the
+//! native and XLA paths differ only in who fills the probability buffer.
 
+use super::bdp::BallBatch;
 use super::proposal::{Component, ProposalSet};
+use super::sink::{CollectSink, EdgeSink};
 use super::Sampler;
 use crate::graph::MultiEdgeList;
 use crate::model::colors::ColorIndex;
 use crate::model::magm::{AttributeAssignment, MagmParams};
+use crate::util::rng::dist::binomial;
 use crate::util::rng::{split_streams, Rng, SeedableRng, Xoshiro256pp};
 
 /// Batched evaluation of acceptance probabilities (step 2 above).
 pub trait AcceptBackend {
-    /// For each proposed `(c, c')`, write `Λ_cc' / Λ'^(AB)_cc'` into
-    /// `out` (cleared first).
+    /// For each proposed `(c, c')` in `balls`, write `Λ_cc' / Λ'^(AB)_cc'`
+    /// into `out` (cleared first).
     fn accept_probs(
         &mut self,
         proposal: &ProposalSet,
         component: Component,
-        pairs: &[(u64, u64)],
+        balls: &BallBatch,
         out: &mut Vec<f64>,
     );
 
@@ -48,14 +59,17 @@ impl AcceptBackend for NativeAccept {
         &mut self,
         proposal: &ProposalSet,
         component: Component,
-        pairs: &[(u64, u64)],
+        balls: &BallBatch,
         out: &mut Vec<f64>,
     ) {
         out.clear();
+        // Two flat array streams — no tuple unpacking in the inner loop.
         out.extend(
-            pairs
+            balls
+                .rows
                 .iter()
-                .map(|&(c, cp)| proposal.accept_prob(component, c, cp)),
+                .zip(&balls.cols)
+                .map(|(&c, &cp)| proposal.accept_prob(component, c, cp)),
         );
     }
 
@@ -112,34 +126,65 @@ impl<'a> MagmBdpSampler<'a> {
         self.proposal.total_rate()
     }
 
-    /// Streaming sampler: per-ball native accept, no intermediate
-    /// buffers. Returns `(graph, proposed, accepted)`.
-    pub fn sample_counted<R: Rng + ?Sized>(&self, rng: &mut R) -> (MultiEdgeList, u64, u64) {
-        let mut g = MultiEdgeList::new(self.params.n());
-        let mut proposed = 0u64;
-        let mut accepted = 0u64;
-        for comp in Component::ALL {
-            let bdp = self.proposal.bdp(comp);
-            let balls = bdp.draw_ball_count(rng);
-            proposed += balls;
-            for _ in 0..balls {
-                let (c, cp) = bdp.drop_ball(rng);
-                let p = self.proposal.accept_prob(comp, c, cp);
-                if p > 0.0 && rng.next_f64() < p {
-                    // p > 0 implies both color classes are occupied.
-                    let i = self.index.sample_node(c, rng).expect("occupied");
-                    let j = self.index.sample_node(cp, rng).expect("occupied");
-                    g.push(i, j);
-                    accepted += 1;
-                }
-            }
+    /// The accept-materialise kernel for ONE surviving ball: thin by `p`,
+    /// draw the endpoint nodes, push the edge. Returns 1 if accepted.
+    /// Every sampling path — streaming, batched, parallel shards — ends
+    /// in this function, so materialisation semantics live in one place.
+    #[inline]
+    fn accept_one<R: Rng + ?Sized>(
+        &self,
+        c: u64,
+        cp: u64,
+        p: f64,
+        rng: &mut R,
+        sink: &mut dyn EdgeSink,
+    ) -> u64 {
+        if p > 0.0 && rng.next_f64() < p {
+            // p > 0 implies both color classes are occupied.
+            let i = self.index.sample_node(c, rng).expect("occupied");
+            let j = self.index.sample_node(cp, rng).expect("occupied");
+            sink.push(i, j);
+            1
+        } else {
+            0
         }
-        (g, proposed, accepted)
     }
 
-    /// Batched sampler: proposals are buffered in chunks of `batch` and
-    /// scored through an [`AcceptBackend`] (the XLA path). Statistically
-    /// identical to [`sample_counted`]; RNG schedule differs.
+    /// Vector form of [`accept_one`](Self::accept_one): thin each ball in
+    /// `balls` by its probability in `probs`, pushing accepted edges into
+    /// `sink`. Returns the number accepted.
+    #[inline]
+    fn thin_and_materialise<R: Rng + ?Sized>(
+        &self,
+        balls: &BallBatch,
+        probs: &[f64],
+        rng: &mut R,
+        sink: &mut dyn EdgeSink,
+    ) -> u64 {
+        debug_assert_eq!(balls.len(), probs.len());
+        let mut accepted = 0u64;
+        for ((&c, &cp), &p) in balls.rows.iter().zip(&balls.cols).zip(probs) {
+            accepted += self.accept_one(c, cp, p, rng, sink);
+        }
+        accepted
+    }
+
+    /// Streaming sampler: per-ball pruned descent + native accept, no
+    /// intermediate buffers. Returns `(graph, proposed, accepted)`.
+    /// `proposed` counts every ball the Poisson draw demanded, including
+    /// the ones the pruned descent rejected early.
+    pub fn sample_counted<R: Rng + ?Sized>(&self, rng: &mut R) -> (MultiEdgeList, u64, u64) {
+        let mut sink = CollectSink::new(self.params.n());
+        let (proposed, accepted) = self.sample_into(rng, &mut sink);
+        (sink.graph, proposed, accepted)
+    }
+
+    /// Batched sampler: pruned-descent survivors accumulate in one SoA
+    /// buffer until a full `batch` is ready for the [`AcceptBackend`]
+    /// (the XLA path), so each backend dispatch stays full even when the
+    /// prune rejects almost everything — the tail flushes per component.
+    /// Statistically identical to [`sample_counted`]; RNG schedule
+    /// differs.
     pub fn sample_batched<R: Rng + ?Sized>(
         &self,
         rng: &mut R,
@@ -147,33 +192,33 @@ impl<'a> MagmBdpSampler<'a> {
         batch: usize,
     ) -> (MultiEdgeList, u64, u64) {
         assert!(batch > 0);
-        let mut g = MultiEdgeList::new(self.params.n());
+        let mut sink = CollectSink::new(self.params.n());
         let mut proposed = 0u64;
         let mut accepted = 0u64;
-        let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(batch);
+        let mut balls = BallBatch::with_capacity(batch);
         let mut probs: Vec<f64> = Vec::with_capacity(batch);
         for comp in Component::ALL {
             let bdp = self.proposal.bdp(comp);
+            let (rowf, colf) = self.proposal.filters(comp);
             let mut remaining = bdp.draw_ball_count(rng);
             proposed += remaining;
             while remaining > 0 {
-                let take = remaining.min(batch as u64);
-                pairs.clear();
-                bdp.drop_into(rng, take, &mut pairs);
-                backend.accept_probs(&self.proposal, comp, &pairs, &mut probs);
-                debug_assert_eq!(probs.len(), pairs.len());
-                for (&(c, cp), &p) in pairs.iter().zip(probs.iter()) {
-                    if p > 0.0 && rng.next_f64() < p {
-                        let i = self.index.sample_node(c, rng).expect("occupied");
-                        let j = self.index.sample_node(cp, rng).expect("occupied");
-                        g.push(i, j);
-                        accepted += 1;
-                    }
-                }
+                // Drop at most enough balls to top the buffer up to
+                // exactly `batch` survivors, so a flush is never split
+                // into a full dispatch plus a nearly-empty padded one.
+                let take = remaining.min((batch - balls.len()) as u64);
+                bdp.drop_pruned_into(rng, take, rowf, colf, &mut balls);
                 remaining -= take;
+                if balls.len() >= batch || (remaining == 0 && !balls.is_empty()) {
+                    backend.accept_probs(&self.proposal, comp, &balls, &mut probs);
+                    debug_assert_eq!(probs.len(), balls.len());
+                    accepted += self.thin_and_materialise(&balls, &probs, rng, &mut sink);
+                    balls.clear();
+                }
             }
         }
-        (g, proposed, accepted)
+        sink.finish();
+        (sink.graph, proposed, accepted)
     }
 
     /// Streaming sampler into an [`crate::sampler::sink::EdgeSink`] —
@@ -183,64 +228,76 @@ impl<'a> MagmBdpSampler<'a> {
     pub fn sample_into<R: Rng + ?Sized>(
         &self,
         rng: &mut R,
-        sink: &mut dyn crate::sampler::sink::EdgeSink,
+        sink: &mut dyn EdgeSink,
     ) -> (u64, u64) {
         let mut proposed = 0u64;
         let mut accepted = 0u64;
         for comp in Component::ALL {
             let bdp = self.proposal.bdp(comp);
+            let (rowf, colf) = self.proposal.filters(comp);
             let balls = bdp.draw_ball_count(rng);
             proposed += balls;
             for _ in 0..balls {
-                let (c, cp) = bdp.drop_ball(rng);
+                let Some((c, cp)) = bdp.drop_ball_pruned(rowf, colf, rng) else {
+                    continue; // sure-rejection, descent aborted early
+                };
                 let p = self.proposal.accept_prob(comp, c, cp);
-                if p > 0.0 && rng.next_f64() < p {
-                    let i = self.index.sample_node(c, rng).expect("occupied");
-                    let j = self.index.sample_node(cp, rng).expect("occupied");
-                    sink.push(i, j);
-                    accepted += 1;
-                }
+                accepted += self.accept_one(c, cp, p, rng, sink);
             }
         }
         sink.finish();
         (proposed, accepted)
     }
 
-    /// Multi-threaded sampler: the per-component Poisson ball count is
-    /// drawn once from `seed`'s root stream, then split across `threads`
-    /// shards with independent RNG streams. Deterministic for a fixed
-    /// `(seed, threads)` pair.
+    /// Multi-threaded sampler. The per-component Poisson total is drawn
+    /// once from `seed`'s root stream, then split across `threads` shards
+    /// by sequential binomial thinning (shard `t` takes
+    /// `Binomial(remaining, 1/(threads−t))`) — an exact multinomial split
+    /// of the total, so the joint ball distribution is identical to the
+    /// sequential sampler's. Each shard drops its quota with an
+    /// independent RNG stream into a private edge buffer; buffers merge
+    /// once, in shard order. Deterministic for a fixed `(seed, threads)`
+    /// pair.
     pub fn sample_parallel(&self, seed: u64, threads: usize) -> MultiEdgeList {
         let threads = threads.max(1);
         let mut root = Xoshiro256pp::seed_from_u64(seed);
-        // Component ball counts from the root stream.
-        let counts: Vec<u64> = Component::ALL
+        // Component ball totals from the root stream.
+        let totals: Vec<u64> = Component::ALL
             .iter()
             .map(|&c| self.proposal.bdp(c).draw_ball_count(&mut root))
             .collect();
+        // quotas[t][ci]: shard t's share of component ci's total.
+        let mut quotas = vec![[0u64; 4]; threads];
+        for (ci, &total) in totals.iter().enumerate() {
+            let mut remaining = total;
+            for (t, quota) in quotas.iter_mut().enumerate() {
+                let left = (threads - t) as u64;
+                let take = if left == 1 {
+                    remaining
+                } else {
+                    binomial(&mut root, remaining, 1.0 / left as f64)
+                };
+                quota[ci] = take;
+                remaining -= take;
+            }
+        }
         let shard_rngs: Vec<Xoshiro256pp> = split_streams(seed ^ 0x9E3779B97F4A7C15, threads);
         let shards = crate::util::threadpool::scoped_chunks(threads, threads, |t, _| {
             let mut rng = shard_rngs[t].clone();
             let rng = &mut rng;
-            let mut g = MultiEdgeList::new(self.params.n());
+            let mut sink = CollectSink::new(self.params.n());
             for (ci, &comp) in Component::ALL.iter().enumerate() {
-                let total = counts[ci];
-                // Shard t handles ⌈total/threads⌉-sized slice t.
-                let per = total.div_ceil(threads as u64);
-                let lo = (t as u64 * per).min(total);
-                let hi = ((t as u64 + 1) * per).min(total);
                 let bdp = self.proposal.bdp(comp);
-                for _ in lo..hi {
-                    let (c, cp) = bdp.drop_ball(rng);
+                let (rowf, colf) = self.proposal.filters(comp);
+                for _ in 0..quotas[t][ci] {
+                    let Some((c, cp)) = bdp.drop_ball_pruned(rowf, colf, rng) else {
+                        continue;
+                    };
                     let p = self.proposal.accept_prob(comp, c, cp);
-                    if p > 0.0 && rng.next_f64() < p {
-                        let i = self.index.sample_node(c, rng).expect("occupied");
-                        let j = self.index.sample_node(cp, rng).expect("occupied");
-                        g.push(i, j);
-                    }
+                    self.accept_one(c, cp, p, rng, &mut sink);
                 }
             }
-            g
+            sink.graph
         });
         let mut out = MultiEdgeList::new(self.params.n());
         for shard in shards {
@@ -359,6 +416,19 @@ mod tests {
     }
 
     #[test]
+    fn counted_and_sink_paths_share_rng_schedule() {
+        // sample_counted is sample_into through a CollectSink; identical
+        // seeds must produce identical edges and counts.
+        let (params, a) = setup(6, 0.4, 200, 12);
+        let s = MagmBdpSampler::new(&params, &a);
+        let (g, p1, a1) = s.sample_counted(&mut Xoshiro256pp::seed_from_u64(13));
+        let mut sink = CollectSink::new(params.n());
+        let (p2, a2) = s.sample_into(&mut Xoshiro256pp::seed_from_u64(13), &mut sink);
+        assert_eq!((p1, a1), (p2, a2));
+        assert_eq!(g.edges(), sink.graph.edges());
+    }
+
+    #[test]
     fn parallel_deterministic_and_consistent() {
         let (params, a) = setup(6, 0.5, 300, 9);
         let s = MagmBdpSampler::new(&params, &a);
@@ -379,6 +449,24 @@ mod tests {
             / reps as f64;
         let se = (seq.max(1.0) / reps as f64).sqrt();
         assert!((seq - par).abs() < 8.0 * se, "seq {seq} par {par}");
+    }
+
+    #[test]
+    fn parallel_single_thread_matches_multi_thread_mean() {
+        // The binomial split must not distort totals whatever `threads`.
+        let (params, a) = setup(5, 0.5, 150, 14);
+        let s = MagmBdpSampler::new(&params, &a);
+        let reps = 30;
+        let one: f64 = (0..reps)
+            .map(|r| s.sample_parallel(500 + r, 1).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let eight: f64 = (0..reps)
+            .map(|r| s.sample_parallel(900 + r, 8).num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let se = (one.max(1.0) / reps as f64).sqrt();
+        assert!((one - eight).abs() < 8.0 * se, "t=1 {one} vs t=8 {eight}");
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod quilting;
 pub mod sink;
 pub mod undirected;
 
-pub use bdp::BdpSampler;
+pub use bdp::{BallBatch, BdpSampler, PrefixFilter};
 pub use cost::CostModel;
 pub use hybrid::{HybridChoice, HybridSampler};
 pub use kpgm_bdp::KpgmBdpSampler;

@@ -15,10 +15,15 @@
 //! so the acceptance ratio factorises over endpoints:
 //! `Λ/Λ'^(AB) = r_A(c) · r_B(c')` with `r_F(c) = |V_c| / (m_F E|V_c|)`
 //! and `r_I(c) = |V_c| / m_I` — both ≤ 1 by construction of `m_F`, `m_I`.
+//!
+//! Beyond the stacks and the acceptance lookup, the compiled proposal
+//! also carries one [`PrefixFilter`] per color class (occupied-frequent
+//! and occupied-infrequent): a ball from component `AB` can only be
+//! accepted when its row lands in class `A`'s occupied set and its column
+//! in class `B`'s, so [`ProposalSet::drop_pruned`] threads the matching
+//! filters into the BDP descent and aborts sure-rejections early.
 
-use std::collections::HashMap;
-
-use super::bdp::BdpSampler;
+use super::bdp::{BdpSampler, PrefixFilter};
 use crate::model::colors::{ColorClass, ColorIndex};
 use crate::model::magm::MagmParams;
 use crate::model::params::InitiatorMatrix;
@@ -55,12 +60,17 @@ struct ColorAccept {
 }
 
 /// Acceptance lookup: dense array for small color spaces (the hot path —
-/// two O(1) loads per proposal), hash map beyond `DENSE_MAX_D` levels.
+/// two O(1) loads per proposal), sorted-key binary search beyond
+/// `DENSE_MAX_D` levels (no hashing on either path).
 #[derive(Clone, Debug)]
 enum AcceptLookup {
     /// `r[c]` (0 ⇒ reject) + frequent-class bitmap, indexed by color.
     Dense { r: Vec<f64>, frequent: Vec<u64> },
-    Sparse(HashMap<u64, ColorAccept>),
+    /// Occupied colors ascending + per-slot acceptance data.
+    Sparse {
+        keys: Vec<u64>,
+        entries: Vec<ColorAccept>,
+    },
 }
 
 /// Colors up to `2^22` get the dense table (≈ 34 MiB worst case).
@@ -82,17 +92,23 @@ impl AcceptLookup {
                 };
                 Some((class, rv))
             }
-            AcceptLookup::Sparse(map) => map.get(&c).map(|e| (e.class, e.r)),
+            AcceptLookup::Sparse { keys, entries } => keys
+                .binary_search(&c)
+                .ok()
+                .map(|s| (entries[s].class, entries[s].r)),
         }
     }
 }
 
-/// The compiled proposal: four BDPs plus the acceptance lookup.
+/// The compiled proposal: four BDPs, the acceptance lookup and the
+/// per-class occupancy filters for the pruned descent.
 #[derive(Clone, Debug)]
 pub struct ProposalSet {
     stacks: [Vec<InitiatorMatrix>; 4],
     bdps: [BdpSampler; 4],
     accept: AcceptLookup,
+    /// Occupancy filters: `[frequent, infrequent]` occupied colors.
+    filters: [PrefixFilter; 2],
     m_f: f64,
     m_i: f64,
 }
@@ -100,6 +116,17 @@ pub struct ProposalSet {
 impl ProposalSet {
     /// Build the Eq. 21 stacks for a model and one attribute realisation.
     pub fn build(params: &MagmParams, index: &ColorIndex) -> Self {
+        Self::build_with_dense_max(params, index, DENSE_MAX_D)
+    }
+
+    /// Test hook: build with an explicit dense-lookup depth threshold, so
+    /// the sparse branch is exercisable at small `d`.
+    #[doc(hidden)]
+    pub fn build_with_dense_max(
+        params: &MagmParams,
+        index: &ColorIndex,
+        dense_max_d: usize,
+    ) -> Self {
         let d = params.d();
         let n = params.n() as f64;
         let m_f = index.m_f();
@@ -140,7 +167,7 @@ impl ProposalSet {
             debug_assert!(r <= 1.0 + 1e-9, "endpoint factor {r} > 1 for color {c}");
             ColorAccept { class, r }
         };
-        let accept = if d <= DENSE_MAX_D {
+        let accept = if d <= dense_max_d {
             let num_colors = 1usize << d;
             let mut r = vec![0.0f64; num_colors];
             let mut frequent = vec![0u64; num_colors.div_ceil(64)];
@@ -153,16 +180,35 @@ impl ProposalSet {
             }
             AcceptLookup::Dense { r, frequent }
         } else {
-            let mut map = HashMap::with_capacity(index.occupied_colors());
+            // `index.iter()` walks colors ascending, so the keys arrive
+            // pre-sorted for the binary-search lookup.
+            let mut keys = Vec::with_capacity(index.occupied_colors());
+            let mut entries = Vec::with_capacity(index.occupied_colors());
             for (c, nodes) in index.iter() {
-                map.insert(c, entry(c, nodes.len() as f64));
+                keys.push(c);
+                entries.push(entry(c, nodes.len() as f64));
             }
-            AcceptLookup::Sparse(map)
+            AcceptLookup::Sparse { keys, entries }
         };
+
+        // Per-class occupancy filters at the BDP chunk boundaries (all
+        // four component BDPs share one depth, hence one boundary list).
+        let ends = bdps[0].chunk_ends();
+        let class_colors = |want: ColorClass| {
+            index
+                .iter()
+                .filter_map(move |(c, _)| (index.class_of(params, c) == want).then_some(c))
+        };
+        let filters = [
+            PrefixFilter::build(&ends, class_colors(ColorClass::Frequent)),
+            PrefixFilter::build(&ends, class_colors(ColorClass::Infrequent)),
+        ];
+
         Self {
             stacks,
             bdps,
             accept,
+            filters,
             m_f,
             m_i,
         }
@@ -186,6 +232,32 @@ impl ProposalSet {
     /// derived from this in the XLA acceptance backend).
     pub fn stack(&self, component: Component) -> &[InitiatorMatrix] {
         &self.stacks[Self::slot(component)]
+    }
+
+    /// Occupancy filter for one color class.
+    fn class_filter(&self, class: ColorClass) -> &PrefixFilter {
+        match class {
+            ColorClass::Frequent => &self.filters[0],
+            ColorClass::Infrequent => &self.filters[1],
+        }
+    }
+
+    /// The `(row, column)` occupancy filters for a component's descent.
+    pub fn filters(&self, component: Component) -> (&PrefixFilter, &PrefixFilter) {
+        (self.class_filter(component.0), self.class_filter(component.1))
+    }
+
+    /// Drop one ball from a component's BDP through the class filters:
+    /// `None` is a sure-rejection (accept probability exactly 0), `Some`
+    /// lands on an occupied pair of the right classes.
+    #[inline]
+    pub fn drop_pruned<R: crate::util::rng::Rng + ?Sized>(
+        &self,
+        component: Component,
+        rng: &mut R,
+    ) -> Option<(u64, u64)> {
+        let (rowf, colf) = self.filters(component);
+        self.bdp(component).drop_ball_pruned(rowf, colf, rng)
     }
 
     /// Observed multiplicity bounds used in the scales.
@@ -355,5 +427,89 @@ mod tests {
             assert_eq!(prop.accept_prob(comp, 0, unocc), 0.0);
         }
         let _ = params;
+    }
+
+    #[test]
+    fn dense_and_sparse_lookup_parity() {
+        // The AcceptLookup::Sparse branch must answer identically to the
+        // dense table on the same realisation (it is the production path
+        // for d > 22, where exhaustive checks are impossible).
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, 8, 0.35, 200);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let a = params.sample_attributes(&mut rng);
+        let idx = ColorIndex::build(&params, &a);
+        let dense = ProposalSet::build_with_dense_max(&params, &idx, DENSE_MAX_D);
+        let sparse = ProposalSet::build_with_dense_max(&params, &idx, 0);
+        assert!(matches!(dense.accept, AcceptLookup::Dense { .. }));
+        assert!(matches!(sparse.accept, AcceptLookup::Sparse { .. }));
+        for comp in Component::ALL {
+            for c in 0..256u64 {
+                for cp in 0..256u64 {
+                    let pd = dense.accept_prob(comp, c, cp);
+                    let ps = sparse.accept_prob(comp, c, cp);
+                    assert!(
+                        (pd - ps).abs() < 1e-15,
+                        "{} ({c},{cp}): dense {pd} sparse {ps}",
+                        comp.label()
+                    );
+                }
+            }
+        }
+        // Out-of-grid colors reject on both paths.
+        assert_eq!(dense.accept_prob(Component::FF, 1 << 20, 0), 0.0);
+        assert_eq!(sparse.accept_prob(Component::FF, 1 << 20, 0), 0.0);
+    }
+
+    #[test]
+    fn pruned_survivors_always_accepted_with_positive_probability() {
+        // For d within the filter's bitmap range, a surviving ball has
+        // accept_prob > 0 by construction (the prune is exact).
+        let (_, _, prop) = setup(12, 0.3, 1 << 8, 8);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        for comp in Component::ALL {
+            let mut survivors = 0;
+            for _ in 0..20_000 {
+                if let Some((c, cp)) = prop.drop_pruned(comp, &mut rng) {
+                    survivors += 1;
+                    assert!(
+                        prop.accept_prob(comp, c, cp) > 0.0,
+                        "{} ({c},{cp}) survived the prune but rejects",
+                        comp.label()
+                    );
+                }
+            }
+            // Sanity: at 2^12 colors vs 2^8 nodes most balls are pruned.
+            assert!(survivors < 20_000, "{}: nothing pruned", comp.label());
+        }
+    }
+
+    #[test]
+    fn pruning_preserves_acceptance_mass() {
+        // Σ_cc' Λ'(c,c')·accept(c,c') computed over survivors must match
+        // the unpruned estimator: compare Monte-Carlo acceptance counts.
+        let (_, _, prop) = setup(10, 0.4, 1 << 7, 10);
+        let comp = Component::FF;
+        let trials = 100_000;
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut acc_plain = 0u64;
+        for _ in 0..trials {
+            let (c, cp) = prop.bdp(comp).drop_ball(&mut rng);
+            let p = prop.accept_prob(comp, c, cp);
+            if p > 0.0 && rng.next_f64() < p {
+                acc_plain += 1;
+            }
+        }
+        let mut acc_pruned = 0u64;
+        for _ in 0..trials {
+            if let Some((c, cp)) = prop.drop_pruned(comp, &mut rng) {
+                let p = prop.accept_prob(comp, c, cp);
+                if p > 0.0 && rng.next_f64() < p {
+                    acc_pruned += 1;
+                }
+            }
+        }
+        let (a, b) = (acc_plain as f64, acc_pruned as f64);
+        let se = (a.max(b).max(1.0)).sqrt();
+        assert!((a - b).abs() < 8.0 * se, "plain {a} vs pruned {b}");
     }
 }

@@ -31,6 +31,111 @@ impl Measurement {
     }
 }
 
+impl Measurement {
+    /// Serialise as a JSON object (hand-rolled — no serde offline).
+    pub fn to_json(&self) -> String {
+        let throughput = match self.throughput() {
+            Some(tp) => format!("{tp:.6e}"),
+            None => "null".to_string(),
+        };
+        let units = match self.units {
+            Some(u) => format!("{u:.6e}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":{},\"median_secs\":{:.6e},\"mad_secs\":{:.6e},\"iters\":{},\"units\":{units},\"units_per_sec\":{throughput}}}",
+            json_escape(&self.name),
+            self.median,
+            self.mad,
+            self.iters
+        )
+    }
+}
+
+/// Quote + escape a string for JSON output.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Persist `measurements` for one bench binary (`section`) and regenerate
+/// the aggregate machine-readable report `BENCH_micro.json` in `root`
+/// from every section recorded so far.
+///
+/// Per-section data lives as JSON-lines under `root/bench_out/` (one
+/// measurement object per line), so the aggregate can be rebuilt by
+/// concatenation — no JSON parser needed offline. Note: the aggregate
+/// includes EVERY `bench_*.jsonl` present, so after renaming or removing
+/// a bench, delete its stale file (or all of `bench_out/`) before
+/// regenerating, or the dead section lingers in the report. Returns the
+/// aggregate report path.
+pub fn publish_json_in(
+    root: &std::path::Path,
+    section: &str,
+    measurements: &[Measurement],
+) -> std::io::Result<std::path::PathBuf> {
+    let out_dir = root.join("bench_out");
+    std::fs::create_dir_all(&out_dir)?;
+    let mut lines = String::new();
+    for m in measurements {
+        lines.push_str(&m.to_json());
+        lines.push('\n');
+    }
+    std::fs::write(out_dir.join(format!("bench_{section}.jsonl")), lines)?;
+
+    // Rebuild the aggregate from all recorded sections (sorted for
+    // stable diffs across runs).
+    let mut sections: Vec<(String, Vec<String>)> = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(&out_dir)?.filter_map(|e| e.ok()).collect();
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(stem) = name.strip_prefix("bench_").and_then(|n| n.strip_suffix(".jsonl"))
+        else {
+            continue;
+        };
+        let body = std::fs::read_to_string(entry.path())?;
+        let rows: Vec<String> = body.lines().map(|l| l.to_string()).collect();
+        sections.push((stem.to_string(), rows));
+    }
+    let mut json = String::from("{\n  \"schema\": 1,\n  \"sections\": {\n");
+    for (i, (name, rows)) in sections.iter().enumerate() {
+        json.push_str(&format!("    {}: [\n", json_escape(name)));
+        for (j, row) in rows.iter().enumerate() {
+            json.push_str("      ");
+            json.push_str(row);
+            json.push_str(if j + 1 < rows.len() { ",\n" } else { "\n" });
+        }
+        json.push_str(if i + 1 < sections.len() { "    ],\n" } else { "    ]\n" });
+    }
+    json.push_str("  }\n}\n");
+    let path = root.join("BENCH_micro.json");
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
+/// [`publish_json_in`] rooted at the working directory (benches run from
+/// the repo root under cargo, so the report lands at `./BENCH_micro.json`).
+pub fn publish_json(
+    section: &str,
+    measurements: &[Measurement],
+) -> std::io::Result<std::path::PathBuf> {
+    publish_json_in(std::path::Path::new("."), section, measurements)
+}
+
 impl std::fmt::Display for Measurement {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -258,6 +363,52 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("demo", &["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn measurement_json_shape() {
+        let m = Measurement {
+            name: "alias \"4-way\" draw".into(),
+            median: 1.5e-8,
+            mad: 2.0e-10,
+            iters: 100,
+            units: Some(1e6),
+        };
+        let j = m.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\\\"4-way\\\""));
+        assert!(j.contains("\"iters\":100"));
+        assert!(j.contains("\"units_per_sec\""));
+        let none = Measurement { units: None, ..m };
+        assert!(none.to_json().contains("\"units\":null"));
+    }
+
+    #[test]
+    fn publish_json_aggregates_sections() {
+        let dir = std::env::temp_dir().join(format!("magbdp_benchkit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = |name: &str| Measurement {
+            name: name.into(),
+            median: 1e-6,
+            mad: 1e-8,
+            iters: 10,
+            units: Some(2.0),
+        };
+        publish_json_in(&dir, "micro", &[m("a"), m("b")]).unwrap();
+        let path = publish_json_in(&dir, "pruning", &[m("c")]).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        assert!(body.contains("\"schema\": 1"));
+        assert!(body.contains("\"micro\""));
+        assert!(body.contains("\"pruning\""));
+        for name in ["\"a\"", "\"b\"", "\"c\""] {
+            assert!(body.contains(name), "missing {name} in {body}");
+        }
+        // Re-publishing a section replaces rather than duplicates it.
+        publish_json_in(&dir, "micro", &[m("a2")]).unwrap();
+        let body = std::fs::read_to_string(dir.join("BENCH_micro.json")).unwrap();
+        assert!(body.contains("\"a2\"") && !body.contains("\"name\":\"a\""));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Minimal error-context plumbing (replaces `anyhow`).
+//!
+//! The hermetic build has no third-party crates, so the runtime layer's
+//! error handling is implemented here with the same ergonomics the code
+//! was written against: an opaque [`Error`] carrying a context chain,
+//! a [`Context`] extension trait for `Result`/`Option`, and the
+//! [`bail!`](crate::bail)/[`ensure!`](crate::ensure) macros.
+//!
+//! Formatting mirrors `anyhow`: `{e}` prints the outermost context only,
+//! `{e:#}` prints the whole chain separated by `": "`.
+
+use std::fmt;
+
+/// An opaque error: a chain of context messages, outermost first.
+#[derive(Debug, Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    #[must_use]
+    pub fn context(mut self, msg: impl fmt::Display) -> Self {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (always non-empty).
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` specialised to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`anyhow::Context` work-alike).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        // `{:#}` so wrapping an already-chained `Error` keeps its full
+        // chain (foreign errors ignore the alternate flag).
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(msg))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an [`Error`](crate::util::error::Error) built from a
+/// format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chain_formats_like_anyhow() {
+        let e = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        let e = Err::<(), _>(e).with_context(|| "loading artifact").unwrap_err();
+        assert_eq!(format!("{e:#}"), "loading artifact: reading manifest: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "unlucky 3");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+    }
+}

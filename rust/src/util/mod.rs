@@ -1,14 +1,16 @@
 //! Zero-dependency substrates.
 //!
-//! The offline build environment vendors only the `xla` and `anyhow`
-//! crates, so everything a systems library normally pulls from the
-//! ecosystem — PRNGs, distribution samplers, CLI parsing, a thread pool,
-//! metrics, statistics, property testing, benchmarking — is implemented
-//! here from scratch and unit-tested in place.
+//! The hermetic offline build has no third-party crates at all (the
+//! optional `xla` crate exists only behind the `xla-runtime` feature), so
+//! everything a systems library normally pulls from the ecosystem —
+//! PRNGs, distribution samplers, error contexts, CLI parsing, a thread
+//! pool, metrics, statistics, property testing, benchmarking — is
+//! implemented here from scratch and unit-tested in place.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod error;
 pub mod logging;
 pub mod metrics;
 pub mod quickcheck;

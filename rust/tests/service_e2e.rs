@@ -32,6 +32,10 @@ theta=0.35,0.52,0.52,0.95 d=9 mu=0.6 seed=2 algo=magm-bdp
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla-runtime"),
+    ignore = "requires the xla-runtime feature + AOT artifacts"
+)]
 fn xla_job_through_service() {
     let svc = GenerationService::new(2);
     let results = svc
@@ -76,6 +80,10 @@ fn service_parallelism_does_not_change_results() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla-runtime"),
+    ignore = "requires the xla-runtime feature + AOT artifacts"
+)]
 fn failure_injection_xla_capacity_exceeded() {
     // d = 22 exceeds the accept artifact's n_max (2^20 colors): the job
     // must fail with a structured error while the service keeps running

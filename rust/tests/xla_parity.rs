@@ -2,11 +2,15 @@
 //! agree with the native Rust implementations — this is the cross-layer
 //! correctness contract of the three-layer architecture.
 //!
-//! These tests require `make artifacts` to have run (the Makefile's
-//! `test` target guarantees the order).
+//! These tests require the `xla-runtime` feature (with the vendored
+//! `xla` crate) and `make artifacts` to have run (the Makefile's `test`
+//! target guarantees the order). The hermetic default build compiles
+//! this file to nothing.
+#![cfg(feature = "xla-runtime")]
 
 use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
 use magbdp::runtime::{XlaAccept, XlaRuntime};
+use magbdp::sampler::bdp::BallBatch;
 use magbdp::sampler::magm_bdp::{AcceptBackend, MagmBdpSampler, NativeAccept};
 use magbdp::sampler::proposal::Component;
 use magbdp::util::rng::{Rng, SeedableRng, Xoshiro256pp};
@@ -87,19 +91,24 @@ fn accept_backend_parity_native_vs_xla() {
 
     for comp in Component::ALL {
         let bdp = sampler.proposal().bdp(comp);
-        let pairs: Vec<(u64, u64)> = (0..2000).map(|_| bdp.drop_ball(&mut rng)).collect();
+        let mut balls = BallBatch::with_capacity(2000);
+        for _ in 0..2000 {
+            let (c, cp) = bdp.drop_ball(&mut rng);
+            balls.push(c, cp);
+        }
         let mut probs_native = Vec::new();
         let mut probs_xla = Vec::new();
-        native.accept_probs(sampler.proposal(), comp, &pairs, &mut probs_native);
-        xla.accept_probs(sampler.proposal(), comp, &pairs, &mut probs_xla);
+        native.accept_probs(sampler.proposal(), comp, &balls, &mut probs_native);
+        xla.accept_probs(sampler.proposal(), comp, &balls, &mut probs_xla);
         assert_eq!(probs_native.len(), probs_xla.len());
         for (i, (&a, &b)) in probs_native.iter().zip(&probs_xla).enumerate() {
             let err = (a - b).abs();
             assert!(
                 err < 1e-4 * a.max(1.0).max(b),
-                "{} pair#{i} {:?}: native {a} xla {b}",
+                "{} pair#{i} ({}, {}): native {a} xla {b}",
                 comp.label(),
-                pairs[i]
+                balls.rows[i],
+                balls.cols[i]
             );
         }
     }
