@@ -23,19 +23,24 @@ use magbdp::coordinator::GenerationService;
 use magbdp::util::benchkit::Table;
 
 fn main() {
-    // --- Layer 1+2 sanity: artifacts present and parity-checked.
-    let rt = match magbdp::runtime::XlaRuntime::global() {
-        Ok(rt) => rt,
+    // --- Layer 1+2 sanity: artifacts present and parity-checked. The
+    // hermetic default build ships stubs that report the runtime
+    // unavailable; the driver then degrades to a native-only trace so
+    // the Layer-3 pipeline is still exercised end to end (CI runs this).
+    let xla = match magbdp::runtime::XlaRuntime::global() {
+        Ok(rt) => {
+            println!(
+                "runtime: platform={} artifacts={}",
+                rt.platform(),
+                rt.dir().display()
+            );
+            true
+        }
         Err(e) => {
-            eprintln!("XLA runtime unavailable ({e}); run `make artifacts` first");
-            std::process::exit(2);
+            eprintln!("XLA runtime unavailable ({e}); running the native-only trace");
+            false
         }
     };
-    println!(
-        "runtime: platform={} artifacts={}",
-        rt.platform(),
-        rt.dir().display()
-    );
 
     // --- Build the workload trace.
     let d = 12usize;
@@ -51,12 +56,36 @@ fn main() {
             }
         }
     }
-    // XLA-backed jobs: the L1 kernel on the request path.
-    for mu in [0.4, 0.6] {
-        trace.push_str(&format!("d=10 mu={mu} seed={id} algo=magm-bdp-xla\n"));
-        id += 1;
+    let mut mus: Vec<f64> = Vec::new();
+    for _ in 0..2 {
+        for mu in [0.3, 0.4, 0.5, 0.6, 0.7] {
+            mus.push(mu);
+            mus.push(mu);
+        }
     }
-    println!("trace: {id} jobs (d={d}, both Θ, μ grid, + XLA-backed)");
+    if xla {
+        // XLA-backed jobs: the L1 kernel on the request path.
+        for mu in [0.4, 0.6] {
+            trace.push_str(&format!("d=10 mu={mu} seed={id} algo=magm-bdp-xla\n"));
+            mus.push(mu);
+            id += 1;
+        }
+    }
+    // A sink-first streaming job: edges go straight to disk, the
+    // service never materialises the graph.
+    let stream_path = std::env::temp_dir()
+        .join("magbdp-end-to-end.tsv")
+        .to_string_lossy()
+        .into_owned();
+    trace.push_str(&format!(
+        "d=12 mu=0.4 seed={id} algo=magm-bdp output={stream_path}\n"
+    ));
+    mus.push(0.4);
+    id += 1;
+    println!(
+        "trace: {id} jobs (d={d}, both Θ, μ grid{}, + streaming-to-disk)",
+        if xla { ", + XLA-backed" } else { "" }
+    );
 
     // --- Run through the service.
     let threads = magbdp::util::threadpool::default_parallelism();
@@ -70,19 +99,6 @@ fn main() {
         &format!("end-to-end trace ({threads} workers)"),
         &["id", "algo", "mu", "edges", "proposed", "wall(ms)"],
     );
-    let mus: Vec<f64> = {
-        // Recover μ per job id from the trace construction above.
-        let mut v = Vec::new();
-        for _ in 0..2 {
-            for mu in [0.3, 0.4, 0.5, 0.6, 0.7] {
-                v.push(mu);
-                v.push(mu);
-            }
-        }
-        v.push(0.4);
-        v.push(0.6);
-        v
-    };
     let mut failures = 0;
     for r in &results {
         if let Some(e) = &r.error {
@@ -107,13 +123,15 @@ fn main() {
     let lat = svc.metrics().histogram("service.job_latency_ns");
     println!(
         "aggregate: {} jobs in {:.2}s wall | throughput {:.0} edges/s | \
-         job latency p50 {:.1} ms, p99 {:.1} ms | XLA dispatches {}",
+         job latency p50 {:.1} ms, p99 {:.1} ms | XLA dispatches {} | \
+         streamed {} bytes to disk",
         results.len(),
         wall.as_secs_f64(),
         total_edges as f64 / wall.as_secs_f64(),
         lat.quantile(0.5) / 1e6,
         lat.quantile(0.99) / 1e6,
-        svc.metrics().counter("service.xla_dispatches").get()
+        svc.metrics().counter("service.xla_dispatches").get(),
+        svc.metrics().counter("service.bytes_written").get()
     );
 
     // --- Headline: who wins where (the Figure 5/6 claim).

@@ -14,4 +14,4 @@ pub mod service;
 
 pub use batcher::DynamicBatcher;
 pub use scheduler::ShardPlan;
-pub use service::{Algo, GenerationService, JobResult, JobSpec};
+pub use service::{Algo, GenerationService, JobResult, JobSpec, OutputFormat};

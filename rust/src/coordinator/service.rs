@@ -5,13 +5,33 @@
 //! algorithm). Jobs arrive as text lines (`key=value` tokens; see
 //! [`JobSpec::parse_line`]) so workload traces are plain files the CLI
 //! (`magbdp serve --jobs trace.txt`) and the end-to-end example replay.
+//!
+//! # Sink-first execution
+//!
+//! Every job executes against an [`EdgeSink`], never a buffered graph:
+//! [`run_job`] picks the sink from the spec and hands it to one shared
+//! dispatch ([`sample_job_into`]). Jobs without an `output=` path stream
+//! into a [`CollectSink`] (the only mode that can also report the
+//! distinct-edge count and return the edge list); jobs **with** one
+//! stream straight to disk — `format=tsv` through a
+//! [`TsvSink`], `format=bin` through a
+//! [`crate::graph::io::BinaryEdgeSink`] — so a crawl-scale job's memory
+//! stays O(write buffer) no matter how many edges it emits. Deferred
+//! sink I/O errors surface through each sink's `try_finish()` and are
+//! reported as job failures.
+//!
+//! Per-job metrics: `service.jobs` / `service.errors` counters, the
+//! `service.job_latency_ns` histogram, the `service.edges` and
+//! `service.bytes_written` counters, and the `service.edges_per_sec`
+//! gauge (last finished job's streaming rate).
 
 use std::sync::Arc;
 
-use crate::model::magm::MagmParams;
+use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::model::params::InitiatorMatrix;
 use crate::sampler::{
-    HybridSampler, MagmBdpSampler, MagmSimpleSampler, NativeAccept, QuiltingSampler, Sampler,
+    CollectSink, EdgeSink, HybridSampler, MagmBdpSampler, MagmSimpleSampler, QuiltingSampler,
+    Sampler, TsvSink,
 };
 use crate::util::metrics::Registry;
 use crate::util::rng::{SeedableRng, Xoshiro256pp};
@@ -55,6 +75,33 @@ impl Algo {
     }
 }
 
+/// On-disk format of a streaming job's `output=` file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OutputFormat {
+    /// `src\tdst` text lines.
+    #[default]
+    Tsv,
+    /// The compact [`crate::graph::io::BinaryEdgeSink`] format.
+    Binary,
+}
+
+impl OutputFormat {
+    pub fn parse(s: &str) -> Option<OutputFormat> {
+        match s {
+            "tsv" => Some(OutputFormat::Tsv),
+            "bin" | "binary" => Some(OutputFormat::Binary),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OutputFormat::Tsv => "tsv",
+            OutputFormat::Binary => "bin",
+        }
+    }
+}
+
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
@@ -66,13 +113,21 @@ pub struct JobSpec {
     pub seed: u64,
     pub algo: Algo,
     /// Keep the sampled edges in the result (memory!) or just counts.
+    /// Ignored for streaming jobs (`output` set).
     pub collect_graph: bool,
+    /// Stream accepted edges to this path instead of materialising the
+    /// graph in memory. Streaming jobs report `edges_simple = 0` (the
+    /// distinct-edge count requires the full edge set).
+    pub output: Option<String>,
+    /// File format of `output` (default TSV).
+    pub format: OutputFormat,
 }
 
 impl JobSpec {
-    /// Parse `theta=a,b,c,d d=12 mu=0.4 n=4096 seed=7 algo=magm-bdp`.
-    /// Unknown keys are rejected; omitted keys get defaults
-    /// (`theta=Θ₁`, `n=2^d`, `seed=id`, `algo=magm-bdp`).
+    /// Parse `theta=a,b,c,d d=12 mu=0.4 n=4096 seed=7 algo=magm-bdp
+    /// output=/tmp/e.tsv format=tsv`. Unknown keys are rejected; omitted
+    /// keys get defaults (`theta=Θ₁`, `n=2^d`, `seed=id`,
+    /// `algo=magm-bdp`, no output, `format=tsv`).
     pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
         let mut theta = InitiatorMatrix::THETA1;
         let mut d: usize = 12;
@@ -80,6 +135,8 @@ impl JobSpec {
         let mut n: Option<u64> = None;
         let mut seed: Option<u64> = None;
         let mut algo = Algo::MagmBdp;
+        let mut output: Option<String> = None;
+        let mut format = OutputFormat::Tsv;
         for tok in line.split_whitespace() {
             let (k, v) = tok
                 .split_once('=')
@@ -101,6 +158,11 @@ impl JobSpec {
                 "algo" => {
                     algo = Algo::parse(v).ok_or_else(|| format!("job {id}: unknown algo {v}"))?
                 }
+                "output" => output = Some(v.to_string()),
+                "format" => {
+                    format = OutputFormat::parse(v)
+                        .ok_or_else(|| format!("job {id}: unknown format {v} (tsv|bin)"))?
+                }
                 _ => return Err(format!("job {id}: unknown key {k:?}")),
             }
         }
@@ -119,6 +181,8 @@ impl JobSpec {
             seed: seed.unwrap_or(id),
             algo,
             collect_graph: false,
+            output,
+            format,
         })
     }
 
@@ -136,11 +200,16 @@ pub struct JobResult {
     pub nodes: u64,
     /// Multi-graph edge count.
     pub edges: u64,
-    /// Distinct-edge count.
+    /// Distinct-edge count (0 for streaming jobs — it needs the full
+    /// edge set, which streaming deliberately never holds).
     pub edges_simple: u64,
     pub proposed: u64,
     pub wall: std::time::Duration,
     pub edges_list: Option<crate::graph::EdgeList>,
+    /// Path the edges were streamed to, if this was a streaming job.
+    pub output: Option<String>,
+    /// Bytes written to `output` (0 for in-memory jobs).
+    pub bytes_written: u64,
     pub error: Option<String>,
 }
 
@@ -187,44 +256,105 @@ impl GenerationService {
     }
 }
 
-/// Execute one job, recording metrics.
+/// Stream the job's algorithm into `sink`; returns `(proposed, accepted)`.
+/// This is the one dispatch every execution mode (collect, TSV, binary)
+/// funnels through.
+pub fn sample_job_into(
+    spec: &JobSpec,
+    params: &MagmParams,
+    assignment: &AttributeAssignment,
+    rng: &mut Xoshiro256pp,
+    sink: &mut dyn EdgeSink,
+    metrics: &Registry,
+) -> Result<(u64, u64), String> {
+    match spec.algo {
+        Algo::MagmBdp => {
+            let s = MagmBdpSampler::new(params, assignment);
+            Ok(s.sample_into(rng, sink))
+        }
+        Algo::MagmBdpXla => {
+            let s = MagmBdpSampler::new(params, assignment);
+            let mut backend = crate::runtime::XlaAccept::new(params, s.index())
+                .map_err(|e| format!("{e:#}"))?;
+            let batch = backend.batch_capacity();
+            let counts = s.sample_batched_into(rng, &mut backend, batch, sink);
+            metrics.counter("service.xla_dispatches").add(backend.dispatches);
+            Ok(counts)
+        }
+        Algo::Simple => {
+            let s = MagmSimpleSampler::new(params, assignment);
+            Ok(Sampler::sample_into(&s, rng, sink))
+        }
+        Algo::Quilting => {
+            let s = QuiltingSampler::new(params, assignment, rng);
+            Ok(Sampler::sample_into(&s, rng, sink))
+        }
+        Algo::Hybrid => {
+            let s = HybridSampler::new(params, assignment, rng);
+            Ok(Sampler::sample_into(&s, rng, sink))
+        }
+    }
+}
+
+/// What one execution produced besides the counts.
+struct JobOutcome {
+    proposed: u64,
+    edges: u64,
+    edges_simple: u64,
+    edges_list: Option<crate::graph::EdgeList>,
+    bytes_written: u64,
+}
+
+/// Execute one job against its sink, recording metrics.
 pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
     let t = std::time::Instant::now();
     let params = spec.params();
     let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
     let assignment = params.sample_attributes(&mut rng);
 
-    let outcome: Result<(crate::graph::MultiEdgeList, u64), String> = (|| match spec.algo {
-        Algo::MagmBdp => {
-            let s = MagmBdpSampler::new(&params, &assignment);
-            let (g, proposed, _) = s.sample_counted(&mut rng);
-            Ok((g, proposed))
+    let outcome: Result<JobOutcome, String> = (|| match &spec.output {
+        None => {
+            // In-memory mode: collect, then derive the simple graph.
+            let mut sink = CollectSink::new(params.n());
+            let (proposed, edges) =
+                sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
+            let simple = sink.graph.into_simple();
+            Ok(JobOutcome {
+                proposed,
+                edges,
+                edges_simple: simple.num_edges() as u64,
+                edges_list: spec.collect_graph.then_some(simple),
+                bytes_written: 0,
+            })
         }
-        Algo::MagmBdpXla => {
-            let s = MagmBdpSampler::new(&params, &assignment);
-            let mut backend = crate::runtime::XlaAccept::new(&params, s.index())
-                .map_err(|e| format!("{e:#}"))?;
-            let batch = backend.batch_capacity();
-            let (g, proposed, _) = s.sample_batched(&mut rng, &mut backend, batch);
-            metrics.counter("service.xla_dispatches").add(backend.dispatches);
-            Ok((g, proposed))
-        }
-        Algo::Simple => {
-            let s = MagmSimpleSampler::new(&params, &assignment);
-            let (g, proposed, _) = s.sample_counted(&mut rng);
-            Ok((g, proposed))
-        }
-        Algo::Quilting => {
-            let s = QuiltingSampler::new(&params, &assignment, &mut rng);
-            let (g, proposed, _) = s.sample_counted(&mut rng);
-            Ok((g, proposed))
-        }
-        Algo::Hybrid => {
-            let s = HybridSampler::new(&params, &assignment, &mut rng);
-            let _ = NativeAccept; // hybrid always uses native acceptance
-            let g = s.sample(&mut rng);
-            let proposed = g.num_edges() as u64;
-            Ok((g, proposed))
+        Some(path) => {
+            // Streaming mode: edges go straight to disk; memory stays
+            // O(write buffer) however many edges the job emits.
+            let file = std::fs::File::create(path)
+                .map_err(|e| format!("create {path}: {e}"))?;
+            let (counts, bytes) = match spec.format {
+                OutputFormat::Tsv => {
+                    let mut sink = TsvSink::new(file);
+                    let counts =
+                        sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
+                    sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
+                    (counts, sink.bytes)
+                }
+                OutputFormat::Binary => {
+                    let mut sink = crate::graph::io::BinaryEdgeSink::new(file, params.n());
+                    let counts =
+                        sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
+                    sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
+                    (counts, sink.bytes)
+                }
+            };
+            Ok(JobOutcome {
+                proposed: counts.0,
+                edges: counts.1,
+                edges_simple: 0,
+                edges_list: None,
+                bytes_written: bytes,
+            })
         }
     })();
 
@@ -234,19 +364,23 @@ pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
         .histogram("service.job_latency_ns")
         .observe(wall.as_nanos() as f64);
     match outcome {
-        Ok((graph, proposed)) => {
-            let edges = graph.num_edges() as u64;
-            metrics.counter("service.edges").add(edges);
-            let simple = graph.into_simple();
+        Ok(out) => {
+            metrics.counter("service.edges").add(out.edges);
+            metrics.counter("service.bytes_written").add(out.bytes_written);
+            metrics
+                .gauge("service.edges_per_sec")
+                .set(out.edges as f64 / wall.as_secs_f64().max(1e-9));
             JobResult {
                 id: spec.id,
                 algo: spec.algo.label(),
                 nodes: spec.n,
-                edges,
-                edges_simple: simple.num_edges() as u64,
-                proposed,
+                edges: out.edges,
+                edges_simple: out.edges_simple,
+                proposed: out.proposed,
                 wall,
-                edges_list: spec.collect_graph.then_some(simple),
+                edges_list: out.edges_list,
+                output: spec.output.clone(),
+                bytes_written: out.bytes_written,
                 error: None,
             }
         }
@@ -261,6 +395,8 @@ pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
                 proposed: 0,
                 wall,
                 edges_list: None,
+                output: spec.output.clone(),
+                bytes_written: 0,
                 error: Some(e),
             }
         }
@@ -299,6 +435,72 @@ mod tests {
         assert!(JobSpec::parse_line(0, "mu=1.5").is_err());
         assert!(JobSpec::parse_line(0, "d=0").is_err());
         assert!(JobSpec::parse_line(0, "algo=alien").is_err());
+        assert!(JobSpec::parse_line(0, "format=xml").is_err());
+    }
+
+    #[test]
+    fn parse_line_streaming_fields() {
+        let j = JobSpec::parse_line(1, "d=6 output=/tmp/x.bin format=bin").unwrap();
+        assert_eq!(j.output.as_deref(), Some("/tmp/x.bin"));
+        assert_eq!(j.format, OutputFormat::Binary);
+        let j = JobSpec::parse_line(2, "d=6 output=/tmp/x.tsv").unwrap();
+        assert_eq!(j.format, OutputFormat::Tsv, "tsv is the default format");
+        assert!(JobSpec::parse_line(3, "d=6").unwrap().output.is_none());
+    }
+
+    #[test]
+    fn streaming_job_writes_file_and_skips_materialisation() {
+        let dir = std::env::temp_dir().join("magbdp-service-stream");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job0.tsv").to_string_lossy().into_owned();
+        let spec =
+            JobSpec::parse_line(0, &format!("d=6 mu=0.5 seed=11 output={path}")).unwrap();
+        let metrics = Registry::new();
+        let r = run_job(&spec, &metrics);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.edges > 0);
+        assert_eq!(r.edges_simple, 0, "streaming jobs do not dedup");
+        assert!(r.edges_list.is_none());
+        assert_eq!(r.output.as_deref(), Some(path.as_str()));
+        assert!(r.bytes_written > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count() as u64, r.edges);
+        assert_eq!(metrics.counter("service.bytes_written").get(), r.bytes_written);
+        assert!(metrics.gauge("service.edges_per_sec").get() > 0.0);
+
+        // Same model/seed through the in-memory path: identical count.
+        let collect = JobSpec::parse_line(0, "d=6 mu=0.5 seed=11").unwrap();
+        let rc = run_job(&collect, &metrics);
+        assert_eq!(rc.edges, r.edges, "sink choice must not change the sample");
+    }
+
+    #[test]
+    fn streaming_job_binary_roundtrip() {
+        let dir = std::env::temp_dir().join("magbdp-service-stream");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job1.bin").to_string_lossy().into_owned();
+        let spec = JobSpec::parse_line(0, &format!("d=6 mu=0.5 seed=12 output={path} format=bin"))
+            .unwrap();
+        let metrics = Registry::new();
+        let r = run_job(&spec, &metrics);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let g = crate::graph::io::read_binary(&path).unwrap();
+        assert_eq!(g.num_edges() as u64, r.edges);
+        assert_eq!(g.n(), 64);
+    }
+
+    #[test]
+    fn streaming_job_unwritable_path_fails_cleanly() {
+        let spec = JobSpec::parse_line(
+            0,
+            "d=5 mu=0.5 output=/nonexistent-dir-magbdp/job.tsv",
+        )
+        .unwrap();
+        let metrics = Registry::new();
+        let r = run_job(&spec, &metrics);
+        let err = r.error.expect("create failure surfaces as a job error");
+        assert!(err.contains("create"), "{err}");
+        assert_eq!(metrics.counter("service.errors").get(), 1);
     }
 
     #[test]

@@ -11,8 +11,9 @@ use magbdp::coordinator::GenerationService;
 use magbdp::graph::io;
 use magbdp::graph::stats::DegreeStats;
 use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
+use magbdp::sampler::cost::PruneProbe;
 use magbdp::sampler::proposal::{Component, ProposalSet};
-use magbdp::sampler::{CostModel, HybridSampler, Sampler};
+use magbdp::sampler::{CostModel, EdgeSink, HybridSampler, Sampler};
 use magbdp::util::cli::{parse_f64_list, Args, CliError, Command};
 use magbdp::util::config::Config;
 use magbdp::util::logging;
@@ -141,6 +142,111 @@ fn params_from_config(path: &str) -> Result<MagmParams, String> {
 
 // ------------------------------------------------------------------ sample
 
+/// Dispatch one streaming sample into `sink`; returns
+/// `(sampler name, proposed, accepted)`.
+fn run_stream_algo<S: EdgeSink + Send>(
+    params: &MagmParams,
+    assignment: &magbdp::model::AttributeAssignment,
+    rng: &mut Xoshiro256pp,
+    seed: u64,
+    threads: usize,
+    algo: &str,
+    sink: &mut S,
+) -> Result<(&'static str, u64, u64), String> {
+    match algo {
+        "magm-bdp" => {
+            let s = magbdp::sampler::MagmBdpSampler::new(params, assignment);
+            let (p, a) = if threads > 1 {
+                s.sample_parallel_into(seed, threads, sink)
+            } else {
+                s.sample_into(rng, sink)
+            };
+            Ok((s.name(), p, a))
+        }
+        "magm-bdp-xla" => {
+            let s = magbdp::sampler::MagmBdpSampler::new(params, assignment);
+            let mut backend = magbdp::runtime::XlaAccept::new(params, s.index())
+                .map_err(|e| format!("{e:#}"))?;
+            let batch = backend.batch_capacity();
+            let (p, a) = s.sample_batched_into(rng, &mut backend, batch, sink);
+            Ok(("magm-bdp-xla", p, a))
+        }
+        "simple" => {
+            let s = magbdp::sampler::MagmSimpleSampler::new(params, assignment);
+            let (p, a) = Sampler::sample_into(&s, rng, sink);
+            Ok((s.name(), p, a))
+        }
+        "quilting" => {
+            let s = magbdp::sampler::QuiltingSampler::new(params, assignment, rng);
+            let (p, a) = Sampler::sample_into(&s, rng, sink);
+            Ok((s.name(), p, a))
+        }
+        "hybrid" => {
+            let s = HybridSampler::new(params, assignment, rng);
+            println!("hybrid choice: {}", s.choice().label());
+            let (p, a) = if threads > 1 {
+                s.sample_parallel_into(seed, threads, sink)
+            } else {
+                Sampler::sample_into(&s, rng, sink)
+            };
+            Ok(("hybrid", p, a))
+        }
+        other => Err(format!("unknown algo {other:?}")),
+    }
+}
+
+/// The sink-first `sample --out` path: edges stream to `path` (`.bin` ⇒
+/// the binary edge-list format, anything else TSV) without building a
+/// graph. Single-threaded runs stream with O(write buffer) memory; with
+/// `--threads N` the sharded path still buffers per-shard edge lists so
+/// the file reproduces the deterministic shard order (see the
+/// `ShardedSink` docs — count-only terminals are the bounded-memory
+/// case). Deferred sink I/O errors propagate to the CLI exit code.
+#[allow(clippy::too_many_arguments)]
+fn cmd_sample_stream(
+    params: &MagmParams,
+    assignment: &magbdp::model::AttributeAssignment,
+    rng: &mut Xoshiro256pp,
+    seed: u64,
+    threads: usize,
+    algo: &str,
+    path: &str,
+) -> Result<(), String> {
+    let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    let t = std::time::Instant::now();
+    let (name, proposed, accepted, bytes) = if path.ends_with(".bin") {
+        let mut sink = io::BinaryEdgeSink::new(file, params.n());
+        let (name, p, a) =
+            run_stream_algo(params, assignment, rng, seed, threads, algo, &mut sink)?;
+        sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
+        (name, p, a, sink.bytes)
+    } else {
+        let mut sink = magbdp::sampler::TsvSink::new(file);
+        let (name, p, a) =
+            run_stream_algo(params, assignment, rng, seed, threads, algo, &mut sink)?;
+        sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
+        (name, p, a, sink.bytes)
+    };
+    let wall = t.elapsed();
+    let metrics = magbdp::util::metrics::Registry::new();
+    metrics
+        .gauge("sample.edges_per_sec")
+        .set(accepted as f64 / wall.as_secs_f64().max(1e-9));
+    metrics.counter("sample.bytes_written").add(bytes);
+    metrics.counter("sample.edges").add(accepted);
+    println!(
+        "sampler={name} n={} d={} mu={} seed={seed} threads={threads}\n\
+         multi-edges={accepted} proposed={proposed} wall={:.3}s\n\
+         wrote {path}",
+        params.n(),
+        params.d(),
+        params.stack().mu(0),
+        wall.as_secs_f64()
+    );
+    print!("{}", metrics.render());
+    Ok(())
+}
+
 fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let cmd = Command::new("sample", "sample one graph from a MAGM")
         .opt("config", "model config file (overrides theta/d/mu/n)", None)
@@ -150,9 +256,13 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
         .opt("n", "nodes (default 2^d)", None)
         .opt("seed", "RNG seed", Some("42"))
         .opt("algo", "magm-bdp|simple|quilting|hybrid|magm-bdp-xla", Some("magm-bdp"))
-        .opt("threads", "parallel shards (magm-bdp only)", Some("1"))
-        .opt("out", "write edge list TSV here", None)
-        .flag("degrees", "print the out-degree histogram head");
+        .opt("threads", "parallel shards (magm-bdp/hybrid)", Some("1"))
+        .opt(
+            "out",
+            "stream the multi-edge list here (.bin = binary, else TSV)",
+            None,
+        )
+        .flag("degrees", "print the out-degree histogram head (collects in memory)");
     let Some(args) = parse_or_help(&cmd, tokens)? else {
         return Ok(());
     };
@@ -177,6 +287,13 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let mu = params.stack().mu(0);
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let assignment = params.sample_attributes(&mut rng);
+    let out = args.get("out").map(str::to_string);
+    let degrees = args.flag("degrees");
+
+    // Pure streaming mode: never materialise the graph.
+    if let (Some(path), false) = (&out, degrees) {
+        return cmd_sample_stream(&params, &assignment, &mut rng, seed, threads, &algo, path);
+    }
 
     let t = std::time::Instant::now();
     let (name, graph, proposed): (&str, magbdp::graph::MultiEdgeList, u64) = match algo.as_str() {
@@ -218,6 +335,27 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let wall = t.elapsed();
 
     let multi_edges = graph.num_edges();
+    // With --degrees + --out the graph is already in memory: replay it
+    // through the same file sinks so the output format matches the
+    // streaming path byte for byte.
+    if let Some(path) = &out {
+        let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+        if path.ends_with(".bin") {
+            let mut sink = io::BinaryEdgeSink::new(file, graph.n());
+            for &(s, t) in graph.edges() {
+                sink.push(s, t);
+            }
+            sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
+            println!("wrote {path} ({} bytes)", sink.bytes);
+        } else {
+            let mut sink = magbdp::sampler::TsvSink::new(file);
+            for &(s, t) in graph.edges() {
+                sink.push(s, t);
+            }
+            sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
+            println!("wrote {path} ({} bytes)", sink.bytes);
+        }
+    }
     let simple = graph.into_simple();
     println!(
         "sampler={name} n={n} d={d} mu={mu} seed={seed}\n\
@@ -225,17 +363,13 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
         simple.num_edges(),
         wall.as_secs_f64()
     );
-    if args.flag("degrees") {
+    if degrees {
         let g = magbdp::graph::Graph::from_edges(simple.n(), simple.edges().to_vec());
         let stats = DegreeStats::out_degrees(&g);
         println!("mean out-degree {:.3}, max {}", stats.mean, stats.max);
         for (k, &count) in stats.hist.iter().take(16).enumerate() {
             println!("  deg {k:>3}: {count}");
         }
-    }
-    if let Some(path) = args.get("out") {
-        io::write_tsv(path, &simple).map_err(|e| e.to_string())?;
-        println!("wrote {path}");
     }
     Ok(())
 }
@@ -309,9 +443,22 @@ fn cmd_expected(tokens: &[String]) -> Result<(), String> {
         est.naive,
         est.naive * spu,
     );
+    // Pruning-aware view: charge Algorithm 2 its measured effective
+    // descent depth on this realisation instead of the worst-case d.
+    let prop = ProposalSet::build(&params, &index);
+    let probe = PruneProbe::measure(&prop);
+    let pruned = cm.estimate_pruned(&params, &index, &prop);
     println!(
-        "hybrid choice: {}",
-        HybridSampler::choose(&params, &index).label()
+        "pruned descent: effective depth {:.2}/{d} levels/ball, survival {:.1}%\n  magm-bdp (pruned) {:>14.0}  (~{:.3}s)",
+        probe.mean_depth,
+        100.0 * probe.survival,
+        pruned.magm_bdp,
+        pruned.magm_bdp * spu,
+    );
+    println!(
+        "hybrid choice: {} (worst-case) / {} (pruning-aware)",
+        HybridSampler::choose(&params, &index).label(),
+        HybridSampler::choose_pruned(&params, &index, &prop).label()
     );
     Ok(())
 }
@@ -445,13 +592,17 @@ fn cmd_serve(tokens: &[String]) -> Result<(), String> {
         }
         total_edges += r.edges;
         println!(
-            "{:>4} {:<14} {:>10} {:>12} {:>12} {:>10.2}",
+            "{:>4} {:<14} {:>10} {:>12} {:>12} {:>10.2}{}",
             r.id,
             r.algo,
             r.nodes,
             r.edges,
             r.edges_simple,
-            r.wall.as_secs_f64() * 1e3
+            r.wall.as_secs_f64() * 1e3,
+            match &r.output {
+                Some(path) => format!("  -> {path} ({} bytes)", r.bytes_written),
+                None => String::new(),
+            }
         );
     }
     println!(

@@ -75,18 +75,52 @@ pub struct PrefixFilter {
 }
 
 impl PrefixFilter {
-    /// Deepest boundary that gets a bitmap (2^24 bits = 2 MiB).
+    /// Deepest boundary that gets a bitmap (2^24 bits = 2 MiB) — the
+    /// hard cap whatever the adaptive rule says.
     pub const MAX_PREFIX_BITS: usize = 24;
 
     /// Build for the chunk boundaries `ends` (ascending, as returned by
-    /// [`BdpSampler::chunk_ends`]) from a set of colors.
+    /// [`BdpSampler::chunk_ends`]) from a set of colors, with bitmaps at
+    /// every boundary up to [`MAX_PREFIX_BITS`](Self::MAX_PREFIX_BITS).
     pub fn build<I: IntoIterator<Item = u64>>(ends: &[usize], colors: I) -> Self {
+        Self::build_capped(ends, colors, Self::MAX_PREFIX_BITS)
+    }
+
+    /// Per-realisation bitmap depth from the occupied-color density:
+    /// at boundary `e` at most `occupied` of the `2^e` prefixes are
+    /// alive, so once `e` exceeds `log₂(occupied) + 8` fewer than 1 in
+    /// 256 uniform prefixes survive — deeper bitmaps buy ≲ 0.4 % extra
+    /// pruning while their memory doubles per level. Clamped to
+    /// `[8, MAX_PREFIX_BITS]`.
+    pub fn adaptive_prefix_bits(occupied: usize) -> usize {
+        let lg = (usize::BITS - occupied.max(1).leading_zeros()) as usize;
+        (lg + 8).clamp(8, Self::MAX_PREFIX_BITS)
+    }
+
+    /// Build with the bitmap depth chosen adaptively from the occupied
+    /// set's size ([`adaptive_prefix_bits`](Self::adaptive_prefix_bits)).
+    /// Shallower bitmaps only *skip* pruning opportunities — the
+    /// surviving-ball distribution is unchanged (pruned mass is always
+    /// exactly the zero-acceptance mass).
+    pub fn build_adaptive(ends: &[usize], colors: &[u64]) -> Self {
+        Self::build_capped(
+            ends,
+            colors.iter().copied(),
+            Self::adaptive_prefix_bits(colors.len()),
+        )
+    }
+
+    /// Build with an explicit deepest-bitmap boundary `max_bits`.
+    pub fn build_capped<I: IntoIterator<Item = u64>>(
+        ends: &[usize],
+        colors: I,
+        max_bits: usize,
+    ) -> Self {
         debug_assert!(ends.windows(2).all(|w| w[0] < w[1]), "ends must ascend");
+        let max_bits = max_bits.min(Self::MAX_PREFIX_BITS);
         let mut masks: Vec<Option<Vec<u64>>> = ends
             .iter()
-            .map(|&e| {
-                (e <= Self::MAX_PREFIX_BITS).then(|| vec![0u64; (1usize << e).div_ceil(64)])
-            })
+            .map(|&e| (e <= max_bits).then(|| vec![0u64; (1usize << e).div_ceil(64)]))
             .collect();
         for c in colors {
             for (&e, mask) in ends.iter().zip(masks.iter_mut()) {
@@ -282,6 +316,38 @@ impl BdpSampler {
             }
         }
         Some((row, col))
+    }
+
+    /// As [`drop_ball_pruned`](Self::drop_ball_pruned), additionally
+    /// reporting the number of model *levels* the descent actually paid
+    /// before finishing (or aborting at the first dead prefix) — the
+    /// measurement behind the pruning-aware cost model
+    /// ([`crate::sampler::cost::PruneProbe`]).
+    #[inline]
+    pub fn drop_ball_pruned_depth<R: Rng + ?Sized>(
+        &self,
+        row_filter: &PrefixFilter,
+        col_filter: &PrefixFilter,
+        rng: &mut R,
+    ) -> (Option<(u64, u64)>, usize) {
+        debug_assert_eq!(row_filter.ends().len(), self.levels.len());
+        debug_assert_eq!(col_filter.ends().len(), self.levels.len());
+        let mut row = 0u64;
+        let mut col = 0u64;
+        let mut paid = 0usize;
+        for (ci, chunk) in self.levels.iter().enumerate() {
+            let cat = chunk.table.sample(rng) as u64;
+            paid += chunk.len;
+            for j in 0..chunk.len {
+                let pair = (cat >> (2 * j)) & 3;
+                row |= (pair >> 1) << (chunk.base + j);
+                col |= (pair & 1) << (chunk.base + j);
+            }
+            if !row_filter.alive(ci, row) || !col_filter.alive(ci, col) {
+                return (None, paid);
+            }
+        }
+        (Some((row, col)), paid)
     }
 
     /// Number of balls for one realisation: `X ~ Poisson(total_rate)`.
@@ -555,6 +621,67 @@ mod tests {
                 (got - want).abs() < 6.0 * se + 1e-9,
                 "({r},{c}): got {got} want {want}"
             );
+        }
+    }
+
+    #[test]
+    fn adaptive_prefix_bits_tracks_density() {
+        // Small occupied sets get shallow bitmaps; the cap always holds.
+        assert_eq!(PrefixFilter::adaptive_prefix_bits(0), 9); // lg(1)=1
+        assert_eq!(PrefixFilter::adaptive_prefix_bits(1), 9);
+        assert_eq!(PrefixFilter::adaptive_prefix_bits(255), 16);
+        assert_eq!(PrefixFilter::adaptive_prefix_bits(256), 17);
+        assert_eq!(
+            PrefixFilter::adaptive_prefix_bits(1 << 20),
+            PrefixFilter::MAX_PREFIX_BITS
+        );
+    }
+
+    #[test]
+    fn capped_filter_never_prunes_beyond_cap() {
+        // Boundaries deeper than the cap carry no bitmap: alive = true.
+        let f = PrefixFilter::build_capped(&[4, 8], [5u64], 4);
+        assert!(f.alive(0, 5 & 0xF));
+        assert!(!f.alive(0, 6 & 0xF));
+        assert!(f.alive(1, 123)); // boundary 8 > cap 4 ⇒ unknown ⇒ alive
+    }
+
+    #[test]
+    fn adaptive_filter_matches_full_filter_within_depth() {
+        let ends = [4usize, 8];
+        let colors: Vec<u64> = vec![3, 77, 200, 255];
+        let full = PrefixFilter::build(&ends, colors.iter().copied());
+        let adaptive = PrefixFilter::build_adaptive(&ends, &colors);
+        // 4 occupied colors ⇒ adaptive bits ≥ 8 ⇒ both boundaries
+        // bitmapped identically.
+        for ci in 0..2 {
+            for p in 0..256u64 {
+                assert_eq!(full.alive(ci, p), adaptive.alive(ci, p), "ci={ci} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_depth_reports_levels_paid() {
+        let d = 8;
+        let b = fig1_bdp(d);
+        let ends = b.chunk_ends();
+        let f = PrefixFilter::build(&ends, [0u64, 1, 2, 3]);
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let mut plain = Xoshiro256pp::seed_from_u64(21);
+        for _ in 0..5_000 {
+            let (hit, paid) = b.drop_ball_pruned_depth(&f, &f, &mut rng);
+            assert!((1..=d).contains(&paid));
+            match hit {
+                Some(pair) => {
+                    assert_eq!(paid, d, "a survivor pays the full descent");
+                    // Identical RNG schedule to drop_ball_pruned.
+                    assert_eq!(b.drop_ball_pruned(&f, &f, &mut plain), Some(pair));
+                }
+                None => {
+                    assert_eq!(b.drop_ball_pruned(&f, &f, &mut plain), None);
+                }
+            }
         }
     }
 

@@ -4,10 +4,12 @@
 //! expected running time. Thus one can always select the best algorithm
 //! for a given set of parameter values."
 
-use super::cost::CostModel;
+use super::cost::{CostModel, WorkEstimate};
 use super::magm_bdp::MagmBdpSampler;
 use super::naive::{EntryMode, NaiveMagmSampler};
+use super::proposal::ProposalSet;
 use super::quilting::QuiltingSampler;
+use super::sink::EdgeSink;
 use super::Sampler;
 use crate::graph::MultiEdgeList;
 use crate::model::colors::ColorIndex;
@@ -43,19 +45,50 @@ pub struct HybridSampler<'a> {
 }
 
 impl<'a> HybridSampler<'a> {
-    /// Decide from expected work (`O(nd)`), then compile only the winner.
+    /// Decide from expected work (`O(nd)`), then compile the winner.
+    ///
+    /// The decision uses the **pruning-aware** cost model, which needs
+    /// Algorithm 2's proposal compiled (its occupancy filters are the
+    /// probe's input). To avoid paying that compile for models where it
+    /// cannot matter, tiny models short-circuit first: pruning pays at
+    /// least the first fused chunk per ball, so when the naive `n²` cost
+    /// undercuts even that floor (and quilting), naive wins under any
+    /// probe outcome and nothing else is built. Otherwise the proposal
+    /// is compiled, probed, and — when Algorithm 2 wins — reused by the
+    /// sampler, so the probe costs no extra build in the case that
+    /// matters.
     pub fn new<R: Rng + ?Sized>(
         params: &'a MagmParams,
         assignment: &'a AttributeAssignment,
         rng: &mut R,
     ) -> Self {
         let index = ColorIndex::build(params, assignment);
-        let choice = Self::choose(params, &index);
-        let (mut magm_bdp, mut quilting, mut naive) = (None, None, None);
-        match choice {
-            HybridChoice::MagmBdp => {
-                magm_bdp = Some(MagmBdpSampler::from_index(params, index))
+        let est = CostModel::new().estimate(params, &index);
+        // Floor on the pruned Algorithm 2 cost: every proposed ball pays
+        // at least the first fused chunk (min(FUSE, d) levels) before
+        // the prune can abort, so mean_depth ≥ min(4, d) whatever the
+        // probe measures.
+        let d = params.d() as f64;
+        let bdp_floor = est.magm_bdp / d * d.min(4.0);
+        let choice = if est.naive < bdp_floor.min(est.quilting) {
+            HybridChoice::Naive
+        } else {
+            let proposal = ProposalSet::build(params, &index);
+            let choice = Self::choose_pruned(params, &index, &proposal);
+            if choice == HybridChoice::MagmBdp {
+                return Self {
+                    params,
+                    choice,
+                    magm_bdp: Some(MagmBdpSampler::from_parts(params, index, proposal)),
+                    quilting: None,
+                    naive: None,
+                };
             }
+            choice
+        };
+        let (mut quilting, mut naive) = (None, None);
+        match choice {
+            HybridChoice::MagmBdp => unreachable!("handled above"),
             HybridChoice::Quilting => {
                 quilting = Some(QuiltingSampler::new(params, assignment, rng))
             }
@@ -70,16 +103,14 @@ impl<'a> HybridSampler<'a> {
         Self {
             params,
             choice,
-            magm_bdp,
+            magm_bdp: None,
             quilting,
             naive,
         }
     }
 
-    /// The §4.6 decision rule, exposed for tests and the CLI's `expected`
-    /// subcommand.
-    pub fn choose(params: &MagmParams, index: &ColorIndex) -> HybridChoice {
-        let est = CostModel::new().estimate(params, index);
+    /// Shared §4.6 decision rule over a work estimate.
+    fn pick(est: &WorkEstimate) -> HybridChoice {
         let best_bdp = est.magm_bdp.min(est.quilting);
         if est.naive < best_bdp {
             HybridChoice::Naive
@@ -88,6 +119,25 @@ impl<'a> HybridSampler<'a> {
         } else {
             HybridChoice::Quilting
         }
+    }
+
+    /// The analytic §4.6 decision rule (worst-case `d` per ball),
+    /// exposed for tests and the CLI's `expected` subcommand.
+    pub fn choose(params: &MagmParams, index: &ColorIndex) -> HybridChoice {
+        Self::pick(&CostModel::new().estimate(params, index))
+    }
+
+    /// Pruning-aware decision rule: like [`choose`](Self::choose) but
+    /// Algorithm 2's cost reflects the measured pruned descent depth of
+    /// this realisation's compiled proposal. Deterministic (fixed probe
+    /// seed). Pruning only lowers Algorithm 2's charge, so relative to
+    /// [`choose`](Self::choose) the frontier can only shift toward it.
+    pub fn choose_pruned(
+        params: &MagmParams,
+        index: &ColorIndex,
+        proposal: &ProposalSet,
+    ) -> HybridChoice {
+        Self::pick(&CostModel::new().estimate_pruned(params, index, proposal))
     }
 
     pub fn choice(&self) -> HybridChoice {
@@ -114,6 +164,30 @@ impl<'a> HybridSampler<'a> {
             }
         }
     }
+
+    /// Sink-first form of [`sample_parallel`](Self::sample_parallel):
+    /// Algorithm 2 streams through its sharded sink layer; the baselines
+    /// stream sequentially from a seeded RNG. Returns
+    /// `(proposed, accepted)`.
+    pub fn sample_parallel_into(
+        &self,
+        seed: u64,
+        threads: usize,
+        sink: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        match self.choice {
+            HybridChoice::MagmBdp => self
+                .magm_bdp
+                .as_ref()
+                .unwrap()
+                .sample_parallel_into(seed, threads, sink),
+            _ => {
+                use crate::util::rng::{SeedableRng, Xoshiro256pp};
+                let mut rng = Xoshiro256pp::seed_from_u64(seed);
+                Sampler::sample_into(self, &mut rng, sink)
+            }
+        }
+    }
 }
 
 impl Sampler for HybridSampler<'_> {
@@ -121,11 +195,17 @@ impl Sampler for HybridSampler<'_> {
         "hybrid"
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+    fn num_nodes(&self) -> u64 {
+        self.params.n()
+    }
+
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
         match self.choice {
-            HybridChoice::MagmBdp => self.magm_bdp.as_ref().unwrap().sample(rng),
-            HybridChoice::Quilting => self.quilting.as_ref().unwrap().sample(rng),
-            HybridChoice::Naive => self.naive.as_ref().unwrap().sample(rng),
+            HybridChoice::MagmBdp => self.magm_bdp.as_ref().unwrap().sample_into(rng, sink),
+            HybridChoice::Quilting => {
+                Sampler::sample_into(self.quilting.as_ref().unwrap(), rng, sink)
+            }
+            HybridChoice::Naive => Sampler::sample_into(self.naive.as_ref().unwrap(), rng, sink),
         }
     }
 }
@@ -180,6 +260,45 @@ mod tests {
             let g1 = h.sample_parallel(42, 4);
             let g2 = h.sample_parallel(42, 4);
             assert_eq!(g1.edges(), g2.edges(), "choice {:?}", h.choice());
+        }
+    }
+
+    #[test]
+    fn pruned_choice_only_shifts_toward_magm_bdp() {
+        // Pruning lowers Algorithm 2's charge and nothing else, so on
+        // any realisation the pruned rule may flip TO MagmBdp but never
+        // AWAY from it.
+        for (d, mu, n, seed) in [
+            (4usize, 0.5, 16u64, 1u64),
+            (8, 0.5, 1 << 8, 2),
+            (12, 0.3, 1 << 12, 3),
+            (10, 0.7, 1 << 10, 4),
+        ] {
+            let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+            let a = assignment(&params, seed);
+            let idx = ColorIndex::build(&params, &a);
+            let prop = ProposalSet::build(&params, &idx);
+            let plain = HybridSampler::choose(&params, &idx);
+            let pruned = HybridSampler::choose_pruned(&params, &idx, &prop);
+            if plain == HybridChoice::MagmBdp {
+                assert_eq!(pruned, HybridChoice::MagmBdp, "d={d} mu={mu}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_into_matches_sample_parallel_for_every_choice() {
+        use crate::sampler::sink::CollectSink;
+        for (d, n) in [(4usize, 16u64), (12, 1 << 12)] {
+            let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, 0.3, n);
+            let a = assignment(&params, 7);
+            let mut rng = Xoshiro256pp::seed_from_u64(8);
+            let h = HybridSampler::new(&params, &a, &mut rng);
+            let g = h.sample_parallel(42, 4);
+            let mut sink = CollectSink::new(params.n());
+            let (_, accepted) = h.sample_parallel_into(42, 4, &mut sink);
+            assert_eq!(g.edges(), sink.graph.edges(), "choice {:?}", h.choice());
+            assert_eq!(accepted as usize, sink.graph.num_edges());
         }
     }
 

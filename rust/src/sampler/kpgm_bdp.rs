@@ -2,8 +2,8 @@
 //! (Leskovec et al., 2010, as formalised by Theorem 2).
 
 use super::bdp::BdpSampler;
+use super::sink::EdgeSink;
 use super::Sampler;
-use crate::graph::MultiEdgeList;
 use crate::model::kpgm::KpgmParams;
 use crate::util::rng::Rng;
 
@@ -53,29 +53,42 @@ impl Sampler for KpgmBdpSampler {
         }
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+    fn num_nodes(&self) -> u64 {
+        self.n
+    }
+
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
         if !self.compensate {
-            return self.bdp.sample_multigraph(rng);
+            // Plain Algorithm 1: every ball is an edge (same RNG
+            // schedule as `BdpSampler::sample_multigraph`).
+            let balls = self.bdp.draw_ball_count(rng);
+            for _ in 0..balls {
+                let (i, j) = self.bdp.drop_ball(rng);
+                sink.push(i as u32, j as u32);
+            }
+            sink.finish();
+            return (balls, balls);
         }
         // Compensation: drop until distinct-edge count reaches ⌈e_K⌉
         // (or a ball budget of 10·e_K is exhausted — guards the dense
-        // regime where distinct pairs saturate). Up-front reservations
-        // are capped: a pathological rate must not become one absurd
-        // allocation (growth past the cap amortises via doubling).
+        // regime where distinct pairs saturate). The dedup set is
+        // inherent to the heuristic; only it — not the edge list — is
+        // held in memory. Reservation is capped: a pathological rate
+        // must not become one absurd allocation.
         let target = self.bdp.total_rate().ceil() as usize;
         let reserve = target.min(super::bdp::RESERVE_CHUNK as usize);
         let mut seen = std::collections::HashSet::with_capacity(reserve * 2);
-        let mut g = MultiEdgeList::with_capacity(self.n, reserve);
         let budget = (self.bdp.total_rate() * 10.0).ceil() as u64;
         let mut dropped = 0u64;
         while seen.len() < target && dropped < budget {
             let (i, j) = self.bdp.drop_ball(rng);
             dropped += 1;
             if seen.insert((i as u32, j as u32)) {
-                g.push(i as u32, j as u32);
+                sink.push(i as u32, j as u32);
             }
         }
-        g
+        sink.finish();
+        (dropped, seen.len() as u64)
     }
 }
 

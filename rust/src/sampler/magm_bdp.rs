@@ -26,7 +26,7 @@
 
 use super::bdp::BallBatch;
 use super::proposal::{Component, ProposalSet};
-use super::sink::{CollectSink, EdgeSink};
+use super::sink::{CollectSink, EdgeSink, ShardedSink};
 use super::Sampler;
 use crate::graph::MultiEdgeList;
 use crate::model::colors::ColorIndex;
@@ -102,6 +102,12 @@ impl<'a> MagmBdpSampler<'a> {
     /// Reuse a prebuilt color index.
     pub fn from_index(params: &'a MagmParams, index: ColorIndex) -> Self {
         let proposal = ProposalSet::build(params, &index);
+        Self::from_parts(params, index, proposal)
+    }
+
+    /// Reuse both a prebuilt color index and its compiled proposal (the
+    /// hybrid sampler builds the proposal anyway for its pruning probe).
+    pub fn from_parts(params: &'a MagmParams, index: ColorIndex, proposal: ProposalSet) -> Self {
         Self {
             params,
             index,
@@ -191,8 +197,22 @@ impl<'a> MagmBdpSampler<'a> {
         backend: &mut dyn AcceptBackend,
         batch: usize,
     ) -> (MultiEdgeList, u64, u64) {
-        assert!(batch > 0);
         let mut sink = CollectSink::new(self.params.n());
+        let (proposed, accepted) = self.sample_batched_into(rng, backend, batch, &mut sink);
+        (sink.graph, proposed, accepted)
+    }
+
+    /// Sink-first form of [`sample_batched`](Self::sample_batched):
+    /// accepted edges stream into `sink`; only the in-flight SoA ball
+    /// buffer is held in memory. Returns `(proposed, accepted)`.
+    pub fn sample_batched_into<R: Rng + ?Sized>(
+        &self,
+        rng: &mut R,
+        backend: &mut dyn AcceptBackend,
+        batch: usize,
+        sink: &mut dyn EdgeSink,
+    ) -> (u64, u64) {
+        assert!(batch > 0);
         let mut proposed = 0u64;
         let mut accepted = 0u64;
         let mut balls = BallBatch::with_capacity(batch);
@@ -212,13 +232,13 @@ impl<'a> MagmBdpSampler<'a> {
                 if balls.len() >= batch || (remaining == 0 && !balls.is_empty()) {
                     backend.accept_probs(&self.proposal, comp, &balls, &mut probs);
                     debug_assert_eq!(probs.len(), balls.len());
-                    accepted += self.thin_and_materialise(&balls, &probs, rng, &mut sink);
+                    accepted += self.thin_and_materialise(&balls, &probs, rng, sink);
                     balls.clear();
                 }
             }
         }
         sink.finish();
-        (sink.graph, proposed, accepted)
+        (proposed, accepted)
     }
 
     /// Streaming sampler into an [`crate::sampler::sink::EdgeSink`] —
@@ -230,6 +250,12 @@ impl<'a> MagmBdpSampler<'a> {
         rng: &mut R,
         sink: &mut dyn EdgeSink,
     ) -> (u64, u64) {
+        self.stream_into(rng, sink)
+    }
+
+    /// The streaming body shared by the inherent generic entry point and
+    /// the `Sampler` trait's object-safe one.
+    fn stream_into<R: Rng + ?Sized>(&self, rng: &mut R, sink: &mut dyn EdgeSink) -> (u64, u64) {
         let mut proposed = 0u64;
         let mut accepted = 0u64;
         for comp in Component::ALL {
@@ -249,16 +275,33 @@ impl<'a> MagmBdpSampler<'a> {
         (proposed, accepted)
     }
 
-    /// Multi-threaded sampler. The per-component Poisson total is drawn
-    /// once from `seed`'s root stream, then split across `threads` shards
-    /// by sequential binomial thinning (shard `t` takes
+    /// Multi-threaded sampler collecting into a graph — a
+    /// [`CollectSink`] wrapper over
+    /// [`sample_parallel_into`](Self::sample_parallel_into).
+    pub fn sample_parallel(&self, seed: u64, threads: usize) -> MultiEdgeList {
+        let mut sink = CollectSink::new(self.params.n());
+        self.sample_parallel_into(seed, threads, &mut sink);
+        sink.graph
+    }
+
+    /// Multi-threaded streaming sampler. The per-component Poisson total
+    /// is drawn once from `seed`'s root stream, then split across
+    /// `threads` shards by sequential binomial thinning (shard `t` takes
     /// `Binomial(remaining, 1/(threads−t))`) — an exact multinomial split
     /// of the total, so the joint ball distribution is identical to the
     /// sequential sampler's. Each shard drops its quota with an
-    /// independent RNG stream into a private edge buffer; buffers merge
-    /// once, in shard order. Deterministic for a fixed `(seed, threads)`
-    /// pair.
-    pub fn sample_parallel(&self, seed: u64, threads: usize) -> MultiEdgeList {
+    /// independent RNG stream into a private [`ShardedSink`] buffer:
+    /// order-insensitive terminals (counting) absorb chunks as they fill
+    /// (O(shard buffer) peak memory); order-sensitive ones are drained
+    /// once, in shard order, reproducing the sequential-merge edge order.
+    /// Deterministic for a fixed `(seed, threads)` pair. Returns
+    /// `(proposed, accepted)`.
+    pub fn sample_parallel_into(
+        &self,
+        seed: u64,
+        threads: usize,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
         let threads = threads.max(1);
         let mut root = Xoshiro256pp::seed_from_u64(seed);
         // Component ball totals from the root stream.
@@ -282,10 +325,12 @@ impl<'a> MagmBdpSampler<'a> {
             }
         }
         let shard_rngs: Vec<Xoshiro256pp> = split_streams(seed ^ 0x9E3779B97F4A7C15, threads);
+        let sharded = ShardedSink::new(terminal);
         let shards = crate::util::threadpool::scoped_chunks(threads, threads, |t, _| {
             let mut rng = shard_rngs[t].clone();
             let rng = &mut rng;
-            let mut sink = CollectSink::new(self.params.n());
+            let mut handle = sharded.shard();
+            let mut accepted = 0u64;
             for (ci, &comp) in Component::ALL.iter().enumerate() {
                 let bdp = self.proposal.bdp(comp);
                 let (rowf, colf) = self.proposal.filters(comp);
@@ -294,16 +339,19 @@ impl<'a> MagmBdpSampler<'a> {
                         continue;
                     };
                     let p = self.proposal.accept_prob(comp, c, cp);
-                    self.accept_one(c, cp, p, rng, &mut sink);
+                    accepted += self.accept_one(c, cp, p, rng, &mut handle);
                 }
             }
-            sink.graph
+            (accepted, handle.into_buffer())
         });
-        let mut out = MultiEdgeList::new(self.params.n());
-        for shard in shards {
-            out.merge(shard);
+        let mut accepted = 0u64;
+        let mut residuals = Vec::with_capacity(shards.len());
+        for (a, buf) in shards {
+            accepted += a;
+            residuals.push(buf);
         }
-        out
+        sharded.finish(residuals);
+        (totals.iter().sum(), accepted)
     }
 }
 
@@ -312,18 +360,12 @@ impl Sampler for MagmBdpSampler<'_> {
         "magm-bdp"
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
-        self.sample_counted(rng).0
+    fn num_nodes(&self) -> u64 {
+        self.params.n()
     }
 
-    fn sample_with_report(&self, rng: &mut dyn Rng) -> super::SampleReport {
-        let t = std::time::Instant::now();
-        let (graph, proposed, accepted) = self.sample_counted(rng);
-        let mut r = super::SampleReport::new(self.name(), graph);
-        r.proposed = proposed;
-        r.accepted = accepted;
-        r.wall = t.elapsed();
-        r
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
+        self.stream_into(rng, sink)
     }
 }
 

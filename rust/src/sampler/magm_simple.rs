@@ -9,6 +9,7 @@
 //! isolates the value of the frequent/infrequent split (§4.3–4.4).
 
 use super::bdp::BdpSampler;
+use super::sink::{CollectSink, EdgeSink};
 use super::Sampler;
 use crate::graph::MultiEdgeList;
 use crate::model::colors::ColorIndex;
@@ -56,9 +57,16 @@ impl<'a> MagmSimpleSampler<'a> {
         self.bdp.total_rate()
     }
 
-    /// Streaming sample with work accounting.
+    /// Streaming sample with work accounting (a [`CollectSink`] wrapper
+    /// over the sink-first path).
     pub fn sample_counted<R: Rng + ?Sized>(&self, rng: &mut R) -> (MultiEdgeList, u64, u64) {
-        let mut g = MultiEdgeList::new(self.params.n());
+        let mut sink = CollectSink::new(self.params.n());
+        let (proposed, accepted) = self.stream_into(rng, &mut sink);
+        (sink.graph, proposed, accepted)
+    }
+
+    /// Stream one sample into `sink`; returns `(proposed, accepted)`.
+    fn stream_into<R: Rng + ?Sized>(&self, rng: &mut R, sink: &mut dyn EdgeSink) -> (u64, u64) {
         let m2 = (self.m * self.m) as f64;
         let balls = self.bdp.draw_ball_count(rng);
         let mut accepted = 0u64;
@@ -68,11 +76,12 @@ impl<'a> MagmSimpleSampler<'a> {
             if p > 0.0 && rng.next_f64() < p {
                 let i = self.index.sample_node(c, rng).expect("occupied");
                 let j = self.index.sample_node(cp, rng).expect("occupied");
-                g.push(i, j);
+                sink.push(i, j);
                 accepted += 1;
             }
         }
-        (g, balls, accepted)
+        sink.finish();
+        (balls, accepted)
     }
 }
 
@@ -81,18 +90,12 @@ impl Sampler for MagmSimpleSampler<'_> {
         "magm-simple"
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
-        self.sample_counted(rng).0
+    fn num_nodes(&self) -> u64 {
+        self.params.n()
     }
 
-    fn sample_with_report(&self, rng: &mut dyn Rng) -> super::SampleReport {
-        let t = std::time::Instant::now();
-        let (graph, proposed, accepted) = self.sample_counted(rng);
-        let mut r = super::SampleReport::new(self.name(), graph);
-        r.proposed = proposed;
-        r.accepted = accepted;
-        r.wall = t.elapsed();
-        r
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
+        self.stream_into(rng, sink)
     }
 }
 

@@ -33,7 +33,9 @@ pub use magm_simple::MagmSimpleSampler;
 pub use naive::{NaiveKpgmSampler, NaiveMagmSampler};
 pub use proposal::{Component, ProposalSet};
 pub use quilting::QuiltingSampler;
-pub use sink::{CollectSink, CountSink, EdgeSink, TsvSink};
+pub use sink::{
+    CollectSink, CountSink, EdgeSink, ShardHandle, ShardedSink, TeeSink, TsvSink, Unordered,
+};
 pub use undirected::UndirectedMagmSampler;
 
 use crate::graph::MultiEdgeList;
@@ -41,20 +43,45 @@ use crate::util::rng::Rng;
 
 /// Common interface over all graph samplers.
 ///
+/// The pipeline is sink-first: [`sample_into`](Self::sample_into) is the
+/// primary entry point — accepted edges stream into an [`EdgeSink`] as
+/// they are produced, so a counting or file-backed sink never pays
+/// O(edges) memory. [`sample`](Self::sample) is merely the special case
+/// of collecting into a [`CollectSink`].
+///
 /// Implementations are deterministic given the RNG state; parallel
 /// variants live on the concrete types (they need to split streams).
 pub trait Sampler {
     /// Short identifier used in reports and benches.
     fn name(&self) -> &'static str;
 
-    /// Draw one multi-graph sample.
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList;
+    /// Number of nodes in the sampled graph — the sink contract: every
+    /// pushed edge references ids below this.
+    fn num_nodes(&self) -> u64;
+
+    /// Stream one sample into `sink`, returning `(proposed, accepted)`.
+    /// `proposed` counts the balls the underlying BDPs demanded
+    /// (samplers without a proposal notion report `accepted` for both);
+    /// `accepted` equals the number of edges pushed. Implementations
+    /// call `sink.finish()` exactly once, after the last edge.
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64);
+
+    /// Draw one multi-graph sample (a [`CollectSink`] wrapper over
+    /// [`sample_into`](Self::sample_into)).
+    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+        let mut sink = CollectSink::new(self.num_nodes());
+        self.sample_into(rng, &mut sink);
+        sink.graph
+    }
 
     /// Draw a sample together with work accounting.
     fn sample_with_report(&self, rng: &mut dyn Rng) -> SampleReport {
         let t = std::time::Instant::now();
-        let graph = self.sample(rng);
-        let mut report = SampleReport::new(self.name(), graph);
+        let mut sink = CollectSink::new(self.num_nodes());
+        let (proposed, accepted) = self.sample_into(rng, &mut sink);
+        let mut report = SampleReport::new(self.name(), sink.graph);
+        report.proposed = proposed;
+        report.accepted = accepted;
         report.wall = t.elapsed();
         report
     }
@@ -65,7 +92,8 @@ pub trait Sampler {
 pub struct SampleReport {
     pub sampler: &'static str,
     pub graph: MultiEdgeList,
-    /// Balls proposed by the underlying BDPs (0 for naive samplers).
+    /// Balls proposed by the underlying BDPs (samplers without a
+    /// proposal notion report the accepted count here).
     pub proposed: u64,
     /// Proposals surviving the accept-reject step (= edges for BDP paths).
     pub accepted: u64,

@@ -6,8 +6,8 @@
 //!   BDP samples (Theorem 2), used by the distributional tests to compare
 //!   BDP output against per-pair ground truth.
 
+use super::sink::EdgeSink;
 use super::Sampler;
-use crate::graph::MultiEdgeList;
 use crate::model::kpgm::KpgmParams;
 use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::util::rng::dist::poisson;
@@ -50,28 +50,36 @@ impl Sampler for NaiveKpgmSampler<'_> {
         }
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+    fn num_nodes(&self) -> u64 {
+        self.params.n()
+    }
+
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
         let n = self.params.n();
         assert!(n <= 1 << 26, "naive sampler is Θ(n²); refusing n > 2^26");
-        let mut g = MultiEdgeList::new(n);
+        let mut accepted = 0u64;
         for i in 0..n {
             for j in 0..n {
                 let p = self.params.gamma(i, j);
                 match self.mode {
                     EntryMode::Bernoulli => {
                         if rng.bernoulli(p) {
-                            g.push(i as u32, j as u32);
+                            sink.push(i as u32, j as u32);
+                            accepted += 1;
                         }
                     }
                     EntryMode::Poisson => {
                         for _ in 0..poisson(rng, p) {
-                            g.push(i as u32, j as u32);
+                            sink.push(i as u32, j as u32);
+                            accepted += 1;
                         }
                     }
                 }
             }
         }
-        g
+        sink.finish();
+        // Per-pair sampling has no proposal notion; report the edges.
+        (accepted, accepted)
     }
 }
 
@@ -113,10 +121,14 @@ impl Sampler for NaiveMagmSampler<'_> {
         }
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
+    fn num_nodes(&self) -> u64 {
+        self.params.n()
+    }
+
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
         let n = self.params.n();
         assert!(n <= 1 << 26, "naive sampler is Θ(n²); refusing n > 2^26");
-        let mut g = MultiEdgeList::new(n);
+        let mut accepted = 0u64;
         // Cache Γ entries per color pair: with few occupied colors the
         // Kronecker product is recomputed vastly fewer than n² times.
         let mut cache: std::collections::HashMap<(u64, u64), f64> = std::collections::HashMap::new();
@@ -131,18 +143,21 @@ impl Sampler for NaiveMagmSampler<'_> {
                 match self.mode {
                     EntryMode::Bernoulli => {
                         if rng.bernoulli(p) {
-                            g.push(i as u32, j as u32);
+                            sink.push(i as u32, j as u32);
+                            accepted += 1;
                         }
                     }
                     EntryMode::Poisson => {
                         for _ in 0..poisson(rng, p) {
-                            g.push(i as u32, j as u32);
+                            sink.push(i as u32, j as u32);
+                            accepted += 1;
                         }
                     }
                 }
             }
         }
-        g
+        sink.finish();
+        (accepted, accepted)
     }
 }
 

@@ -193,15 +193,19 @@ impl ProposalSet {
 
         // Per-class occupancy filters at the BDP chunk boundaries (all
         // four component BDPs share one depth, hence one boundary list).
+        // Bitmap depth adapts to each class's occupied-color density:
+        // deep bitmaps only pay off when survival is low, so the depth
+        // tracks log₂(occupied) instead of the fixed worst-case cap.
         let ends = bdps[0].chunk_ends();
-        let class_colors = |want: ColorClass| {
+        let class_colors = |want: ColorClass| -> Vec<u64> {
             index
                 .iter()
-                .filter_map(move |(c, _)| (index.class_of(params, c) == want).then_some(c))
+                .filter_map(|(c, _)| (index.class_of(params, c) == want).then_some(c))
+                .collect()
         };
         let filters = [
-            PrefixFilter::build(&ends, class_colors(ColorClass::Frequent)),
-            PrefixFilter::build(&ends, class_colors(ColorClass::Infrequent)),
+            PrefixFilter::build_adaptive(&ends, &class_colors(ColorClass::Frequent)),
+            PrefixFilter::build_adaptive(&ends, &class_colors(ColorClass::Infrequent)),
         ];
 
         Self {

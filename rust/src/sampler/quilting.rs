@@ -26,6 +26,7 @@
 use std::collections::HashMap;
 
 use super::bdp::BdpSampler;
+use super::sink::{CollectSink, EdgeSink};
 use super::Sampler;
 use crate::graph::MultiEdgeList;
 use crate::model::colors::ColorIndex;
@@ -102,9 +103,15 @@ impl<'a> QuiltingSampler<'a> {
     /// layer pair to each — an identical Poisson field over
     /// (layer-pair × color-pair).
     pub fn sample_counted<R: Rng + ?Sized>(&self, rng: &mut R) -> (MultiEdgeList, u64, u64) {
+        let mut sink = CollectSink::new(self.params.n());
+        let (proposed, accepted) = self.stream_into(rng, &mut sink);
+        (sink.graph, proposed, accepted)
+    }
+
+    /// Stream one sample into `sink`; returns `(proposed, accepted)`.
+    fn stream_into<R: Rng + ?Sized>(&self, rng: &mut R, sink: &mut dyn EdgeSink) -> (u64, u64) {
         let total_rate = self.expected_proposals();
         let balls = crate::util::rng::dist::poisson(rng, total_rate);
-        let mut g = MultiEdgeList::new(self.params.n());
         let mut accepted = 0u64;
         for _ in 0..balls {
             let s = rng.next_index(self.layers);
@@ -113,10 +120,11 @@ impl<'a> QuiltingSampler<'a> {
             let (Some(src), Some(dst)) = (self.pick(s, c, rng), self.pick(t, cp, rng)) else {
                 continue; // no node holds this (rank, color) slot
             };
-            g.push(src, dst);
+            sink.push(src, dst);
             accepted += 1;
         }
-        (g, balls, accepted)
+        sink.finish();
+        (balls, accepted)
     }
 
     #[inline]
@@ -136,18 +144,12 @@ impl Sampler for QuiltingSampler<'_> {
         "quilting"
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
-        self.sample_counted(rng).0
+    fn num_nodes(&self) -> u64 {
+        self.params.n()
     }
 
-    fn sample_with_report(&self, rng: &mut dyn Rng) -> super::SampleReport {
-        let t = std::time::Instant::now();
-        let (graph, proposed, accepted) = self.sample_counted(rng);
-        let mut r = super::SampleReport::new(self.name(), graph);
-        r.proposed = proposed;
-        r.accepted = accepted;
-        r.wall = t.elapsed();
-        r
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
+        self.stream_into(rng, sink)
     }
 }
 

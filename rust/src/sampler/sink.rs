@@ -1,12 +1,47 @@
-//! Streaming edge sinks — sample crawl-scale graphs without holding the
-//! edge list in memory.
+//! The sink-first streaming pipeline — every sampler's primary output
+//! interface.
 //!
-//! `MagmBdpSampler::sample_into` pushes accepted edges straight into an
-//! [`EdgeSink`]; implementations here cover the three production needs:
-//! in-memory collection, counting-only (for benchmarks / cardinality
-//! estimation) and buffered TSV streaming to disk.
+//! The paper's headline claim is that the BDP sampler's cost is
+//! proportional to the number of *edges*, not node pairs; holding the
+//! full edge list in memory would squander that at crawl scale. This
+//! module therefore inverts the output path: samplers *push* accepted
+//! edges into an [`EdgeSink`] as they are produced, and "return a graph"
+//! is merely the special case of pushing into a [`CollectSink`]
+//! (see [`Sampler::sample_into`](crate::sampler::Sampler::sample_into)).
+//!
+//! Terminal sinks cover the production needs:
+//!
+//! * [`CollectSink`] — in-memory [`MultiEdgeList`] (the default).
+//! * [`CountSink`] — counting only (benchmarks, cardinality estimation);
+//!   order-insensitive, so the sharded path streams into it with O(shard
+//!   buffer) peak memory.
+//! * [`TsvSink`] — buffered `src\tdst` text streaming to any writer.
+//! * [`crate::graph::io::BinaryEdgeSink`] — the compact binary edge-list
+//!   format for crawl-scale outputs.
+//!
+//! Adapters compose them:
+//!
+//! * [`ShardedSink`] — the parallel fan-in:
+//!   [`MagmBdpSampler::sample_parallel_into`] gives each worker thread a
+//!   lock-free local [`ShardHandle`] buffer. Order-insensitive terminals
+//!   absorb full chunks eagerly (bounded memory); order-sensitive ones
+//!   are drained once, in shard order, so a fixed `(seed, threads)` pair
+//!   reproduces the sequential-merge edge order exactly.
+//! * [`TeeSink`] — duplicate the stream into two sinks (e.g. file +
+//!   in-memory for degree statistics).
+//! * [`Unordered`] — opt a terminal out of ordering guarantees, enabling
+//!   eager sharded flushes into files where edge order is irrelevant.
+//!
+//! I/O-backed sinks cannot propagate errors from the hot `push` loop;
+//! they stash the first failure and report it from `try_finish()` (the
+//! `Result`-returning finisher the CLI and service propagate to their
+//! exit codes).
+//!
+//! [`MagmBdpSampler::sample_parallel_into`]:
+//!     crate::sampler::MagmBdpSampler::sample_parallel_into
 
 use std::io::Write;
+use std::sync::Mutex;
 
 use crate::graph::MultiEdgeList;
 
@@ -16,6 +51,15 @@ pub trait EdgeSink {
 
     /// Called once after the last edge (flush buffers etc.).
     fn finish(&mut self) {}
+
+    /// Does this sink's observable output depend on the order edges
+    /// arrive in? Order-insensitive sinks (counting, sampling sketches)
+    /// let the sharded parallel path flush shard chunks as they fill —
+    /// bounded memory — instead of buffering whole shards to replay them
+    /// in shard order.
+    fn order_sensitive(&self) -> bool {
+        true
+    }
 }
 
 /// Collects into a [`MultiEdgeList`] (the default behaviour).
@@ -49,13 +93,26 @@ impl EdgeSink for CountSink {
     fn push(&mut self, _src: u32, _dst: u32) {
         self.edges += 1;
     }
+
+    fn order_sensitive(&self) -> bool {
+        false
+    }
 }
 
 /// Streams `src\tdst` lines through a buffered writer.
 pub struct TsvSink<W: Write> {
     writer: std::io::BufWriter<W>,
     pub edges: u64,
+    /// Bytes emitted so far (text length, pre-buffering).
+    pub bytes: u64,
     failed: Option<std::io::Error>,
+}
+
+/// Decimal digit count of `v` (for byte accounting without formatting
+/// into a temporary).
+#[inline]
+fn dec_digits(v: u32) -> u64 {
+    (v.checked_ilog10().unwrap_or(0) + 1) as u64
 }
 
 impl<W: Write> TsvSink<W> {
@@ -63,6 +120,7 @@ impl<W: Write> TsvSink<W> {
         Self {
             writer: std::io::BufWriter::new(writer),
             edges: 0,
+            bytes: 0,
             failed: None,
         }
     }
@@ -71,6 +129,17 @@ impl<W: Write> TsvSink<W> {
     /// errors from the hot loop; check after `finish`).
     pub fn error(&self) -> Option<&std::io::Error> {
         self.failed.as_ref()
+    }
+
+    /// Flush and surface the first deferred I/O error, if any. This is
+    /// the fallible form of [`EdgeSink::finish`]; callers that can
+    /// propagate errors (the CLI, the generation service) should use it
+    /// instead of polling [`error`](Self::error).
+    pub fn try_finish(&mut self) -> std::io::Result<()> {
+        if let Some(e) = self.failed.take() {
+            return Err(e);
+        }
+        self.writer.flush()
     }
 }
 
@@ -85,15 +154,163 @@ impl<W: Write> EdgeSink for TsvSink<W> {
             return;
         }
         self.edges += 1;
+        self.bytes += dec_digits(src) + dec_digits(dst) + 2; // '\t' + '\n'
     }
 
     fn finish(&mut self) {
-        if self.failed.is_none() {
-            if let Err(e) = self.writer.flush() {
-                self.failed = Some(e);
-            }
+        if let Err(e) = self.try_finish() {
+            self.failed = Some(e);
         }
     }
+}
+
+/// Duplicates the stream into two sinks (e.g. a file and an in-memory
+/// collector for statistics).
+pub struct TeeSink<'a> {
+    pub first: &'a mut dyn EdgeSink,
+    pub second: &'a mut dyn EdgeSink,
+}
+
+impl<'a> TeeSink<'a> {
+    pub fn new(first: &'a mut dyn EdgeSink, second: &'a mut dyn EdgeSink) -> Self {
+        Self { first, second }
+    }
+}
+
+impl EdgeSink for TeeSink<'_> {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        self.first.push(src, dst);
+        self.second.push(src, dst);
+    }
+
+    fn finish(&mut self) {
+        self.first.finish();
+        self.second.finish();
+    }
+
+    fn order_sensitive(&self) -> bool {
+        self.first.order_sensitive() || self.second.order_sensitive()
+    }
+}
+
+/// Declares a terminal order-insensitive, opting it into eager sharded
+/// flushes (bounded memory) at the cost of a non-deterministic edge
+/// *order* (the edge *multiset* is unchanged). Useful for crawl-scale
+/// file outputs where consumers treat the file as a set.
+pub struct Unordered<S: EdgeSink>(pub S);
+
+impl<S: EdgeSink> EdgeSink for Unordered<S> {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        self.0.push(src, dst);
+    }
+
+    fn finish(&mut self) {
+        self.0.finish();
+    }
+
+    fn order_sensitive(&self) -> bool {
+        false
+    }
+}
+
+/// Default per-shard buffer capacity (edges) before an eager flush:
+/// 64 Ki edges ≈ 512 KiB — large enough to amortise the terminal lock,
+/// small enough that `threads × chunk` stays cache/memory friendly.
+const SHARD_CHUNK: usize = 1 << 16;
+
+/// Fan-in point for the sharded parallel samplers: hands out per-thread
+/// [`ShardHandle`]s whose local buffers drain into one terminal sink.
+///
+/// Flush policy (the determinism contract):
+/// * terminal `order_sensitive()` — handles buffer their whole shard;
+///   [`finish`](Self::finish) replays the buffers in shard order, so the
+///   output is edge-for-edge identical to sampling the shards
+///   sequentially and merging (the pre-streaming behaviour).
+/// * terminal order-insensitive — handles flush every `chunk` edges
+///   under the terminal lock; peak memory is `O(threads × chunk)`
+///   however many edges the sample produces.
+pub struct ShardedSink<'a> {
+    terminal: Mutex<&'a mut (dyn EdgeSink + Send)>,
+    eager: bool,
+    chunk: usize,
+}
+
+impl<'a> ShardedSink<'a> {
+    pub fn new(terminal: &'a mut (dyn EdgeSink + Send)) -> Self {
+        Self::with_chunk(terminal, SHARD_CHUNK)
+    }
+
+    /// Explicit per-shard buffer capacity (tests use small chunks to
+    /// exercise mid-stream flushes).
+    pub fn with_chunk(terminal: &'a mut (dyn EdgeSink + Send), chunk: usize) -> Self {
+        assert!(chunk > 0, "shard chunk must be positive");
+        let eager = !terminal.order_sensitive();
+        Self {
+            terminal: Mutex::new(terminal),
+            eager,
+            chunk,
+        }
+    }
+
+    /// A new shard handle; create exactly one per worker thread.
+    pub fn shard(&self) -> ShardHandle<'_, 'a> {
+        ShardHandle {
+            owner: self,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Drain the residual shard buffers **in shard order** and finish
+    /// the terminal. `residuals[t]` must be shard `t`'s
+    /// [`ShardHandle::into_buffer`] — the full shard stream for
+    /// order-sensitive terminals, the sub-chunk tail otherwise.
+    pub fn finish(self, residuals: Vec<Vec<(u32, u32)>>) {
+        let terminal = self
+            .terminal
+            .into_inner()
+            .expect("a shard handle panicked while flushing");
+        for shard in residuals {
+            for (src, dst) in shard {
+                terminal.push(src, dst);
+            }
+        }
+        terminal.finish();
+    }
+}
+
+/// One worker thread's lock-free view of a [`ShardedSink`]: edges land
+/// in a plain local `Vec`; the terminal lock is only touched on chunk
+/// flushes (eager mode) — never per edge.
+pub struct ShardHandle<'s, 'a> {
+    owner: &'s ShardedSink<'a>,
+    buf: Vec<(u32, u32)>,
+}
+
+impl ShardHandle<'_, '_> {
+    /// Surrender the locally buffered edges for the ordered drain
+    /// ([`ShardedSink::finish`]).
+    pub fn into_buffer(self) -> Vec<(u32, u32)> {
+        self.buf
+    }
+}
+
+impl EdgeSink for ShardHandle<'_, '_> {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        self.buf.push((src, dst));
+        if self.owner.eager && self.buf.len() >= self.owner.chunk {
+            let mut terminal = self.owner.terminal.lock().unwrap();
+            for &(s, d) in &self.buf {
+                terminal.push(s, d);
+            }
+            self.buf.clear();
+        }
+    }
+
+    // finish() is a no-op: the terminal is finished exactly once by
+    // `ShardedSink::finish` after every shard's residual is drained.
 }
 
 #[cfg(test)]
@@ -142,9 +359,9 @@ mod tests {
         {
             let mut sink = TsvSink::new(&mut buf);
             s.sample_into(&mut Xoshiro256pp::seed_from_u64(4), &mut sink);
-            sink.finish();
-            assert!(sink.error().is_none());
+            sink.try_finish().expect("in-memory writer cannot fail");
             assert!(sink.edges > 0);
+            assert!(sink.bytes > 0);
         }
         let text = String::from_utf8(buf).unwrap();
         let lines: Vec<&str> = text.lines().collect();
@@ -153,6 +370,11 @@ mod tests {
             let (a, b) = line.split_once('\t').expect("tab-separated");
             assert!(a.parse::<u32>().is_ok() && b.parse::<u32>().is_ok());
         }
+        assert_eq!(text.len() as u64, {
+            let mut sink2: TsvSink<Vec<u8>> = TsvSink::new(Vec::new());
+            s.sample_into(&mut Xoshiro256pp::seed_from_u64(4), &mut sink2);
+            sink2.bytes
+        });
     }
 
     /// A sink whose writer fails: the error must be captured, not panic.
@@ -176,5 +398,77 @@ mod tests {
         sink.finish();
         assert!(sink.error().is_some());
         assert!(sink.edges < 10_000, "writes after the failure must stop counting");
+        // And the fallible finisher surfaces the stashed error.
+        assert!(sink.try_finish().is_err());
+    }
+
+    #[test]
+    fn tee_sink_duplicates_stream() {
+        let mut collect = CollectSink::new(10);
+        let mut count = CountSink::default();
+        {
+            let mut tee = TeeSink::new(&mut collect, &mut count);
+            tee.push(1, 2);
+            tee.push(3, 4);
+            tee.finish();
+            assert!(tee.order_sensitive()); // collect side is ordered
+        }
+        assert_eq!(collect.graph.edges(), &[(1, 2), (3, 4)]);
+        assert_eq!(count.edges, 2);
+    }
+
+    #[test]
+    fn unordered_wrapper_flips_sensitivity() {
+        let collect = CollectSink::new(4);
+        assert!(collect.order_sensitive());
+        let mut un = Unordered(collect);
+        assert!(!un.order_sensitive());
+        un.push(0, 1);
+        assert_eq!(un.0.graph.num_edges(), 1);
+    }
+
+    #[test]
+    fn sharded_ordered_terminal_replays_in_shard_order() {
+        let mut collect = CollectSink::new(100);
+        {
+            let sharded = ShardedSink::with_chunk(&mut collect, 4);
+            let residuals: Vec<Vec<(u32, u32)>> =
+                crate::util::threadpool::scoped_chunks(3, 3, |t, _| {
+                    let mut h = sharded.shard();
+                    for k in 0..10u32 {
+                        h.push(t as u32, k);
+                    }
+                    h.into_buffer()
+                });
+            sharded.finish(residuals);
+        }
+        // Shard 0's edges first, then shard 1's, then shard 2's.
+        let edges = collect.graph.edges();
+        assert_eq!(edges.len(), 30);
+        for (i, &(s, k)) in edges.iter().enumerate() {
+            assert_eq!(s as usize, i / 10);
+            assert_eq!(k as usize, i % 10);
+        }
+    }
+
+    #[test]
+    fn sharded_eager_terminal_flushes_mid_stream_and_counts_all() {
+        let mut count = CountSink::default();
+        {
+            let sharded = ShardedSink::with_chunk(&mut count, 8);
+            let residuals: Vec<Vec<(u32, u32)>> =
+                crate::util::threadpool::scoped_chunks(4, 4, |t, _| {
+                    let mut h = sharded.shard();
+                    for k in 0..37u32 {
+                        h.push(t as u32, k);
+                    }
+                    // Eager flushes keep the residual below one chunk.
+                    let buf = h.into_buffer();
+                    assert!(buf.len() < 8, "residual {} >= chunk", buf.len());
+                    buf
+                });
+            sharded.finish(residuals);
+        }
+        assert_eq!(count.edges, 4 * 37);
     }
 }

@@ -10,10 +10,11 @@
 //! unordered pair — the undirected analogue of Theorem 2.
 
 use super::magm_bdp::MagmBdpSampler;
+use super::sink::{CollectSink, EdgeSink};
 use super::Sampler;
 use crate::graph::MultiEdgeList;
 use crate::model::magm::{AttributeAssignment, MagmParams};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SeedableRng, Xoshiro256pp};
 
 /// Undirected Algorithm 2: wraps the directed sampler with the
 /// fold-and-halve correction. Requires a symmetric parameter stack.
@@ -44,18 +45,51 @@ impl<'a> UndirectedMagmSampler<'a> {
     /// `src ≤ dst`; each unordered pair `{i, j}`, `i ≠ j`, carries
     /// `Poisson(Γ_{c_i c_j})` multiplicity, loops `Poisson(Γ_{c_i c_i})`.
     pub fn sample_undirected<R: Rng + ?Sized>(&self, rng: &mut R) -> MultiEdgeList {
-        let directed = self.inner.sample_counted(rng).0;
-        let mut g = MultiEdgeList::with_capacity(directed.n(), directed.num_edges() / 2 + 1);
-        for &(i, j) in directed.edges() {
-            if i == j {
-                // Diagonal: both orientations coincide; keep every ball.
-                g.push(i, j);
-            } else if rng.bernoulli(0.5) {
-                // Fold + thin by 1/2: Poisson(2Γ) → Poisson(Γ).
-                g.push(i.min(j), i.max(j));
-            }
+        let mut sink = CollectSink::new(self.inner.params().n());
+        self.stream_into(rng, &mut sink);
+        sink.graph
+    }
+
+    /// Stream the fold-and-halve correction: directed edges from the
+    /// inner sampler pass through a [`FoldSink`] adapter on their way to
+    /// `sink`, so nothing is buffered. The fold's coin flips come from a
+    /// stream forked off `rng` (the inner sampler holds `rng` for the
+    /// whole descent). Returns `(proposed, accepted-after-fold)`.
+    fn stream_into<R: Rng + ?Sized>(&self, rng: &mut R, sink: &mut dyn EdgeSink) -> (u64, u64) {
+        let mut fold = FoldSink {
+            inner: sink,
+            rng: Xoshiro256pp::seed_from_u64(rng.next_u64()),
+            kept: 0,
+        };
+        let (proposed, _directed) = self.inner.sample_into(rng, &mut fold);
+        (proposed, fold.kept)
+    }
+}
+
+/// Sink adapter implementing the §2 undirected correction: loops pass
+/// through, off-diagonal balls fold onto `{min, max}` and thin by 1/2
+/// (`Poisson(2Γ) → Poisson(Γ)`).
+struct FoldSink<'s> {
+    inner: &'s mut dyn EdgeSink,
+    rng: Xoshiro256pp,
+    kept: u64,
+}
+
+impl EdgeSink for FoldSink<'_> {
+    #[inline]
+    fn push(&mut self, i: u32, j: u32) {
+        if i == j {
+            // Diagonal: both orientations coincide; keep every ball.
+            self.inner.push(i, j);
+            self.kept += 1;
+        } else if self.rng.bernoulli(0.5) {
+            self.inner.push(i.min(j), i.max(j));
+            self.kept += 1;
         }
-        g
+    }
+
+    fn finish(&mut self) {
+        self.inner.finish();
     }
 }
 
@@ -64,8 +98,12 @@ impl Sampler for UndirectedMagmSampler<'_> {
         "magm-bdp-undirected"
     }
 
-    fn sample(&self, rng: &mut dyn Rng) -> MultiEdgeList {
-        self.sample_undirected(rng)
+    fn num_nodes(&self) -> u64 {
+        self.inner.params().n()
+    }
+
+    fn sample_into(&self, rng: &mut dyn Rng, sink: &mut dyn EdgeSink) -> (u64, u64) {
+        self.stream_into(rng, sink)
     }
 }
 
