@@ -1,0 +1,109 @@
+//! SERVE CLIENT — exercises the networked generation service end to end
+//! against a running `magbdp serve --listen <addr>` (the CI smoke runs
+//! exactly this pair).
+//!
+//! The session sent over one TCP connection:
+//!   1. `PING`                          → liveness
+//!   2. a malformed job (`n=0`)         → per-job `ERR`, connection survives
+//!   3. an oversized job (`n=2^33`)     → per-job `ERR`, connection survives
+//!   4. a valid `respond=bin` job       → `CHUNK`* + `END`; the payload is
+//!      decoded as a `MAGBDP01` stream and cross-checked against the edge
+//!      count the server reported
+//!   5. `METRICS`                       → Prometheus scrape; asserts the
+//!      jobs/errors counters match what this session caused
+//!
+//! ```bash
+//! magbdp serve --listen 127.0.0.1:7711 &
+//! cargo run --release --example serve_client -- 127.0.0.1:7711
+//! ```
+
+use magbdp::coordinator::{Client, Event};
+
+fn main() {
+    let addr = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "127.0.0.1:7711".to_string());
+    if let Err(e) = run(&addr) {
+        eprintln!("serve_client: {e}");
+        std::process::exit(1);
+    }
+    println!("serve_client: all checks passed against {addr}");
+}
+
+fn run(addr: &str) -> Result<(), String> {
+    let mut client = Client::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let send = |c: &mut Client, line: &str| {
+        c.send(line).map_err(|e| format!("send {line:?}: {e}"))
+    };
+
+    // 1. Liveness.
+    send(&mut client, "PING")?;
+    match client.next_event().map_err(|e| e.to_string())? {
+        Event::Pong => println!("PONG"),
+        other => return Err(format!("expected PONG, got {other:?}")),
+    }
+
+    // 2 + 3. Bad jobs fail individually without killing the connection.
+    let oversized = format!("id=2 d=6 mu=0.5 n={}", 1u64 << 33);
+    for (id, bad, why) in [
+        (1u64, "id=1 d=6 mu=0.5 n=0", "n=0"),
+        (2u64, oversized.as_str(), "n=2^33"),
+    ] {
+        send(&mut client, bad)?;
+        match client.next_event().map_err(|e| e.to_string())? {
+            Event::Err { id: got, msg } if got == id => {
+                println!("job {id} ({why}) rejected: {msg}")
+            }
+            other => return Err(format!("expected ERR id={id} for {why}, got {other:?}")),
+        }
+    }
+
+    // 4. A valid streaming job on the same (surviving) connection.
+    send(&mut client, "id=3 d=10 mu=0.4 seed=7 algo=magm-bdp respond=bin")?;
+    let (payload, fields) = client
+        .collect_payload(3)
+        .map_err(|e| format!("streaming job: {e}"))?;
+    let edges: u64 = fields
+        .get("edges")
+        .and_then(|v| v.parse().ok())
+        .ok_or("END missing edges=")?;
+    let g = magbdp::graph::io::read_binary_from(std::io::Cursor::new(&payload), "payload")
+        .map_err(|e| e.to_string())?;
+    if g.num_edges() as u64 != edges {
+        return Err(format!(
+            "payload decodes to {} edges, END reported {edges}",
+            g.num_edges()
+        ));
+    }
+    println!(
+        "job 3 streamed {} bytes, {edges} edges over n={} nodes",
+        payload.len(),
+        g.n()
+    );
+
+    // 5. Scrape and cross-check the counters this session moved.
+    send(&mut client, "METRICS")?;
+    let body = match client.next_event().map_err(|e| e.to_string())? {
+        Event::Metrics(body) => body,
+        other => return Err(format!("expected METRICS, got {other:?}")),
+    };
+    let metric = |name: &str| -> Result<f64, String> {
+        body.lines()
+            .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format!("scrape missing {name}:\n{body}"))
+    };
+    let jobs = metric("service_jobs")?;
+    let errors = metric("service_errors")?;
+    println!("scrape: service_jobs={jobs} service_errors={errors}");
+    // ≥, not ==: the server may have served other clients.
+    if jobs < 1.0 || errors < 2.0 {
+        return Err(format!(
+            "counters too low for this session (jobs={jobs}, errors={errors})"
+        ));
+    }
+
+    send(&mut client, "QUIT")?;
+    Ok(())
+}

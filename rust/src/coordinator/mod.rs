@@ -7,11 +7,16 @@
 //! * [`service`] — the graph-generation service: a job queue over the
 //!   thread pool, per-job metrics, and a text job-file format so the CLI
 //!   (`magbdp serve`) can run workload traces end-to-end.
+//! * [`server`] — the networked front end: a TCP server speaking a
+//!   newline-delimited job protocol with bounded-queue backpressure,
+//!   incremental payload streaming, and a metrics scrape endpoint.
 
 pub mod batcher;
 pub mod scheduler;
+pub mod server;
 pub mod service;
 
 pub use batcher::DynamicBatcher;
 pub use scheduler::ShardPlan;
+pub use server::{Client, Event, IntakeQueue, JobServer, ServerConfig, ServerHandle};
 pub use service::{Algo, GenerationService, JobResult, JobSpec, OutputFormat};

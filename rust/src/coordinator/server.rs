@@ -1,0 +1,933 @@
+//! The networked generation service: a long-lived TCP server that
+//! accepts [`JobSpec`] lines over a socket, multiplexes them over the
+//! [`GenerationService`] thread pool behind a bounded intake queue, and
+//! streams results — counts or full `MAGBDP01`/TSV edge payloads — back
+//! to the client incrementally.
+//!
+//! This is the "servable" half of the sink-first pipeline: every job
+//! already executes against an [`EdgeSink`](crate::sampler::EdgeSink),
+//! so serving a crawl-scale sample over the network costs O(chunk)
+//! memory, exactly like streaming it to disk.
+//!
+//! # Wire protocol
+//!
+//! Plain UTF-8 lines, newline-terminated; binary payloads ride in
+//! explicitly sized frames so the stream stays line-structured.
+//!
+//! ## Requests (client → server)
+//!
+//! * **Job line** — the [`JobSpec::parse_line`] grammar
+//!   (`key=value` tokens, e.g. `d=12 mu=0.4 seed=7 algo=magm-bdp`),
+//!   plus two intake-only keys:
+//!   * `id=<u64>` — client-chosen correlation id (default: a
+//!     server-assigned sequence number, echoed in every response).
+//!   * `respond=none|tsv|bin` — stream the sampled edges back over the
+//!     socket in this format (default `none`: a counts-only `OK` line).
+//!     Mutually exclusive with `output=` (which writes server-side
+//!     files).
+//! * `METRICS` — scrape the registry (Prometheus text exposition).
+//! * `PING` — liveness probe.
+//! * `QUIT` — close this connection.
+//! * Blank lines and `#` comments are ignored, so an existing job-trace
+//!   file can be piped to the socket verbatim.
+//!
+//! ## Responses (server → client)
+//!
+//! * `OK id=<id> algo=<a> nodes=<n> edges=<e> edges_simple=<s>
+//!   proposed=<p> bytes=<b> wall_ms=<ms> eps=<rate>` — job finished,
+//!   no payload.
+//! * `CHUNK id=<id> bytes=<k>` followed by exactly `k` raw payload
+//!   bytes and one `\n` — one slice of a `respond=` job's payload.
+//!   Chunks of concurrent jobs may interleave; reassemble per id.
+//! * `END id=<id> format=<tsv|bin> edges=<e> proposed=<p> bytes=<b>
+//!   wall_ms=<ms>` — a `respond=` job finished; the concatenated chunk
+//!   payloads are byte-identical to the file [`run_job`] writes locally
+//!   for the same `(spec, seed)`.
+//! * `ERR id=<id> msg=<text to end of line>` — the job failed (parse
+//!   error, sampler error, caught panic, or intake rejection). The
+//!   connection and the worker pool always survive; an `ERR` after
+//!   `CHUNK`s means the payload was cut short and must be discarded.
+//! * `METRICS bytes=<k>` + `k` bytes + `\n` — the scrape response.
+//! * `PONG` — answer to `PING`.
+//!
+//! # Fault and flow-control model
+//!
+//! Every job boundary is a fault boundary: specs are validated at parse
+//! time, execution runs through
+//! [`run_job_guarded_with`](super::service::run_job_guarded_with)
+//! (`catch_unwind`), and sink/socket I/O errors surface as that job's
+//! `ERR`. A malformed line, an oversized `n`, or a panicking sampler can
+//! never kill a pool worker or the connection.
+//!
+//! The intake queue ([`IntakeQueue`]) bounds queued-plus-running jobs:
+//! submissions beyond `queue_capacity` are rejected *immediately* with
+//! `ERR ... intake queue full` (`service.rejected` counter) instead of
+//! buffering without limit — backpressure by rejection, never OOM.
+//!
+//! Intake metrics (on top of the per-job `service.*` set): counters
+//! `service.requests` (job lines received), `service.parse_errors`,
+//! `service.rejected` (queue full), `service.conn_rejected` (connection
+//! cap), `service.net_write_errors`, and the `service.intake_depth`
+//! gauge. `service.jobs` keeps counting *executed* jobs only.
+//!
+//! [`run_job`]: super::service::run_job
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::service::{run_job_guarded, run_job_guarded_with, JobResult, JobSpec};
+use super::{GenerationService, OutputFormat};
+use crate::util::metrics::Registry;
+use crate::util::threadpool::default_parallelism;
+use crate::{log_debug, log_info, log_warn};
+
+/// Default [`ServerConfig::queue_capacity`].
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+/// Default [`ServerConfig::max_connections`].
+pub const DEFAULT_MAX_CONNECTIONS: usize = 64;
+
+/// Tunables for [`JobServer::bind`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7711` (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+    /// Max queued-plus-running jobs before submissions are rejected.
+    pub queue_capacity: usize,
+    /// Max concurrent client connections.
+    pub max_connections: usize,
+}
+
+impl ServerConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            threads: 0,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+        }
+    }
+}
+
+// ------------------------------------------------------------- intake queue
+
+/// Counting-semaphore view of the bounded job queue: a permit is held
+/// from intake until the job finishes, so `capacity` bounds queued plus
+/// in-flight work. [`try_enter`](Self::try_enter) never blocks — the
+/// server's backpressure is *rejection*, applied while the connection
+/// thread still holds the request line, which keeps server memory
+/// bounded no matter how fast clients submit.
+pub struct IntakeQueue {
+    capacity: usize,
+    depth: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl IntakeQueue {
+    /// `capacity` is clamped to ≥ 1.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            depth: Mutex::new(0),
+            freed: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Jobs currently queued or running.
+    pub fn depth(&self) -> usize {
+        *self.depth.lock().unwrap()
+    }
+
+    /// Claim a slot; `None` when the queue is full (reject the job).
+    pub fn try_enter(self: &Arc<Self>) -> Option<IntakePermit> {
+        let mut depth = self.depth.lock().unwrap();
+        if *depth >= self.capacity {
+            return None;
+        }
+        *depth += 1;
+        Some(IntakePermit {
+            queue: Arc::clone(self),
+        })
+    }
+
+    /// Claim a slot, blocking until one frees up (trace replay through a
+    /// bounded queue; the network path uses [`try_enter`](Self::try_enter)).
+    pub fn enter(self: &Arc<Self>) -> IntakePermit {
+        let mut depth = self.depth.lock().unwrap();
+        while *depth >= self.capacity {
+            depth = self.freed.wait(depth).unwrap();
+        }
+        *depth += 1;
+        IntakePermit {
+            queue: Arc::clone(self),
+        }
+    }
+
+    fn leave(&self) {
+        let mut depth = self.depth.lock().unwrap();
+        *depth = depth.saturating_sub(1);
+        self.freed.notify_one();
+    }
+}
+
+/// One claimed queue slot; dropping it (job done or submission failed)
+/// frees the slot.
+pub struct IntakePermit {
+    queue: Arc<IntakeQueue>,
+}
+
+impl Drop for IntakePermit {
+    fn drop(&mut self) {
+        self.queue.leave();
+    }
+}
+
+// ------------------------------------------------------------ frame writer
+
+/// `std::io::Write` adapter that frames every buffered spill as a
+/// `CHUNK id=<id> bytes=<k>` payload frame on the shared connection
+/// writer. The job's sink stack (`TsvSink`/`BinaryEdgeSink` over their
+/// internal `BufWriter`) therefore streams back in ~8 KiB frames while
+/// holding the connection lock only per chunk — concurrent jobs on the
+/// same connection interleave at frame granularity.
+pub struct FrameWriter<W: Write> {
+    id: u64,
+    out: Arc<Mutex<W>>,
+    /// Payload bytes framed so far.
+    pub bytes: u64,
+    /// Frames emitted so far.
+    pub chunks: u64,
+}
+
+impl<W: Write> FrameWriter<W> {
+    pub fn new(id: u64, out: Arc<Mutex<W>>) -> Self {
+        Self {
+            id,
+            out,
+            bytes: 0,
+            chunks: 0,
+        }
+    }
+}
+
+impl<W: Write> Write for FrameWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut out = self.out.lock().unwrap();
+        writeln!(out, "CHUNK id={} bytes={}", self.id, buf.len())?;
+        out.write_all(buf)?;
+        out.write_all(b"\n")?;
+        self.bytes += buf.len() as u64;
+        self.chunks += 1;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.out.lock().unwrap().flush()
+    }
+}
+
+// ------------------------------------------------------------- job server
+
+/// The TCP front end over a [`GenerationService`].
+pub struct JobServer {
+    listener: TcpListener,
+    svc: Arc<GenerationService>,
+    intake: Arc<IntakeQueue>,
+    shutdown: Arc<AtomicBool>,
+    active_conns: Arc<AtomicUsize>,
+    next_id: Arc<AtomicU64>,
+    max_connections: usize,
+}
+
+impl JobServer {
+    /// Bind the listen socket and build the worker pool (does not accept
+    /// yet; call [`serve`](Self::serve) or [`spawn`](Self::spawn)).
+    pub fn bind(config: &ServerConfig) -> Result<JobServer, String> {
+        let listener = TcpListener::bind(&config.addr)
+            .map_err(|e| format!("bind {}: {e}", config.addr))?;
+        let threads = if config.threads == 0 {
+            default_parallelism()
+        } else {
+            config.threads
+        };
+        Ok(JobServer {
+            listener,
+            svc: Arc::new(GenerationService::new(threads)),
+            intake: Arc::new(IntakeQueue::new(config.queue_capacity)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            active_conns: Arc::new(AtomicUsize::new(0)),
+            next_id: Arc::new(AtomicU64::new(0)),
+            max_connections: config.max_connections.max(1),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| e.to_string())
+    }
+
+    pub fn metrics(&self) -> Registry {
+        self.svc.metrics().clone()
+    }
+
+    /// The bounded intake queue (tests use it to pin the queue full
+    /// deterministically; ops code can watch its depth).
+    pub fn intake(&self) -> Arc<IntakeQueue> {
+        Arc::clone(&self.intake)
+    }
+
+    /// Accept connections until shut down (blocking; the CLI entry
+    /// point). Each connection gets a reader thread; jobs run on the
+    /// shared pool.
+    pub fn serve(self) -> Result<(), String> {
+        let addr = self.local_addr()?;
+        log_info!("serving on {addr} ({} workers, queue {})",
+            self.svc.pool().size(), self.intake.capacity());
+        loop {
+            let (stream, peer) = match self.listener.accept() {
+                Ok(conn) => conn,
+                Err(e) => {
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    log_warn!("accept: {e}");
+                    continue;
+                }
+            };
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            let metrics = self.svc.metrics().clone();
+            if self.active_conns.load(Ordering::Relaxed) >= self.max_connections {
+                metrics.counter("service.conn_rejected").inc();
+                let mut stream = stream;
+                let _ = stream.write_all(b"ERR id=0 msg=connection limit reached\n");
+                continue;
+            }
+            self.active_conns.fetch_add(1, Ordering::Relaxed);
+            let ctx = ConnCtx {
+                svc: Arc::clone(&self.svc),
+                intake: Arc::clone(&self.intake),
+                next_id: Arc::clone(&self.next_id),
+                active_conns: Arc::clone(&self.active_conns),
+                metrics,
+            };
+            let spawned = std::thread::Builder::new()
+                .name("magbdp-conn".to_string())
+                .spawn(move || handle_connection(ctx, stream));
+            if let Err(e) = spawned {
+                log_warn!("spawn connection thread for {peer}: {e}");
+                self.active_conns.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the accept loop on a background thread; the returned handle
+    /// shuts the server down when dropped.
+    pub fn spawn(self) -> Result<ServerHandle, String> {
+        let addr = self.local_addr()?;
+        let shutdown = Arc::clone(&self.shutdown);
+        let intake = Arc::clone(&self.intake);
+        let metrics = self.svc.metrics().clone();
+        let join = std::thread::Builder::new()
+            .name("magbdp-accept".to_string())
+            .spawn(move || {
+                let _ = self.serve();
+            })
+            .map_err(|e| format!("spawn accept thread: {e}"))?;
+        Ok(ServerHandle {
+            addr,
+            shutdown,
+            intake,
+            metrics,
+            join: Some(join),
+        })
+    }
+}
+
+/// Handle to a [`JobServer::spawn`]ed server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    intake: Arc<IntakeQueue>,
+    metrics: Registry,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn intake(&self) -> &Arc<IntakeQueue> {
+        &self.intake
+    }
+
+    /// Stop accepting, wake the accept loop, and join it. In-flight jobs
+    /// on the pool still complete (the pool joins on service drop).
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ------------------------------------------------------- connection logic
+
+/// Everything a connection thread needs (cheap clones of shared state).
+struct ConnCtx {
+    svc: Arc<GenerationService>,
+    intake: Arc<IntakeQueue>,
+    next_id: Arc<AtomicU64>,
+    active_conns: Arc<AtomicUsize>,
+    metrics: Registry,
+}
+
+/// One parsed request line.
+#[derive(Debug, PartialEq, Eq)]
+enum Request {
+    Ping,
+    Quit,
+    Metrics,
+    Job {
+        id: Option<u64>,
+        respond: Option<OutputFormat>,
+        spec_line: String,
+    },
+}
+
+/// Classify a request line. `Ok(None)` = blank/comment. `Err((id, msg))`
+/// = malformed intake keys (best-effort id for the `ERR` response).
+fn parse_request(line: &str) -> Result<Option<Request>, (u64, String)> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    match line {
+        "PING" => return Ok(Some(Request::Ping)),
+        "QUIT" => return Ok(Some(Request::Quit)),
+        "METRICS" => return Ok(Some(Request::Metrics)),
+        _ => {}
+    }
+    let mut id: Option<u64> = None;
+    let mut respond: Option<OutputFormat> = None;
+    let mut respond_seen = false;
+    let mut spec_tokens: Vec<&str> = Vec::new();
+    for tok in line.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("id=") {
+            if let Some(prev) = id {
+                return Err((prev, "duplicate key \"id\"".to_string()));
+            }
+            match v.parse::<u64>() {
+                Ok(v) => id = Some(v),
+                Err(e) => return Err((0, format!("id: {e}"))),
+            }
+        } else if let Some(v) = tok.strip_prefix("respond=") {
+            if respond_seen {
+                return Err((id.unwrap_or(0), "duplicate key \"respond\"".to_string()));
+            }
+            respond_seen = true;
+            respond = match v {
+                "none" => None,
+                other => match OutputFormat::parse(other) {
+                    Some(f) => Some(f),
+                    None => {
+                        return Err((
+                            id.unwrap_or(0),
+                            format!("unknown respond format {other:?} (none|tsv|bin)"),
+                        ))
+                    }
+                },
+            };
+        } else {
+            spec_tokens.push(tok);
+        }
+    }
+    if respond.is_some() && spec_tokens.iter().any(|t| t.starts_with("output=")) {
+        return Err((
+            id.unwrap_or(0),
+            "respond= and output= are mutually exclusive".to_string(),
+        ));
+    }
+    Ok(Some(Request::Job {
+        id,
+        respond,
+        spec_line: spec_tokens.join(" "),
+    }))
+}
+
+/// Squash a message onto one line for the `ERR ... msg=` field.
+fn escape_msg(msg: &str) -> String {
+    msg.replace('\n', "; ").replace('\r', "")
+}
+
+/// Write one response line; socket errors are counted, never propagated
+/// (the client is gone — the job already ran, nothing to unwind).
+fn send_line<W: Write>(out: &Mutex<W>, metrics: &Registry, line: &str) {
+    let mut w = out.lock().unwrap();
+    let failed = w
+        .write_all(line.as_bytes())
+        .and_then(|()| w.write_all(b"\n"))
+        .and_then(|()| w.flush())
+        .is_err();
+    if failed {
+        metrics.counter("service.net_write_errors").inc();
+    }
+}
+
+/// Write a sized payload frame (`<head> bytes=<k>` + payload + `\n`).
+fn send_payload<W: Write>(out: &Mutex<W>, metrics: &Registry, head: &str, payload: &[u8]) {
+    let mut w = out.lock().unwrap();
+    let failed = writeln!(w, "{head} bytes={}", payload.len())
+        .and_then(|()| w.write_all(payload))
+        .and_then(|()| w.write_all(b"\n"))
+        .and_then(|()| w.flush())
+        .is_err();
+    if failed {
+        metrics.counter("service.net_write_errors").inc();
+    }
+}
+
+fn ok_line(r: &JobResult) -> String {
+    format!(
+        "OK id={} algo={} nodes={} edges={} edges_simple={} proposed={} bytes={} wall_ms={:.3} eps={:.1}",
+        r.id,
+        r.algo,
+        r.nodes,
+        r.edges,
+        r.edges_simple,
+        r.proposed,
+        r.bytes_written,
+        r.wall.as_secs_f64() * 1e3,
+        r.edges_per_sec,
+    )
+}
+
+fn end_line(r: &JobResult, format: OutputFormat) -> String {
+    format!(
+        "END id={} format={} edges={} proposed={} bytes={} wall_ms={:.3}",
+        r.id,
+        format.label(),
+        r.edges,
+        r.proposed,
+        r.bytes_written,
+        r.wall.as_secs_f64() * 1e3,
+    )
+}
+
+/// Run one accepted job on the pool worker and write its response.
+fn execute_and_respond<W: Write + Send>(
+    spec: JobSpec,
+    respond: Option<OutputFormat>,
+    writer: &Arc<Mutex<W>>,
+    metrics: &Registry,
+) {
+    match respond {
+        None => {
+            let r = run_job_guarded(&spec, metrics);
+            match &r.error {
+                Some(e) => send_line(
+                    writer,
+                    metrics,
+                    &format!("ERR id={} msg={}", r.id, escape_msg(e)),
+                ),
+                None => send_line(writer, metrics, &ok_line(&r)),
+            }
+        }
+        Some(format) => {
+            let mut frames = FrameWriter::new(spec.id, Arc::clone(writer));
+            let r = run_job_guarded_with(&spec, metrics, Some((&mut frames, format)));
+            match &r.error {
+                // An ERR after CHUNKs tells the client to discard the
+                // partial payload.
+                Some(e) => send_line(
+                    writer,
+                    metrics,
+                    &format!("ERR id={} msg={}", r.id, escape_msg(e)),
+                ),
+                None => send_line(writer, metrics, &end_line(&r, format)),
+            }
+        }
+    }
+}
+
+/// Per-connection reader loop: parse each line, enforce intake limits,
+/// dispatch jobs to the pool, answer control requests inline.
+fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
+    struct ConnGuard(Arc<AtomicUsize>);
+    impl Drop for ConnGuard {
+        fn drop(&mut self) {
+            self.0.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    let _guard = ConnGuard(Arc::clone(&ctx.active_conns));
+
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    let reader = match stream.try_clone() {
+        Ok(clone) => BufReader::new(clone),
+        Err(e) => {
+            log_warn!("{peer}: clone stream: {e}");
+            return;
+        }
+    };
+    let writer = Arc::new(Mutex::new(stream));
+    log_debug!("{peer}: connected");
+
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let request = match parse_request(&line) {
+            Ok(None) => continue,
+            Ok(Some(request)) => request,
+            Err((id, msg)) => {
+                ctx.metrics.counter("service.requests").inc();
+                ctx.metrics.counter("service.parse_errors").inc();
+                ctx.metrics.counter("service.errors").inc();
+                send_line(
+                    &writer,
+                    &ctx.metrics,
+                    &format!("ERR id={id} msg={}", escape_msg(&msg)),
+                );
+                continue;
+            }
+        };
+        match request {
+            Request::Ping => send_line(&writer, &ctx.metrics, "PONG"),
+            Request::Quit => break,
+            Request::Metrics => {
+                let body = ctx.metrics.render_prometheus();
+                send_payload(&writer, &ctx.metrics, "METRICS", body.as_bytes());
+            }
+            Request::Job {
+                id,
+                respond,
+                spec_line,
+            } => {
+                ctx.metrics.counter("service.requests").inc();
+                let id = id.unwrap_or_else(|| ctx.next_id.fetch_add(1, Ordering::Relaxed));
+                let spec = match JobSpec::parse_line(id, &spec_line) {
+                    Ok(spec) => spec,
+                    Err(e) => {
+                        ctx.metrics.counter("service.parse_errors").inc();
+                        ctx.metrics.counter("service.errors").inc();
+                        send_line(
+                            &writer,
+                            &ctx.metrics,
+                            &format!("ERR id={id} msg={}", escape_msg(&e)),
+                        );
+                        continue;
+                    }
+                };
+                let Some(permit) = ctx.intake.try_enter() else {
+                    ctx.metrics.counter("service.rejected").inc();
+                    send_line(
+                        &writer,
+                        &ctx.metrics,
+                        &format!(
+                            "ERR id={id} msg=intake queue full (capacity {}); retry later",
+                            ctx.intake.capacity()
+                        ),
+                    );
+                    continue;
+                };
+                ctx.metrics
+                    .gauge("service.intake_depth")
+                    .set(ctx.intake.depth() as f64);
+                let writer = Arc::clone(&writer);
+                let metrics = ctx.metrics.clone();
+                ctx.svc.pool().execute(move || {
+                    execute_and_respond(spec, respond, &writer, &metrics);
+                    drop(permit);
+                });
+            }
+        }
+    }
+    log_debug!("{peer}: disconnected");
+}
+
+// ------------------------------------------------------------------ client
+
+/// One parsed response event (see the module docs for the frames).
+#[derive(Debug)]
+pub enum Event {
+    /// Counts-only job completion.
+    Ok {
+        id: u64,
+        fields: BTreeMap<String, String>,
+    },
+    /// One payload slice of a `respond=` job.
+    Chunk { id: u64, data: Vec<u8> },
+    /// Payload completion; chunks concatenated form the full artifact.
+    End {
+        id: u64,
+        fields: BTreeMap<String, String>,
+    },
+    /// Per-job failure (the connection stays usable).
+    Err { id: u64, msg: String },
+    /// Metrics scrape body.
+    Metrics(String),
+    /// Answer to `PING`.
+    Pong,
+}
+
+/// Minimal blocking client for the wire protocol — used by the example
+/// client, the end-to-end tests and the CI smoke.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Send one request line.
+    pub fn send(&mut self, line: &str) -> std::io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()
+    }
+
+    /// Read the next response event (blocking).
+    pub fn next_event(&mut self) -> std::io::Result<Event> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        let line = line.trim_end();
+        if line == "PONG" {
+            return Ok(Event::Pong);
+        }
+        if let Some(rest) = line.strip_prefix("OK ") {
+            let fields = kv_fields(rest);
+            return Ok(Event::Ok {
+                id: field_u64(&fields, "id")?,
+                fields,
+            });
+        }
+        if let Some(rest) = line.strip_prefix("END ") {
+            let fields = kv_fields(rest);
+            return Ok(Event::End {
+                id: field_u64(&fields, "id")?,
+                fields,
+            });
+        }
+        if let Some(rest) = line.strip_prefix("ERR ") {
+            let (head, msg) = match rest.split_once("msg=") {
+                Some((head, msg)) => (head, msg.to_string()),
+                None => (rest, String::new()),
+            };
+            let fields = kv_fields(head);
+            return Ok(Event::Err {
+                id: field_u64(&fields, "id").unwrap_or(0),
+                msg,
+            });
+        }
+        if let Some(rest) = line.strip_prefix("CHUNK ") {
+            let fields = kv_fields(rest);
+            let id = field_u64(&fields, "id")?;
+            let data = self.read_sized(field_u64(&fields, "bytes")? as usize)?;
+            return Ok(Event::Chunk { id, data });
+        }
+        if let Some(rest) = line.strip_prefix("METRICS ") {
+            let fields = kv_fields(rest);
+            let body = self.read_sized(field_u64(&fields, "bytes")? as usize)?;
+            return Ok(Event::Metrics(String::from_utf8_lossy(&body).into_owned()));
+        }
+        Err(std::io::Error::other(format!(
+            "unrecognised response line: {line:?}"
+        )))
+    }
+
+    /// Read an exactly sized payload plus its trailing newline.
+    fn read_sized(&mut self, len: usize) -> std::io::Result<Vec<u8>> {
+        let mut data = vec![0u8; len];
+        self.reader.read_exact(&mut data)?;
+        let mut nl = [0u8; 1];
+        self.reader.read_exact(&mut nl)?;
+        Ok(data)
+    }
+
+    /// Collect a `respond=` job's full payload: concatenates `CHUNK`s for
+    /// `id` until its `END` (returning the payload and the `END` fields)
+    /// or its `ERR` (returned as an error). Events for other job ids are
+    /// an error — use one in-flight payload job per connection when
+    /// reassembling with this helper.
+    pub fn collect_payload(
+        &mut self,
+        id: u64,
+    ) -> std::io::Result<(Vec<u8>, BTreeMap<String, String>)> {
+        let mut payload = Vec::new();
+        loop {
+            match self.next_event()? {
+                Event::Chunk { id: got, data } if got == id => payload.extend_from_slice(&data),
+                Event::End { id: got, fields } if got == id => return Ok((payload, fields)),
+                Event::Err { id: got, msg } if got == id => {
+                    return Err(std::io::Error::other(format!("job {id} failed: {msg}")))
+                }
+                other => {
+                    return Err(std::io::Error::other(format!(
+                        "unexpected event while collecting job {id}: {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Parse `k=v` tokens into a map (later duplicates win; server output
+/// never contains duplicates).
+fn kv_fields(s: &str) -> BTreeMap<String, String> {
+    s.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn field_u64(fields: &BTreeMap<String, String>, key: &str) -> std::io::Result<u64> {
+    fields
+        .get(key)
+        .and_then(|v| v.parse::<u64>().ok())
+        .ok_or_else(|| std::io::Error::other(format!("missing/bad field {key:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intake_queue_enforces_capacity() {
+        let q = Arc::new(IntakeQueue::new(2));
+        let a = q.try_enter().expect("slot 1");
+        let _b = q.try_enter().expect("slot 2");
+        assert!(q.try_enter().is_none(), "queue must reject at capacity");
+        assert_eq!(q.depth(), 2);
+        drop(a);
+        assert_eq!(q.depth(), 1);
+        let _c = q.try_enter().expect("slot freed by drop");
+    }
+
+    #[test]
+    fn intake_queue_capacity_clamps_to_one() {
+        let q = Arc::new(IntakeQueue::new(0));
+        assert_eq!(q.capacity(), 1);
+        let held = q.try_enter().expect("one slot");
+        assert!(q.try_enter().is_none());
+        drop(held);
+    }
+
+    #[test]
+    fn intake_queue_blocking_enter_waits_for_a_slot() {
+        let q = Arc::new(IntakeQueue::new(1));
+        let held = q.try_enter().expect("slot");
+        let q2 = Arc::clone(&q);
+        let waiter = std::thread::spawn(move || {
+            let _p = q2.enter(); // blocks until `held` drops
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!waiter.is_finished(), "enter must block while full");
+        drop(held);
+        waiter.join().unwrap();
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn parse_request_classifies_control_lines() {
+        assert_eq!(parse_request("PING").unwrap(), Some(Request::Ping));
+        assert_eq!(parse_request("QUIT").unwrap(), Some(Request::Quit));
+        assert_eq!(parse_request("METRICS").unwrap(), Some(Request::Metrics));
+        assert_eq!(parse_request("").unwrap(), None);
+        assert_eq!(parse_request("  # comment").unwrap(), None);
+    }
+
+    #[test]
+    fn parse_request_extracts_intake_keys() {
+        let r = parse_request("id=9 d=6 mu=0.5 respond=bin").unwrap().unwrap();
+        match r {
+            Request::Job {
+                id,
+                respond,
+                spec_line,
+            } => {
+                assert_eq!(id, Some(9));
+                assert_eq!(respond, Some(OutputFormat::Binary));
+                assert_eq!(spec_line, "d=6 mu=0.5");
+            }
+            other => panic!("not a job: {other:?}"),
+        }
+        // `respond=none` is the explicit default.
+        match parse_request("d=6 respond=none").unwrap().unwrap() {
+            Request::Job { respond, .. } => assert!(respond.is_none()),
+            other => panic!("not a job: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_intake_keys() {
+        assert!(parse_request("id=abc d=6").is_err());
+        assert!(parse_request("respond=xml d=6").is_err());
+        let (id, msg) = parse_request("id=5 respond=tsv respond=bin").unwrap_err();
+        assert_eq!(id, 5);
+        assert!(msg.contains("duplicate"), "{msg}");
+        let (_, msg) = parse_request("respond=tsv output=/tmp/x d=6").unwrap_err();
+        assert!(msg.contains("mutually exclusive"), "{msg}");
+    }
+
+    #[test]
+    fn frame_writer_emits_sized_chunks() {
+        let out = Arc::new(Mutex::new(Vec::<u8>::new()));
+        let mut fw = FrameWriter::new(7, Arc::clone(&out));
+        fw.write_all(b"hello").unwrap();
+        fw.write_all(b"world!").unwrap();
+        assert_eq!(fw.bytes, 11);
+        assert_eq!(fw.chunks, 2);
+        let got = out.lock().unwrap().clone();
+        let want = b"CHUNK id=7 bytes=5\nhello\nCHUNK id=7 bytes=6\nworld!\n";
+        assert_eq!(got, want.to_vec());
+    }
+
+    #[test]
+    fn escape_msg_keeps_errors_single_line() {
+        assert_eq!(escape_msg("a\nb\r\nc"), "a; b; c");
+    }
+}

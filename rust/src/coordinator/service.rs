@@ -20,10 +20,26 @@
 //! sink I/O errors surface through each sink's `try_finish()` and are
 //! reported as job failures.
 //!
-//! Per-job metrics: `service.jobs` / `service.errors` counters, the
-//! `service.job_latency_ns` histogram, the `service.edges` and
-//! `service.bytes_written` counters, and the `service.edges_per_sec`
-//! gauge (last finished job's streaming rate).
+//! # Fault boundaries
+//!
+//! Every job is a hard fault boundary: [`run_job_guarded`] wraps
+//! execution in `catch_unwind`, so a panicking sampler or sink becomes
+//! *that job's* error result (`service.panics` counter) instead of a
+//! dead pool worker. [`JobSpec::parse_line`] rejects up front anything
+//! the samplers would panic on (`n = 0`, `n > u32::MAX`, duplicate
+//! keys), which is what makes the intake path safe to expose over a
+//! socket ([`super::server`]).
+//!
+//! # Metrics
+//!
+//! `service.jobs` / `service.errors` / `service.panics` counters, the
+//! `service.job_latency_ns` histogram, the `service.edges`,
+//! `service.bytes_written` and `service.busy_ns` counters, and the
+//! `service.edges_per_sec` gauge — the **aggregate** rate
+//! `service.edges / service.busy_ns`, recomputed from those totals at
+//! each job boundary so the scraped value stays meaningful when many
+//! `run_all` workers finish concurrently (each [`JobResult`] carries its
+//! own per-job rate).
 
 use std::sync::Arc;
 
@@ -124,8 +140,15 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
+    /// Largest accepted `n=`. Node ids and the color index's CSR offsets
+    /// are `u32`, so every sampler asserts `n ≤ u32::MAX`; parsing must
+    /// reject anything bigger (and `n=0`) up front — a spec that panics a
+    /// pool worker instead of failing its own job is a service bug.
+    pub const MAX_NODES: u64 = u32::MAX as u64;
+
     /// Parse `theta=a,b,c,d d=12 mu=0.4 n=4096 seed=7 algo=magm-bdp
-    /// output=/tmp/e.tsv format=tsv`. Unknown keys are rejected; omitted
+    /// output=/tmp/e.tsv format=tsv`. Unknown keys and duplicate keys are
+    /// rejected (silent last-wins would hide trace-file typos); omitted
     /// keys get defaults (`theta=Θ₁`, `n=2^d`, `seed=id`,
     /// `algo=magm-bdp`, no output, `format=tsv`).
     pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
@@ -137,10 +160,15 @@ impl JobSpec {
         let mut algo = Algo::MagmBdp;
         let mut output: Option<String> = None;
         let mut format = OutputFormat::Tsv;
+        let mut seen: Vec<&str> = Vec::new();
         for tok in line.split_whitespace() {
             let (k, v) = tok
                 .split_once('=')
                 .ok_or_else(|| format!("job {id}: bad token {tok:?}"))?;
+            if seen.contains(&k) {
+                return Err(format!("job {id}: duplicate key {k:?}"));
+            }
+            seen.push(k);
             match k {
                 "theta" => {
                     let parts: Result<Vec<f64>, _> =
@@ -172,12 +200,24 @@ impl JobSpec {
         if !(0.0..=1.0).contains(&mu) {
             return Err(format!("job {id}: mu must be a probability"));
         }
+        // Validate the *effective* node count: an explicit `n=`, or the
+        // `2^d` default (which itself overflows u32 at d=32).
+        let n = n.unwrap_or(1u64 << d);
+        if n == 0 {
+            return Err(format!("job {id}: n must be at least 1"));
+        }
+        if n > Self::MAX_NODES {
+            return Err(format!(
+                "job {id}: n={n} exceeds the maximum {} (node ids must fit u32)",
+                Self::MAX_NODES
+            ));
+        }
         Ok(JobSpec {
             id,
             theta,
             d,
             mu,
-            n: n.unwrap_or(1 << d),
+            n,
             seed: seed.unwrap_or(id),
             algo,
             collect_graph: false,
@@ -210,6 +250,12 @@ pub struct JobResult {
     pub output: Option<String>,
     /// Bytes written to `output` (0 for in-memory jobs).
     pub bytes_written: u64,
+    /// This job's own streaming rate (`edges / wall`). The scraped
+    /// `service.edges_per_sec` gauge is the *aggregate* rate computed
+    /// from the `service.edges` / `service.busy_ns` totals — a
+    /// last-writer-wins per-job gauge is meaningless when `run_all`
+    /// workers finish concurrently.
+    pub edges_per_sec: f64,
     pub error: Option<String>,
 }
 
@@ -231,14 +277,22 @@ impl GenerationService {
         &self.metrics
     }
 
+    /// The worker pool (the network server multiplexes socket jobs over
+    /// it).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
     /// Execute all jobs (parallel across the pool), results in job order.
+    /// Every job is a fault boundary: a panicking sampler is caught and
+    /// reported as that job's error, never a dead pool worker.
     pub fn run_all(&self, specs: Vec<JobSpec>) -> Vec<JobResult> {
         let specs = Arc::new(specs);
         let metrics = self.metrics.clone();
         let n = specs.len();
         self.pool.map_indexed(n, move |i| {
             let spec = specs[i].clone();
-            run_job(&spec, &metrics)
+            run_job_guarded(&spec, &metrics)
         })
     }
 
@@ -305,56 +359,110 @@ struct JobOutcome {
     bytes_written: u64,
 }
 
+/// Stream a job's edges into an arbitrary writer in `format`, exactly
+/// as the file-backed streaming mode would. Used by both the `output=`
+/// disk path and the network server's socket responses, so a streamed
+/// payload is byte-identical to the file `run_job` writes locally for
+/// the same `(spec, seed)`.
+#[allow(clippy::too_many_arguments)]
+fn stream_job<W: std::io::Write>(
+    spec: &JobSpec,
+    params: &MagmParams,
+    assignment: &AttributeAssignment,
+    rng: &mut Xoshiro256pp,
+    writer: W,
+    format: OutputFormat,
+    metrics: &Registry,
+    label: &str,
+) -> Result<JobOutcome, String> {
+    let (counts, bytes) = match format {
+        OutputFormat::Tsv => {
+            let mut sink = TsvSink::new(writer);
+            let counts = sample_job_into(spec, params, assignment, rng, &mut sink, metrics)?;
+            sink.try_finish().map_err(|e| format!("write {label}: {e}"))?;
+            (counts, sink.bytes)
+        }
+        OutputFormat::Binary => {
+            let mut sink = crate::graph::io::BinaryEdgeSink::new(writer, params.n());
+            let counts = sample_job_into(spec, params, assignment, rng, &mut sink, metrics)?;
+            sink.try_finish().map_err(|e| format!("write {label}: {e}"))?;
+            (counts, sink.bytes)
+        }
+    };
+    Ok(JobOutcome {
+        proposed: counts.0,
+        edges: counts.1,
+        edges_simple: 0,
+        edges_list: None,
+        bytes_written: bytes,
+    })
+}
+
 /// Execute one job against its sink, recording metrics.
 pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
+    run_job_with(spec, metrics, None)
+}
+
+/// [`run_job`] with an optional response stream: when `respond` is set,
+/// the job's edges are streamed into that writer in the given format
+/// (`spec.output` is ignored). This is how the network server sends
+/// `MAGBDP01`/TSV payloads back over the socket through the same
+/// sink-first path that writes local files.
+pub fn run_job_with(
+    spec: &JobSpec,
+    metrics: &Registry,
+    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+) -> JobResult {
     let t = std::time::Instant::now();
     let params = spec.params();
     let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
     let assignment = params.sample_attributes(&mut rng);
 
-    let outcome: Result<JobOutcome, String> = (|| match &spec.output {
-        None => {
-            // In-memory mode: collect, then derive the simple graph.
-            let mut sink = CollectSink::new(params.n());
-            let (proposed, edges) =
-                sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
-            let simple = sink.graph.into_simple();
-            Ok(JobOutcome {
-                proposed,
-                edges,
-                edges_simple: simple.num_edges() as u64,
-                edges_list: spec.collect_graph.then_some(simple),
-                bytes_written: 0,
-            })
+    let outcome: Result<JobOutcome, String> = (|| {
+        if let Some((writer, format)) = respond {
+            // Socket response mode: edges stream back to the client.
+            return stream_job(
+                spec,
+                &params,
+                &assignment,
+                &mut rng,
+                writer,
+                format,
+                metrics,
+                "response",
+            );
         }
-        Some(path) => {
-            // Streaming mode: edges go straight to disk; memory stays
-            // O(write buffer) however many edges the job emits.
-            let file = std::fs::File::create(path)
-                .map_err(|e| format!("create {path}: {e}"))?;
-            let (counts, bytes) = match spec.format {
-                OutputFormat::Tsv => {
-                    let mut sink = TsvSink::new(file);
-                    let counts =
-                        sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
-                    sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
-                    (counts, sink.bytes)
-                }
-                OutputFormat::Binary => {
-                    let mut sink = crate::graph::io::BinaryEdgeSink::new(file, params.n());
-                    let counts =
-                        sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
-                    sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
-                    (counts, sink.bytes)
-                }
-            };
-            Ok(JobOutcome {
-                proposed: counts.0,
-                edges: counts.1,
-                edges_simple: 0,
-                edges_list: None,
-                bytes_written: bytes,
-            })
+        match &spec.output {
+            None => {
+                // In-memory mode: collect, then derive the simple graph.
+                let mut sink = CollectSink::new(params.n());
+                let (proposed, edges) =
+                    sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
+                let simple = sink.graph.into_simple();
+                Ok(JobOutcome {
+                    proposed,
+                    edges,
+                    edges_simple: simple.num_edges() as u64,
+                    edges_list: spec.collect_graph.then_some(simple),
+                    bytes_written: 0,
+                })
+            }
+            Some(path) => {
+                // Streaming mode: edges go straight to disk; memory stays
+                // O(write buffer) however many edges the job emits.
+                let file = std::fs::File::create(path)
+                    .map_err(|e| format!("create {path}: {e}"))?;
+                stream_job(
+                    spec,
+                    &params,
+                    &assignment,
+                    &mut rng,
+                    file,
+                    spec.format,
+                    metrics,
+                    path,
+                )
+            }
         }
     })();
 
@@ -363,13 +471,14 @@ pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
     metrics
         .histogram("service.job_latency_ns")
         .observe(wall.as_nanos() as f64);
+    metrics
+        .counter("service.busy_ns")
+        .add(wall.as_nanos().min(u64::MAX as u128) as u64);
     match outcome {
         Ok(out) => {
             metrics.counter("service.edges").add(out.edges);
             metrics.counter("service.bytes_written").add(out.bytes_written);
-            metrics
-                .gauge("service.edges_per_sec")
-                .set(out.edges as f64 / wall.as_secs_f64().max(1e-9));
+            set_aggregate_rate(metrics);
             JobResult {
                 id: spec.id,
                 algo: spec.algo.label(),
@@ -381,25 +490,92 @@ pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
                 edges_list: out.edges_list,
                 output: spec.output.clone(),
                 bytes_written: out.bytes_written,
+                edges_per_sec: out.edges as f64 / wall.as_secs_f64().max(1e-9),
                 error: None,
             }
         }
         Err(e) => {
             metrics.counter("service.errors").inc();
-            JobResult {
-                id: spec.id,
-                algo: spec.algo.label(),
-                nodes: spec.n,
-                edges: 0,
-                edges_simple: 0,
-                proposed: 0,
-                wall,
-                edges_list: None,
-                output: spec.output.clone(),
-                bytes_written: 0,
-                error: Some(e),
-            }
+            set_aggregate_rate(metrics);
+            error_result(spec, wall, e)
         }
+    }
+}
+
+/// Recompute the aggregate `service.edges_per_sec` gauge from the
+/// monotonic totals (`service.edges` / `service.busy_ns`). Unlike the
+/// old per-job last-writer-wins value, this is well-defined under
+/// concurrency: total edges produced per worker-busy second.
+fn set_aggregate_rate(metrics: &Registry) {
+    let edges = metrics.counter("service.edges").get();
+    let busy_secs = metrics.counter("service.busy_ns").get() as f64 / 1e9;
+    metrics
+        .gauge("service.edges_per_sec")
+        .set(edges as f64 / busy_secs.max(1e-9));
+}
+
+fn error_result(spec: &JobSpec, wall: std::time::Duration, error: String) -> JobResult {
+    JobResult {
+        id: spec.id,
+        algo: spec.algo.label(),
+        nodes: spec.n,
+        edges: 0,
+        edges_simple: 0,
+        proposed: 0,
+        wall,
+        edges_list: None,
+        output: spec.output.clone(),
+        bytes_written: 0,
+        edges_per_sec: 0.0,
+        error: Some(error),
+    }
+}
+
+/// [`run_job_with`] behind a panic boundary: a panicking sampler (or
+/// sink) is caught with `catch_unwind` and converted into this job's
+/// error result — a hard requirement for a long-lived service, where one
+/// bad job must never take out a pool worker or a client connection.
+/// Panics increment `service.errors` and `service.panics`.
+pub fn run_job_guarded_with(
+    spec: &JobSpec,
+    metrics: &Registry,
+    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+) -> JobResult {
+    let t = std::time::Instant::now();
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_job_with(spec, metrics, respond)
+    })) {
+        Ok(result) => result,
+        Err(payload) => {
+            let wall = t.elapsed();
+            // `run_job_with` only records its metrics on normal return,
+            // so none of these double-count.
+            metrics.counter("service.jobs").inc();
+            metrics.counter("service.errors").inc();
+            metrics.counter("service.panics").inc();
+            metrics
+                .histogram("service.job_latency_ns")
+                .observe(wall.as_nanos() as f64);
+            metrics
+                .counter("service.busy_ns")
+                .add(wall.as_nanos().min(u64::MAX as u128) as u64);
+            error_result(spec, wall, format!("panic: {}", panic_message(&payload)))
+        }
+    }
+}
+
+/// [`run_job`] behind the same panic boundary.
+pub fn run_job_guarded(spec: &JobSpec, metrics: &Registry) -> JobResult {
+    run_job_guarded_with(spec, metrics, None)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -436,6 +612,83 @@ mod tests {
         assert!(JobSpec::parse_line(0, "d=0").is_err());
         assert!(JobSpec::parse_line(0, "algo=alien").is_err());
         assert!(JobSpec::parse_line(0, "format=xml").is_err());
+        // Duplicate keys hide trace-file typos when last-wins; reject.
+        let err = JobSpec::parse_line(0, "d=6 d=7").unwrap_err();
+        assert!(err.contains("duplicate key"), "{err}");
+        assert!(JobSpec::parse_line(0, "seed=1 mu=0.4 seed=2").is_err());
+        assert!(JobSpec::parse_line(0, "output=/a output=/b").is_err());
+    }
+
+    #[test]
+    fn parse_line_rejects_out_of_range_n() {
+        // n=0 and n > u32::MAX used to parse fine and then panic a pool
+        // worker on the samplers' `node ids must fit u32` assert.
+        let err = JobSpec::parse_line(0, "d=6 n=0").unwrap_err();
+        assert!(err.contains("at least 1"), "{err}");
+        let err = JobSpec::parse_line(0, &format!("d=6 n={}", 1u64 << 33)).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+        // The d=32 *default* n (2^32) overflows u32 as well.
+        let err = JobSpec::parse_line(0, "d=32").unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+        // The boundary value itself is accepted.
+        let j = JobSpec::parse_line(0, &format!("d=6 n={}", u32::MAX)).unwrap();
+        assert_eq!(j.n, u32::MAX as u64);
+    }
+
+    #[test]
+    fn guarded_run_converts_panics_into_job_errors() {
+        // Bypass parse_line's validation to hit the sampler assert the
+        // way a pre-fix trace line would have.
+        let mut spec = JobSpec::parse_line(3, "d=6 mu=0.5").unwrap();
+        spec.n = u32::MAX as u64 + 5;
+        let metrics = Registry::new();
+        let r = run_job_guarded(&spec, &metrics);
+        let err = r.error.expect("panic surfaces as a job error");
+        assert!(err.starts_with("panic:"), "{err}");
+        assert!(err.contains("u32"), "{err}");
+        assert_eq!(metrics.counter("service.jobs").get(), 1);
+        assert_eq!(metrics.counter("service.errors").get(), 1);
+        assert_eq!(metrics.counter("service.panics").get(), 1);
+        // The boundary holds repeatedly: a healthy job still runs after.
+        let ok = run_job_guarded(&JobSpec::parse_line(4, "d=6 mu=0.5").unwrap(), &metrics);
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(metrics.counter("service.panics").get(), 1);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs_in_a_batch() {
+        let svc = GenerationService::new(2);
+        let mut bad = JobSpec::parse_line(1, "d=6 mu=0.5").unwrap();
+        bad.n = u32::MAX as u64 + 2;
+        let specs = vec![
+            JobSpec::parse_line(0, "d=6 mu=0.5 seed=1").unwrap(),
+            bad,
+            JobSpec::parse_line(2, "d=6 mu=0.5 seed=2").unwrap(),
+        ];
+        let results = svc.run_all(specs);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].error.is_none());
+        assert!(results[1].error.as_deref().unwrap_or("").starts_with("panic:"));
+        assert!(results[2].error.is_none());
+        assert_eq!(svc.metrics().counter("service.panics").get(), 1);
+        // Workers survived: the pool still executes a fresh batch.
+        let again = svc.run_all(vec![JobSpec::parse_line(5, "d=5 mu=0.5").unwrap()]);
+        assert!(again[0].error.is_none());
+    }
+
+    #[test]
+    fn edges_per_sec_is_aggregated_from_totals() {
+        let metrics = Registry::new();
+        let a = run_job(&JobSpec::parse_line(0, "d=6 mu=0.5 seed=1").unwrap(), &metrics);
+        let b = run_job(&JobSpec::parse_line(1, "d=6 mu=0.5 seed=2").unwrap(), &metrics);
+        assert!(a.edges_per_sec > 0.0);
+        assert!(b.edges_per_sec > 0.0);
+        let edges = metrics.counter("service.edges").get();
+        let busy = metrics.counter("service.busy_ns").get();
+        assert_eq!(edges, a.edges + b.edges);
+        let want = edges as f64 / (busy as f64 / 1e9).max(1e-9);
+        let got = metrics.gauge("service.edges_per_sec").get();
+        assert!((got - want).abs() <= want * 1e-9, "{got} vs {want}");
     }
 
     #[test]
@@ -501,6 +754,31 @@ mod tests {
         let err = r.error.expect("create failure surfaces as a job error");
         assert!(err.contains("create"), "{err}");
         assert_eq!(metrics.counter("service.errors").get(), 1);
+    }
+
+    #[test]
+    fn respond_stream_is_byte_identical_to_file_output() {
+        let dir = std::env::temp_dir().join("magbdp-service-stream");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (format, name) in [(OutputFormat::Binary, "respond.bin"), (OutputFormat::Tsv, "respond.tsv")] {
+            let path = dir.join(name).to_string_lossy().into_owned();
+            let spec_file = JobSpec::parse_line(
+                0,
+                &format!("d=6 mu=0.5 seed=13 output={path} format={}", format.label()),
+            )
+            .unwrap();
+            let metrics = Registry::new();
+            let rf = run_job(&spec_file, &metrics);
+            assert!(rf.error.is_none(), "{:?}", rf.error);
+
+            let spec_net = JobSpec::parse_line(0, "d=6 mu=0.5 seed=13").unwrap();
+            let mut buf: Vec<u8> = Vec::new();
+            let rn = run_job_with(&spec_net, &metrics, Some((&mut buf, format)));
+            assert!(rn.error.is_none(), "{:?}", rn.error);
+            assert_eq!(rn.edges, rf.edges);
+            assert_eq!(rn.bytes_written, rf.bytes_written);
+            assert_eq!(buf, std::fs::read(&path).unwrap(), "{name} payload differs");
+        }
     }
 
     #[test]

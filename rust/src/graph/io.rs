@@ -65,8 +65,28 @@ pub fn read_tsv(path: &str) -> Result<EdgeList, IoError> {
             .trim()
             .parse()
             .map_err(|e| IoError(format!("line {}: bad dst: {e}", lineno + 1)))?;
+        // A declared `# nodes=` header bounds every id (same contract as
+        // `read_binary`) — an inconsistent file must not silently yield
+        // an `EdgeList` with ids ≥ n.
+        if let Some(limit) = n {
+            if (s as u64) >= limit || (t as u64) >= limit {
+                return Err(IoError(format!(
+                    "line {}: edge ({s}, {t}) out of range for n={limit}",
+                    lineno + 1
+                )));
+            }
+        }
         max_id = max_id.max(s).max(t);
         pairs.push((s, t));
+    }
+    // Headers normally lead the file, but tolerate one after the edges —
+    // it still has to agree with them.
+    if let Some(limit) = n {
+        if !pairs.is_empty() && (max_id as u64) >= limit {
+            return Err(IoError(format!(
+                "edge ids reach {max_id}, out of range for n={limit}"
+            )));
+        }
     }
     let n = n.unwrap_or(max_id as u64 + 1);
     Ok(EdgeList::from_pairs(n, pairs))
@@ -169,7 +189,15 @@ pub fn write_binary(path: &str, edges: &EdgeList) -> Result<(), IoError> {
 /// Returns a multi-edge list (the format preserves duplicates).
 pub fn read_binary(path: &str) -> Result<MultiEdgeList, IoError> {
     let f = std::fs::File::open(path).map_err(|e| IoError(format!("open {path}: {e}")))?;
-    let mut reader = std::io::BufReader::new(f);
+    read_binary_from(std::io::BufReader::new(f), path)
+}
+
+/// [`read_binary`] over any reader — the network client uses this to
+/// decode a `MAGBDP01` payload streamed over a socket (via
+/// `std::io::Cursor`) with the same validation as the file path. `label`
+/// names the source in error messages.
+pub fn read_binary_from<R: Read>(mut reader: R, label: &str) -> Result<MultiEdgeList, IoError> {
+    let path = label;
     let mut header = [0u8; 16];
     reader
         .read_exact(&mut header)
@@ -280,6 +308,40 @@ mod tests {
         let e = read_tsv(&path).unwrap();
         assert_eq!(e.n(), 4);
         assert_eq!(e.num_edges(), 2);
+    }
+
+    #[test]
+    fn read_tsv_rejects_ids_out_of_header_range() {
+        // Used to silently build an EdgeList with ids ≥ n; must now match
+        // read_binary's out-of-range rejection.
+        let path = tmp("oob.tsv");
+        std::fs::write(&path, "# nodes=3\n0\t1\n5\t2\n").unwrap();
+        let err = read_tsv(&path).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert!(err.to_string().contains("line 3"), "{err}");
+        // Header after the edges is tolerated but still enforced.
+        let path = tmp("oob-trailing-header.tsv");
+        std::fs::write(&path, "0\t9\n# nodes=3\n").unwrap();
+        let err = read_tsv(&path).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // Boundary id n-1 stays valid.
+        let path = tmp("in-range.tsv");
+        std::fs::write(&path, "# nodes=3\n0\t2\n").unwrap();
+        assert_eq!(read_tsv(&path).unwrap().num_edges(), 1);
+    }
+
+    #[test]
+    fn read_binary_from_reader_matches_file_path() {
+        let mut body = Vec::new();
+        body.extend_from_slice(BINARY_MAGIC);
+        body.extend_from_slice(&4u64.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        let g = read_binary_from(std::io::Cursor::new(&body), "payload").unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.edges(), &[(1, 2)]);
+        let err = read_binary_from(std::io::Cursor::new(b"short"), "payload").unwrap_err();
+        assert!(err.to_string().contains("payload"), "{err}");
     }
 
     #[test]

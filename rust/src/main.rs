@@ -4,7 +4,8 @@
 //! * `sample`          — sample one MAGM graph, print stats / write TSV
 //! * `expected`        — e_K/e_M/e_KM/e_MK, cost model, hybrid choice (§4.6)
 //! * `viz`             — regenerate the Figure 1/2/3 matrices (heatmap + CSV)
-//! * `serve`           — run a job-trace file through the generation service
+//! * `serve`           — generation service: replay a job-trace file, or
+//!   run the long-lived TCP job server (`--listen`)
 //! * `check-artifacts` — compile all AOT artifacts, verify native parity
 
 use magbdp::coordinator::GenerationService;
@@ -559,14 +560,60 @@ fn cmd_viz(tokens: &[String]) -> Result<(), String> {
 
 // ------------------------------------------------------------------- serve
 
+const SERVE_HELP: &str = "\
+modes:
+  --jobs trace.txt          replay a job-trace file and exit
+  --listen 127.0.0.1:7711   long-lived TCP server (newline-delimited protocol)
+
+wire protocol (--listen):
+  requests:  one job per line in the trace grammar (d=, mu=, n=, seed=,
+             algo=, ...) plus `id=<u64>` (correlation id) and
+             `respond=none|tsv|bin` (stream edges back instead of `OK`);
+             control lines PING, METRICS, QUIT; `#` comments ignored.
+  responses: `OK id=.. edges=..` | `ERR id=.. msg=..` |
+             `CHUNK id=.. bytes=<k>` + k raw bytes + newline, ending in
+             `END id=.. format=.. bytes=..` | `METRICS bytes=<k>` + body
+             (Prometheus text exposition) | `PONG`.
+  A full queue rejects jobs with `ERR ... intake queue full` instead of
+  buffering unboundedly; parse errors and sampler panics fail only their
+  own job — the pool and the connection always survive.
+
+examples:
+  magbdp serve --jobs trace.txt --stats
+  magbdp serve --listen 127.0.0.1:7711 --queue 256 --max-conns 64
+  printf 'id=1 d=10 mu=0.4 seed=7 respond=bin\\n' | nc 127.0.0.1 7711
+";
+
 fn cmd_serve(tokens: &[String]) -> Result<(), String> {
-    let cmd = Command::new("serve", "run a job trace through the generation service")
+    let cmd = Command::new("serve", "run the generation service (trace replay or TCP server)")
         .opt("jobs", "trace file (one key=value job per line)", None)
+        .opt("listen", "TCP listen address (e.g. 127.0.0.1:7711)", None)
         .opt("threads", "worker threads (0 = all cores)", Some("0"))
-        .flag("stats", "print the metrics registry after the run");
+        .opt("queue", "max queued+running jobs before rejection", Some("256"))
+        .opt("max-conns", "max concurrent client connections", Some("64"))
+        .flag("stats", "print the metrics registry after the run (--jobs mode)")
+        .after_help(SERVE_HELP);
     let Some(args) = parse_or_help(&cmd, tokens)? else {
         return Ok(());
     };
+    match (args.get("jobs"), args.get("listen")) {
+        (Some(_), Some(_)) => {
+            return Err("--jobs and --listen are mutually exclusive".into())
+        }
+        (None, None) => return Err("one of --jobs or --listen is required".into()),
+        (None, Some(addr)) => {
+            let config = magbdp::coordinator::ServerConfig {
+                addr: addr.to_string(),
+                threads: args.usize("threads").map_err(|e| e.to_string())?,
+                queue_capacity: args.usize("queue").map_err(|e| e.to_string())?,
+                max_connections: args.usize("max-conns").map_err(|e| e.to_string())?,
+            };
+            let server = magbdp::coordinator::JobServer::bind(&config)?;
+            println!("listening on {}", server.local_addr()?);
+            return server.serve();
+        }
+        (Some(_), None) => {}
+    }
     let path = args.str("jobs").map_err(|e| e.to_string())?;
     let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
     let mut threads: usize = args.usize("threads").map_err(|e| e.to_string())?;

@@ -31,6 +31,10 @@
 //!   in-memory for degree statistics).
 //! * [`Unordered`] — opt a terminal out of ordering guarantees, enabling
 //!   eager sharded flushes into files where edge order is irrelevant.
+//! * [`FnWriter`] — adapt a byte callback into a `Write`, so the
+//!   I/O-backed sinks ([`TsvSink`], the binary sink) can stream into
+//!   anything that consumes byte slices — the network server frames each
+//!   spill as a socket `CHUNK` this way.
 //!
 //! I/O-backed sinks cannot propagate errors from the hot `push` loop;
 //! they stash the first failure and report it from `try_finish()` (the
@@ -212,6 +216,32 @@ impl<S: EdgeSink> EdgeSink for Unordered<S> {
 
     fn order_sensitive(&self) -> bool {
         false
+    }
+}
+
+/// Adapts a byte callback into a [`Write`], turning any consumer of
+/// byte slices into a sink target: each buffered spill of a [`TsvSink`]
+/// or [`crate::graph::io::BinaryEdgeSink`] arrives as one `f(chunk)`
+/// call. Callback errors propagate as write errors and surface through
+/// the owning sink's `try_finish()` like any other deferred I/O failure.
+pub struct FnWriter<F: FnMut(&[u8]) -> std::io::Result<()>> {
+    f: F,
+}
+
+impl<F: FnMut(&[u8]) -> std::io::Result<()>> FnWriter<F> {
+    pub fn new(f: F) -> Self {
+        Self { f }
+    }
+}
+
+impl<F: FnMut(&[u8]) -> std::io::Result<()>> Write for FnWriter<F> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        (self.f)(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
     }
 }
 
@@ -415,6 +445,36 @@ mod tests {
         }
         assert_eq!(collect.graph.edges(), &[(1, 2), (3, 4)]);
         assert_eq!(count.edges, 2);
+    }
+
+    #[test]
+    fn fn_writer_feeds_chunks_to_the_callback() {
+        let mut chunks: Vec<Vec<u8>> = Vec::new();
+        {
+            let mut sink = TsvSink::new(FnWriter::new(|b: &[u8]| {
+                chunks.push(b.to_vec());
+                Ok(())
+            }));
+            for k in 0..5000u32 {
+                sink.push(k, k + 1);
+            }
+            sink.try_finish().unwrap();
+        }
+        // The BufWriter spills mid-stream, so multiple chunks arrive…
+        assert!(chunks.len() > 1, "expected buffered spills, got {}", chunks.len());
+        // …whose concatenation is the exact TSV stream.
+        let text = String::from_utf8(chunks.concat()).unwrap();
+        assert_eq!(text.lines().count(), 5000);
+        assert!(text.starts_with("0\t1\n"));
+
+        // Callback failures surface through the sink's try_finish.
+        let mut sink = TsvSink::new(FnWriter::new(|_b: &[u8]| {
+            Err(std::io::Error::other("peer went away"))
+        }));
+        for _ in 0..10_000 {
+            sink.push(1, 2);
+        }
+        assert!(sink.try_finish().is_err());
     }
 
     #[test]

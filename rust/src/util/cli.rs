@@ -39,6 +39,7 @@ pub struct Command {
     pub name: &'static str,
     pub about: &'static str,
     opts: Vec<OptSpec>,
+    after_help: Option<&'static str>,
 }
 
 impl Command {
@@ -47,7 +48,15 @@ impl Command {
             name,
             about,
             opts: Vec::new(),
+            after_help: None,
         }
+    }
+
+    /// Free-form text appended after the option list — usage examples,
+    /// protocol notes (e.g. `serve`'s wire-protocol summary).
+    pub fn after_help(mut self, text: &'static str) -> Self {
+        self.after_help = Some(text);
+        self
     }
 
     /// Register `--name <value>` with an optional default.
@@ -86,6 +95,11 @@ impl Command {
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
             s.push_str(&format!("  {arg:<24} {}{def}\n", o.help));
+        }
+        if let Some(extra) = self.after_help {
+            s.push('\n');
+            s.push_str(extra.trim_end());
+            s.push('\n');
         }
         s
     }
@@ -256,5 +270,13 @@ mod tests {
         let h = cmd().help();
         assert!(h.contains("--d"));
         assert!(h.contains("--simple"));
+    }
+
+    #[test]
+    fn after_help_appended() {
+        let h = cmd().after_help("examples:\n  sample --d 10\n").help();
+        assert!(h.ends_with("examples:\n  sample --d 10\n"), "{h}");
+        // Options still render before the extra text.
+        assert!(h.find("--d").unwrap() < h.find("examples").unwrap());
     }
 }

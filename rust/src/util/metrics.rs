@@ -3,7 +3,10 @@
 //! Counters, gauges and histograms, all lock-free on the hot path
 //! (atomics; histograms use fixed log-scaled buckets). The coordinator
 //! service exposes a snapshot as text — one `name value` pair per line —
-//! for the CLI's `serve --stats` output and the end-to-end example.
+//! for the CLI's `serve --stats` output and the end-to-end example; the
+//! network server's `METRICS` scrape uses the Prometheus text exposition
+//! ([`Registry::render_prometheus`]) instead, so the same registry can
+//! feed a stock scraper.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -88,6 +91,14 @@ impl Histogram {
         } else {
             self.sum_micros.load(Ordering::Relaxed) as f64 * 1000.0 / c as f64
         }
+    }
+
+    /// Per-bucket counts (bucket `i` covers `[2^i, 2^(i+1))`).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
     }
 
     /// Approximate quantile from the log buckets (returns bucket lower edge).
@@ -182,6 +193,50 @@ impl Registry {
         }
         out
     }
+
+    /// Prometheus text exposition (version 0.0.4): `# TYPE` headers,
+    /// metric names with `.` mapped to `_`, histograms as cumulative
+    /// `_bucket{le="..."}` series over the log₂ bucket upper edges (only
+    /// up to the highest occupied bucket, then `+Inf`) plus `_sum` /
+    /// `_count`. This is what the network server's `METRICS` scrape
+    /// returns.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, g) in self.inner.gauges.lock().unwrap().iter() {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let buckets = h.bucket_counts();
+            let last = buckets.iter().rposition(|&c| c > 0);
+            let mut acc = 0u64;
+            if let Some(last) = last {
+                for (i, c) in buckets.iter().take(last + 1).enumerate() {
+                    acc += c;
+                    out.push_str(&format!(
+                        "{name}_bucket{{le=\"{}\"}} {acc}\n",
+                        (1u128 << (i + 1)) as f64
+                    ));
+                }
+            }
+            let count = h.count();
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {count}\n"));
+            out.push_str(&format!("{name}_sum {}\n", h.mean() * count as f64));
+            out.push_str(&format!("{name}_count {count}\n"));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -227,6 +282,40 @@ mod tests {
         assert!(text.contains("a 1"));
         assert!(text.contains("b 1"));
         assert!(text.contains("c.count 1"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("service.jobs").add(3);
+        r.gauge("service.edges_per_sec").set(12.5);
+        let h = r.histogram("service.job_latency_ns");
+        h.observe(3.0); // bucket 1: [2, 4)
+        h.observe(5.0); // bucket 2: [4, 8)
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE service_jobs counter\nservice_jobs 3\n"));
+        assert!(text.contains("# TYPE service_edges_per_sec gauge\nservice_edges_per_sec 12.5\n"));
+        assert!(text.contains("# TYPE service_job_latency_ns histogram\n"));
+        // Cumulative buckets: le=4 sees one observation, le=8 both.
+        assert!(text.contains("service_job_latency_ns_bucket{le=\"4\"} 1\n"), "{text}");
+        assert!(text.contains("service_job_latency_ns_bucket{le=\"8\"} 2\n"), "{text}");
+        assert!(text.contains("service_job_latency_ns_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("service_job_latency_ns_count 2\n"));
+        // No dots survive sanitisation in metric names.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let name = line.split([' ', '{']).next().unwrap();
+            assert!(!name.contains('.'), "unsanitised name in {line:?}");
+        }
+    }
+
+    #[test]
+    fn prometheus_empty_histogram_renders_inf_only() {
+        let r = Registry::new();
+        r.histogram("empty");
+        let text = r.render_prometheus();
+        assert!(text.contains("empty_bucket{le=\"+Inf\"} 0\n"));
+        assert!(text.contains("empty_count 0\n"));
+        assert!(!text.contains("le=\"2\""), "{text}");
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Networked generation service end-to-end: a real TCP client against a
+//! spawned `JobServer` — per-job fault isolation, byte-identical payload
+//! streaming, metrics scrape, bounded-queue backpressure.
+
+use magbdp::coordinator::service::run_job_with;
+use magbdp::coordinator::{Client, Event, JobSpec, OutputFormat, ServerConfig};
+use magbdp::util::metrics::Registry;
+
+fn spawn_server(queue: usize) -> magbdp::coordinator::ServerHandle {
+    let mut config = ServerConfig::new("127.0.0.1:0");
+    config.threads = 2;
+    config.queue_capacity = queue;
+    magbdp::coordinator::JobServer::bind(&config)
+        .expect("bind")
+        .spawn()
+        .expect("spawn")
+}
+
+/// The ISSUE acceptance scenario: one session submits a malformed job
+/// (n=0), an oversized job (n=2^33) and a valid streaming job. The bad
+/// jobs return per-job errors without killing the connection; the good
+/// job's payload is byte-identical to what `run_job` writes locally for
+/// the same (spec, seed); the scrape reports matching counters.
+#[test]
+fn mixed_session_streams_byte_identical_payload() {
+    let handle = spawn_server(8);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    client.send("id=1 d=6 mu=0.5 n=0").unwrap();
+    match client.next_event().unwrap() {
+        Event::Err { id, msg } => {
+            assert_eq!(id, 1);
+            assert!(msg.contains("at least 1"), "{msg}");
+        }
+        other => panic!("expected ERR for n=0, got {other:?}"),
+    }
+
+    client
+        .send(&format!("id=2 d=6 mu=0.5 n={}", 1u64 << 33))
+        .unwrap();
+    match client.next_event().unwrap() {
+        Event::Err { id, msg } => {
+            assert_eq!(id, 2);
+            assert!(msg.contains("exceeds"), "{msg}");
+        }
+        other => panic!("expected ERR for oversized n, got {other:?}"),
+    }
+
+    // The same connection now runs a valid MAGBDP01 streaming job.
+    let spec_line = "d=8 mu=0.4 seed=7 algo=magm-bdp";
+    client
+        .send(&format!("id=3 {spec_line} respond=bin"))
+        .unwrap();
+    let (payload, fields) = client.collect_payload(3).expect("payload streams");
+    assert_eq!(fields.get("format").map(String::as_str), Some("bin"));
+
+    // Reference: the exact bytes the service writes locally for the same
+    // (spec, seed) through the same sink-first path.
+    let spec = JobSpec::parse_line(3, spec_line).unwrap();
+    let mut local: Vec<u8> = Vec::new();
+    let reference = run_job_with(
+        &spec,
+        &Registry::new(),
+        Some((&mut local, OutputFormat::Binary)),
+    );
+    assert!(reference.error.is_none(), "{:?}", reference.error);
+    assert_eq!(payload, local, "socket payload != local MAGBDP01 bytes");
+    assert_eq!(
+        fields.get("edges").and_then(|v| v.parse::<u64>().ok()),
+        Some(reference.edges)
+    );
+    assert_eq!(
+        fields.get("bytes").and_then(|v| v.parse::<u64>().ok()),
+        Some(reference.bytes_written)
+    );
+    // And it decodes as a well-formed MAGBDP01 stream.
+    let g = magbdp::graph::io::read_binary_from(std::io::Cursor::new(&payload), "payload")
+        .expect("payload decodes");
+    assert_eq!(g.num_edges() as u64, reference.edges);
+
+    // Scrape: 1 executed job, 2 intake errors — exactly this session.
+    client.send("METRICS").unwrap();
+    let body = match client.next_event().unwrap() {
+        Event::Metrics(body) => body,
+        other => panic!("expected METRICS, got {other:?}"),
+    };
+    let metric = |name: &str| -> u64 {
+        body.lines()
+            .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("scrape missing {name}:\n{body}"))
+    };
+    assert_eq!(metric("service_jobs"), 1);
+    assert_eq!(metric("service_errors"), 2);
+    assert_eq!(metric("service_requests"), 3);
+    assert!(body.contains("# TYPE service_jobs counter"), "{body}");
+
+    client.send("QUIT").unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn tsv_respond_matches_local_output_and_counts_only_ok() {
+    let handle = spawn_server(8);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    let spec_line = "d=7 mu=0.5 seed=11 algo=magm-bdp";
+    client.send(&format!("id=4 {spec_line} respond=tsv")).unwrap();
+    let (payload, fields) = client.collect_payload(4).expect("payload streams");
+    assert_eq!(fields.get("format").map(String::as_str), Some("tsv"));
+
+    let spec = JobSpec::parse_line(4, spec_line).unwrap();
+    let mut local: Vec<u8> = Vec::new();
+    let reference = run_job_with(&spec, &Registry::new(), Some((&mut local, OutputFormat::Tsv)));
+    assert_eq!(payload, local, "socket TSV != local TSV");
+    assert_eq!(
+        String::from_utf8(payload).unwrap().lines().count() as u64,
+        reference.edges
+    );
+
+    // A counts-only job (`respond` omitted) answers with one OK line.
+    client.send(&format!("id=5 {spec_line}")).unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { id, fields } => {
+            assert_eq!(id, 5);
+            assert_eq!(
+                fields.get("edges").and_then(|v| v.parse::<u64>().ok()),
+                Some(reference.edges),
+                "same (spec, seed) must report the same count"
+            );
+            assert_eq!(fields.get("algo").map(String::as_str), Some("magm-bdp"));
+        }
+        other => panic!("expected OK, got {other:?}"),
+    }
+    handle.shutdown();
+}
+
+/// Malformed lines, unknown keys, respond/output conflicts and a
+/// sampler-level failure each fail their own job; the connection and the
+/// pool keep serving.
+#[test]
+fn connection_and_pool_survive_bad_jobs() {
+    let handle = spawn_server(8);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    for bad in [
+        "id=1 frobnicate=yes",
+        "id=2 d=6 d=7",
+        "id=3 respond=xml d=6",
+        "id=4 respond=tsv output=/tmp/x.tsv d=6",
+        "id=5 d=6 mu=2.5",
+    ] {
+        client.send(bad).unwrap();
+        match client.next_event().unwrap() {
+            Event::Err { .. } => {}
+            other => panic!("expected ERR for {bad:?}, got {other:?}"),
+        }
+    }
+
+    // Still alive: control plane answers and a real job runs.
+    client.send("PING").unwrap();
+    assert!(matches!(client.next_event().unwrap(), Event::Pong));
+    client.send("id=6 d=6 mu=0.5 seed=1").unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { id, .. } => assert_eq!(id, 6),
+        other => panic!("expected OK, got {other:?}"),
+    }
+    assert_eq!(handle.metrics().counter("service.errors").get(), 5);
+    assert_eq!(handle.metrics().counter("service.jobs").get(), 1);
+    handle.shutdown();
+}
+
+/// Backpressure is deterministic: the test pins the intake queue full by
+/// holding its permits directly, so a submission must be rejected with a
+/// structured error instead of queueing unboundedly.
+#[test]
+fn full_queue_rejects_jobs_with_error() {
+    let handle = spawn_server(2);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    let intake = handle.intake().clone();
+    let a = intake.try_enter().expect("slot 1");
+    let b = intake.try_enter().expect("slot 2");
+
+    client.send("id=7 d=6 mu=0.5").unwrap();
+    match client.next_event().unwrap() {
+        Event::Err { id, msg } => {
+            assert_eq!(id, 7);
+            assert!(msg.contains("queue full"), "{msg}");
+        }
+        other => panic!("expected queue-full ERR, got {other:?}"),
+    }
+    assert_eq!(handle.metrics().counter("service.rejected").get(), 1);
+    // Rejected jobs are never executed.
+    assert_eq!(handle.metrics().counter("service.jobs").get(), 0);
+
+    // Slots free up ⇒ the same connection's next job runs.
+    drop(a);
+    drop(b);
+    client.send("id=8 d=6 mu=0.5").unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { id, .. } => assert_eq!(id, 8),
+        other => panic!("expected OK after slots freed, got {other:?}"),
+    }
+    handle.shutdown();
+}
+
+/// Server-assigned ids (no `id=` key) still correlate responses, and
+/// comment/blank lines are ignored like in trace files.
+#[test]
+fn server_assigns_ids_and_skips_comments() {
+    let handle = spawn_server(4);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+    client.send("# a comment").unwrap();
+    client.send("").unwrap();
+    client.send("d=6 mu=0.5 seed=3").unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { fields, .. } => {
+            assert!(fields.contains_key("id"), "{fields:?}");
+        }
+        other => panic!("expected OK, got {other:?}"),
+    }
+    assert_eq!(handle.metrics().counter("service.requests").get(), 1);
+    handle.shutdown();
+}
+
+/// Two servers on ephemeral ports coexist; shutdown joins cleanly even
+/// with a client still connected.
+#[test]
+fn shutdown_is_clean_with_live_connections() {
+    let h1 = spawn_server(4);
+    let h2 = spawn_server(4);
+    assert_ne!(h1.addr(), h2.addr());
+    let mut c1 = Client::connect(h1.addr()).expect("connect 1");
+    c1.send("PING").unwrap();
+    assert!(matches!(c1.next_event().unwrap(), Event::Pong));
+    // Shut down while c1 is still open — must not hang.
+    h1.shutdown();
+    h2.shutdown();
+}
