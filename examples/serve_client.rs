@@ -6,11 +6,16 @@
 //!   1. `PING`                          → liveness
 //!   2. a malformed job (`n=0`)         → per-job `ERR`, connection survives
 //!   3. an oversized job (`n=2^33`)     → per-job `ERR`, connection survives
-//!   4. a valid `respond=bin` job       → `CHUNK`* + `END`; the payload is
+//!   4. a `timeout_ms=1` job            → fatal (`retry=false`) deadline
+//!      `ERR`: the same spec would only expire again
+//!   5. a valid `respond=bin` job       → `CHUNK`* + `END`; the payload is
 //!      decoded as a `MAGBDP01` stream and cross-checked against the edge
 //!      count the server reported
-//!   5. `METRICS`                       → Prometheus scrape; asserts the
+//!   6. `METRICS`                       → Prometheus scrape; asserts the
 //!      jobs/errors counters match what this session caused
+//!
+//! The socket carries a 10 s I/O timeout so a wedged server fails the
+//! smoke instead of hanging it.
 //!
 //! ```bash
 //! magbdp serve --listen 127.0.0.1:7711 &
@@ -32,6 +37,9 @@ fn main() {
 
 fn run(addr: &str) -> Result<(), String> {
     let mut client = Client::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    client
+        .set_io_timeout(Some(std::time::Duration::from_secs(10)))
+        .map_err(|e| format!("set_io_timeout: {e}"))?;
     let send = |c: &mut Client, line: &str| {
         c.send(line).map_err(|e| format!("send {line:?}: {e}"))
     };
@@ -51,14 +59,30 @@ fn run(addr: &str) -> Result<(), String> {
     ] {
         send(&mut client, bad)?;
         match client.next_event().map_err(|e| e.to_string())? {
-            Event::Err { id: got, msg } if got == id => {
-                println!("job {id} ({why}) rejected: {msg}")
+            Event::Err { id: got, retryable, msg } if got == id => {
+                if retryable {
+                    return Err(format!("parse error for {why} claims retry=true: {msg}"));
+                }
+                println!("job {id} ({why}) rejected (fatal): {msg}")
             }
             other => return Err(format!("expected ERR id={id} for {why}, got {other:?}")),
         }
     }
 
-    // 4. A valid streaming job on the same (surviving) connection.
+    // 4. A deadline that cannot be met is a *fatal* error: resubmitting
+    // the identical spec would only expire again.
+    send(&mut client, "id=4 d=16 mu=0.6 seed=5 timeout_ms=1")?;
+    match client.next_event().map_err(|e| e.to_string())? {
+        Event::Err { id: 4, retryable, msg } => {
+            if retryable || !msg.contains("deadline") {
+                return Err(format!("expected fatal deadline ERR, got retry={retryable} {msg:?}"));
+            }
+            println!("job 4 (timeout_ms=1) expired (fatal): {msg}")
+        }
+        other => return Err(format!("expected ERR id=4 for the deadline, got {other:?}")),
+    }
+
+    // 5. A valid streaming job on the same (surviving) connection.
     send(&mut client, "id=3 d=10 mu=0.4 seed=7 algo=magm-bdp respond=bin")?;
     let (payload, fields) = client
         .collect_payload(3)
@@ -81,7 +105,7 @@ fn run(addr: &str) -> Result<(), String> {
         g.n()
     );
 
-    // 5. Scrape and cross-check the counters this session moved.
+    // 6. Scrape and cross-check the counters this session moved.
     send(&mut client, "METRICS")?;
     let body = match client.next_event().map_err(|e| e.to_string())? {
         Event::Metrics(body) => body,
@@ -96,9 +120,12 @@ fn run(addr: &str) -> Result<(), String> {
     };
     let jobs = metric("service_jobs")?;
     let errors = metric("service_errors")?;
-    println!("scrape: service_jobs={jobs} service_errors={errors}");
+    let expired = metric("service_deadline_exceeded")?;
+    println!(
+        "scrape: service_jobs={jobs} service_errors={errors} service_deadline_exceeded={expired}"
+    );
     // ≥, not ==: the server may have served other clients.
-    if jobs < 1.0 || errors < 2.0 {
+    if jobs < 2.0 || errors < 3.0 || expired < 1.0 {
         return Err(format!(
             "counters too low for this session (jobs={jobs}, errors={errors})"
         ));

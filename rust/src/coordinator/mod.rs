@@ -18,5 +18,8 @@ pub mod service;
 
 pub use batcher::DynamicBatcher;
 pub use scheduler::ShardPlan;
-pub use server::{Client, Event, IntakeQueue, JobServer, ServerConfig, ServerHandle};
+pub use server::{Backoff, Client, Event, IntakeQueue, JobServer, ServerConfig, ServerHandle};
 pub use service::{Algo, GenerationService, JobResult, JobSpec, OutputFormat};
+
+pub use crate::util::cancel::{CancelKind, CancelToken};
+pub use crate::util::error::JobError;

@@ -17,17 +17,28 @@
 //! ## Requests (client → server)
 //!
 //! * **Job line** — the [`JobSpec::parse_line`] grammar
-//!   (`key=value` tokens, e.g. `d=12 mu=0.4 seed=7 algo=magm-bdp`),
-//!   plus two intake-only keys:
+//!   (`key=value` tokens, e.g. `d=12 mu=0.4 seed=7 algo=magm-bdp
+//!   timeout_ms=5000`), plus two intake-only keys:
 //!   * `id=<u64>` — client-chosen correlation id (default: a
 //!     server-assigned sequence number, echoed in every response).
 //!   * `respond=none|tsv|bin` — stream the sampled edges back over the
 //!     socket in this format (default `none`: a counts-only `OK` line).
 //!     Mutually exclusive with `output=` (which writes server-side
 //!     files).
+//!
+//!   `timeout_ms=<1..=86_400_000>` is a regular spec key: the job's own
+//!   deadline, measured from *dispatch* (queue wait burns budget). The
+//!   server always applies its own default cap
+//!   ([`ServerConfig::job_timeout_ms`]); the effective deadline is the
+//!   tighter of the two.
 //! * `METRICS` — scrape the registry (Prometheus text exposition).
 //! * `PING` — liveness probe.
 //! * `QUIT` — close this connection.
+//! * `DRAIN` — begin graceful shutdown: the server stops accepting new
+//!   connections, rejects new job lines with a retryable `ERR ... server
+//!   draining`, lets queued and in-flight jobs finish within the drain
+//!   deadline ([`ServerConfig::drain_timeout_ms`]), then cancels the
+//!   stragglers. Replies `DRAINING queued=<n>` immediately.
 //! * Blank lines and `#` comments are ignored, so an existing job-trace
 //!   file can be piped to the socket verbatim.
 //!
@@ -43,21 +54,47 @@
 //!   wall_ms=<ms>` — a `respond=` job finished; the concatenated chunk
 //!   payloads are byte-identical to the file [`run_job`] writes locally
 //!   for the same `(spec, seed)`.
-//! * `ERR id=<id> msg=<text to end of line>` — the job failed (parse
-//!   error, sampler error, caught panic, or intake rejection). The
-//!   connection and the worker pool always survive; an `ERR` after
-//!   `CHUNK`s means the payload was cut short and must be discarded.
+//! * `ERR id=<id> retry=<true|false> msg=<text to end of line>` — the
+//!   job failed (parse error, sampler error, caught panic, deadline,
+//!   cancellation, or intake rejection). The connection and the worker
+//!   pool always survive; an `ERR` after `CHUNK`s means the payload was
+//!   cut short and must be discarded.
+//! * `DRAINING queued=<n>` — acknowledgement of `DRAIN`.
 //! * `METRICS bytes=<k>` + `k` bytes + `\n` — the scrape response.
 //! * `PONG` — answer to `PING`.
 //!
+//! ## Retry / backoff contract
+//!
+//! `retry=true` marks load- and liveness-class failures — queue full,
+//! server draining, job cancelled, transient I/O — where resubmitting
+//! the *same* line can succeed; `retry=false` marks request- and
+//! bug-class failures (parse error, deadline exceeded, panic) that
+//! would fail again. [`Client::submit_with_retry`] implements the
+//! client side: capped exponential backoff with decorrelated jitter
+//! ([`Backoff`]), retrying only `retry=true` rejections. A successful
+//! retry streams a payload byte-identical to what the original attempt
+//! would have produced — jobs are deterministic per `(spec, seed)`.
+//!
 //! # Fault and flow-control model
 //!
-//! Every job boundary is a fault boundary: specs are validated at parse
-//! time, execution runs through
-//! [`run_job_guarded_with`](super::service::run_job_guarded_with)
-//! (`catch_unwind`), and sink/socket I/O errors surface as that job's
-//! `ERR`. A malformed line, an oversized `n`, or a panicking sampler can
-//! never kill a pool worker or the connection.
+//! Every job boundary is a fault *and* liveness boundary: specs are
+//! validated at parse time, execution runs through
+//! [`run_job_guarded_ctl`](super::service::run_job_guarded_ctl)
+//! (`catch_unwind` + a per-job [`CancelToken`]), and sink/socket I/O
+//! errors surface as that job's `ERR`. A malformed line, an oversized
+//! `n`, or a panicking sampler can never kill a pool worker or the
+//! connection.
+//!
+//! Tokens form a tree: server root → connection → job. Cancelling the
+//! root (hard shutdown, drain deadline) aborts everything; a client
+//! disconnect cancels that connection's token, so its in-flight jobs
+//! stop streaming into a dead socket within one guard interval instead
+//! of running to completion.
+//!
+//! Connections carry socket read/write timeouts
+//! ([`ServerConfig::io_timeout_ms`]) so a stalled peer cannot wedge a
+//! reader thread forever; the reader loop treats a read timeout as a
+//! poll tick (partial input is preserved) and keeps serving.
 //!
 //! The intake queue ([`IntakeQueue`]) bounds queued-plus-running jobs:
 //! submissions beyond `queue_capacity` are rejected *immediately* with
@@ -66,11 +103,15 @@
 //!
 //! Intake metrics (on top of the per-job `service.*` set): counters
 //! `service.requests` (job lines received), `service.parse_errors`,
-//! `service.rejected` (queue full), `service.conn_rejected` (connection
-//! cap), `service.net_write_errors`, and the `service.intake_depth`
-//! gauge. `service.jobs` keeps counting *executed* jobs only.
+//! `service.rejected` (queue full or draining), `service.conn_rejected`
+//! (connection cap), `service.net_write_errors`, the
+//! `service.intake_depth` gauge, and the `service.draining` 0/1 gauge.
+//! `service.jobs` keeps counting *executed* jobs only; cancelled and
+//! deadline-expired executions also bump `service.cancelled` /
+//! `service.deadline_exceeded` (see [`super::service`]).
 //!
 //! [`run_job`]: super::service::run_job
+//! [`CancelToken`]: crate::util::cancel::CancelToken
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -78,10 +119,14 @@ use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use super::service::{run_job_guarded, run_job_guarded_with, JobResult, JobSpec};
+use super::service::{run_job_guarded_ctl, JobResult, JobSpec};
 use super::{GenerationService, OutputFormat};
+use crate::util::cancel::CancelToken;
+use crate::util::error::JobError;
 use crate::util::metrics::Registry;
+use crate::util::rng::{Rng, SeedableRng, SplitMix64};
 use crate::util::threadpool::default_parallelism;
 use crate::{log_debug, log_info, log_warn};
 
@@ -89,6 +134,15 @@ use crate::{log_debug, log_info, log_warn};
 pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 /// Default [`ServerConfig::max_connections`].
 pub const DEFAULT_MAX_CONNECTIONS: usize = 64;
+/// Default [`ServerConfig::io_timeout_ms`]: 30 s.
+pub const DEFAULT_IO_TIMEOUT_MS: u64 = 30_000;
+/// Default [`ServerConfig::job_timeout_ms`]: 10 min.
+pub const DEFAULT_JOB_TIMEOUT_MS: u64 = 600_000;
+/// Default [`ServerConfig::drain_timeout_ms`]: 5 s.
+pub const DEFAULT_DRAIN_TIMEOUT_MS: u64 = 5_000;
+
+/// Longest request line the server will buffer before rejecting it.
+const MAX_LINE_BYTES: usize = 64 * 1024;
 
 /// Tunables for [`JobServer::bind`].
 #[derive(Clone, Debug)]
@@ -101,6 +155,16 @@ pub struct ServerConfig {
     pub queue_capacity: usize,
     /// Max concurrent client connections.
     pub max_connections: usize,
+    /// Socket read/write timeout per connection, in milliseconds
+    /// (0 = no timeout). Reads time out into poll ticks, so idle
+    /// clients stay connected; only a *wedged* write can fail.
+    pub io_timeout_ms: u64,
+    /// Server-side deadline cap applied to every job, in milliseconds
+    /// (0 = uncapped). A job's own `timeout_ms=` can only tighten it.
+    pub job_timeout_ms: u64,
+    /// How long a `DRAIN` waits for queued and in-flight jobs before
+    /// cancelling the stragglers, in milliseconds (0 = cancel at once).
+    pub drain_timeout_ms: u64,
 }
 
 impl ServerConfig {
@@ -110,6 +174,9 @@ impl ServerConfig {
             threads: 0,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             max_connections: DEFAULT_MAX_CONNECTIONS,
+            io_timeout_ms: DEFAULT_IO_TIMEOUT_MS,
+            job_timeout_ms: DEFAULT_JOB_TIMEOUT_MS,
+            drain_timeout_ms: DEFAULT_DRAIN_TIMEOUT_MS,
         }
     }
 }
@@ -172,10 +239,32 @@ impl IntakeQueue {
         }
     }
 
+    /// Block until the queue is empty (no job queued or running), up to
+    /// `timeout`. Returns `true` on idle, `false` on timeout. Drain uses
+    /// this as its barrier: permits are held for a job's full lifetime,
+    /// so depth 0 means every accepted job has responded.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut depth = self.depth.lock().unwrap();
+        while *depth > 0 {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            let (guard, wait) = self.freed.wait_timeout(depth, left).unwrap();
+            depth = guard;
+            if wait.timed_out() && *depth > 0 {
+                return false;
+            }
+        }
+        true
+    }
+
     fn leave(&self) {
         let mut depth = self.depth.lock().unwrap();
         *depth = depth.saturating_sub(1);
-        self.freed.notify_one();
+        // notify_all: both blocked `enter` callers and `wait_idle`
+        // watchers sleep on this condvar.
+        self.freed.notify_all();
     }
 }
 
@@ -246,9 +335,14 @@ pub struct JobServer {
     svc: Arc<GenerationService>,
     intake: Arc<IntakeQueue>,
     shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    root: CancelToken,
     active_conns: Arc<AtomicUsize>,
     next_id: Arc<AtomicU64>,
     max_connections: usize,
+    io_timeout: Option<Duration>,
+    job_cap: Option<Duration>,
+    drain_timeout: Duration,
 }
 
 impl JobServer {
@@ -262,14 +356,22 @@ impl JobServer {
         } else {
             config.threads
         };
+        let svc = Arc::new(GenerationService::new(threads));
+        svc.metrics().gauge("service.draining").set_bool(false);
+        let nonzero = |ms: u64| (ms > 0).then(|| Duration::from_millis(ms));
         Ok(JobServer {
             listener,
-            svc: Arc::new(GenerationService::new(threads)),
+            svc,
             intake: Arc::new(IntakeQueue::new(config.queue_capacity)),
             shutdown: Arc::new(AtomicBool::new(false)),
+            draining: Arc::new(AtomicBool::new(false)),
+            root: CancelToken::new(),
             active_conns: Arc::new(AtomicUsize::new(0)),
             next_id: Arc::new(AtomicU64::new(0)),
             max_connections: config.max_connections.max(1),
+            io_timeout: nonzero(config.io_timeout_ms),
+            job_cap: nonzero(config.job_timeout_ms),
+            drain_timeout: Duration::from_millis(config.drain_timeout_ms),
         })
     }
 
@@ -290,7 +392,8 @@ impl JobServer {
 
     /// Accept connections until shut down (blocking; the CLI entry
     /// point). Each connection gets a reader thread; jobs run on the
-    /// shared pool.
+    /// shared pool. On exit (hard shutdown or `DRAIN`) the queue is
+    /// drained under the drain deadline before the pool is joined.
     pub fn serve(self) -> Result<(), String> {
         let addr = self.local_addr()?;
         log_info!("serving on {addr} ({} workers, queue {})",
@@ -313,8 +416,14 @@ impl JobServer {
             if self.active_conns.load(Ordering::Relaxed) >= self.max_connections {
                 metrics.counter("service.conn_rejected").inc();
                 let mut stream = stream;
-                let _ = stream.write_all(b"ERR id=0 msg=connection limit reached\n");
+                let _ = stream.write_all(b"ERR id=0 retry=true msg=connection limit reached\n");
                 continue;
+            }
+            if let Some(t) = self.io_timeout {
+                // Best-effort: a socket that rejects timeouts still gets
+                // served, it just loses the anti-wedge guarantee.
+                let _ = stream.set_read_timeout(Some(t));
+                let _ = stream.set_write_timeout(Some(t));
             }
             self.active_conns.fetch_add(1, Ordering::Relaxed);
             let ctx = ConnCtx {
@@ -322,6 +431,11 @@ impl JobServer {
                 intake: Arc::clone(&self.intake),
                 next_id: Arc::clone(&self.next_id),
                 active_conns: Arc::clone(&self.active_conns),
+                shutdown: Arc::clone(&self.shutdown),
+                draining: Arc::clone(&self.draining),
+                root: self.root.clone(),
+                addr,
+                job_cap: self.job_cap,
                 metrics,
             };
             let spawned = std::thread::Builder::new()
@@ -332,7 +446,31 @@ impl JobServer {
                 self.active_conns.fetch_sub(1, Ordering::Relaxed);
             }
         }
+        self.drain();
         Ok(())
+    }
+
+    /// Post-accept-loop drain: give queued and in-flight jobs the drain
+    /// deadline to finish, then cancel the stragglers through the root
+    /// token and wait (bounded) for their permits to be released.
+    fn drain(&self) {
+        let gauge = self.svc.metrics().gauge("service.draining");
+        gauge.set_bool(true);
+        if !self.intake.wait_idle(self.drain_timeout) {
+            log_warn!(
+                "drain deadline ({:?}) hit with {} job(s) outstanding; cancelling",
+                self.drain_timeout,
+                self.intake.depth()
+            );
+            self.root.cancel();
+            // Cancelled jobs abort within one guard interval; this second
+            // wait only covers their ERR responses being written.
+            if !self.intake.wait_idle(Duration::from_secs(5)) {
+                log_warn!("{} job(s) still holding permits after cancel", self.intake.depth());
+            }
+        }
+        gauge.set_bool(false);
+        log_info!("drained; shutting down");
     }
 
     /// Run the accept loop on a background thread; the returned handle
@@ -341,6 +479,7 @@ impl JobServer {
         let addr = self.local_addr()?;
         let shutdown = Arc::clone(&self.shutdown);
         let intake = Arc::clone(&self.intake);
+        let root = self.root.clone();
         let metrics = self.svc.metrics().clone();
         let join = std::thread::Builder::new()
             .name("magbdp-accept".to_string())
@@ -352,6 +491,7 @@ impl JobServer {
             addr,
             shutdown,
             intake,
+            root,
             metrics,
             join: Some(join),
         })
@@ -363,6 +503,7 @@ pub struct ServerHandle {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     intake: Arc<IntakeQueue>,
+    root: CancelToken,
     metrics: Registry,
     join: Option<JoinHandle<()>>,
 }
@@ -380,14 +521,31 @@ impl ServerHandle {
         &self.intake
     }
 
-    /// Stop accepting, wake the accept loop, and join it. In-flight jobs
-    /// on the pool still complete (the pool joins on service drop).
+    /// The server's root cancel token (tests use it to abort every
+    /// in-flight job without going through the wire protocol).
+    pub fn root_token(&self) -> &CancelToken {
+        &self.root
+    }
+
+    /// Hard shutdown: cancel every in-flight job, stop accepting, and
+    /// join the accept loop (which still drains response writes).
     pub fn shutdown(mut self) {
         self.stop();
     }
 
+    /// Graceful shutdown: stop accepting but let queued and in-flight
+    /// jobs run to the drain deadline before the accept loop's drain
+    /// cancels the stragglers — the handle-side equivalent of `DRAIN`.
+    pub fn shutdown_graceful(mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+    }
+
     fn stop(&mut self) {
         let Some(join) = self.join.take() else { return };
+        self.root.cancel();
         self.shutdown.store(true, Ordering::Relaxed);
         // Wake the blocking accept with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
@@ -409,6 +567,14 @@ struct ConnCtx {
     intake: Arc<IntakeQueue>,
     next_id: Arc<AtomicU64>,
     active_conns: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    /// Server root token; each connection derives a child from it.
+    root: CancelToken,
+    /// Our own listen address (DRAIN nudges the blocking accept with it).
+    addr: SocketAddr,
+    /// Server-side per-job deadline cap.
+    job_cap: Option<Duration>,
     metrics: Registry,
 }
 
@@ -418,6 +584,7 @@ enum Request {
     Ping,
     Quit,
     Metrics,
+    Drain,
     Job {
         id: Option<u64>,
         respond: Option<OutputFormat>,
@@ -436,6 +603,7 @@ fn parse_request(line: &str) -> Result<Option<Request>, (u64, String)> {
         "PING" => return Ok(Some(Request::Ping)),
         "QUIT" => return Ok(Some(Request::Quit)),
         "METRICS" => return Ok(Some(Request::Metrics)),
+        "DRAIN" => return Ok(Some(Request::Drain)),
         _ => {}
     }
     let mut id: Option<u64> = None;
@@ -488,6 +656,16 @@ fn parse_request(line: &str) -> Result<Option<Request>, (u64, String)> {
 /// Squash a message onto one line for the `ERR ... msg=` field.
 fn escape_msg(msg: &str) -> String {
     msg.replace('\n', "; ").replace('\r', "")
+}
+
+/// Render one `ERR` response; `retry=` carries [`JobError::retryable`]
+/// so clients can back off and resubmit without parsing `msg=` text.
+fn err_line(id: u64, e: &JobError) -> String {
+    format!(
+        "ERR id={id} retry={} msg={}",
+        e.retryable(),
+        escape_msg(&e.to_string())
+    )
 }
 
 /// Write one response line; socket errors are counted, never propagated
@@ -544,36 +722,32 @@ fn end_line(r: &JobResult, format: OutputFormat) -> String {
     )
 }
 
-/// Run one accepted job on the pool worker and write its response.
+/// Run one accepted job on the pool worker and write its response. The
+/// token (connection child, capped by `timeout_ms=` and the server-wide
+/// job cap) is checked on every sink chunk, so cancellation and deadline
+/// expiry abort mid-stream.
 fn execute_and_respond<W: Write + Send>(
     spec: JobSpec,
     respond: Option<OutputFormat>,
+    token: &CancelToken,
     writer: &Arc<Mutex<W>>,
     metrics: &Registry,
 ) {
     match respond {
         None => {
-            let r = run_job_guarded(&spec, metrics);
+            let r = run_job_guarded_ctl(&spec, metrics, None, token);
             match &r.error {
-                Some(e) => send_line(
-                    writer,
-                    metrics,
-                    &format!("ERR id={} msg={}", r.id, escape_msg(e)),
-                ),
+                Some(e) => send_line(writer, metrics, &err_line(r.id, e)),
                 None => send_line(writer, metrics, &ok_line(&r)),
             }
         }
         Some(format) => {
             let mut frames = FrameWriter::new(spec.id, Arc::clone(writer));
-            let r = run_job_guarded_with(&spec, metrics, Some((&mut frames, format)));
+            let r = run_job_guarded_ctl(&spec, metrics, Some((&mut frames, format)), token);
             match &r.error {
                 // An ERR after CHUNKs tells the client to discard the
                 // partial payload.
-                Some(e) => send_line(
-                    writer,
-                    metrics,
-                    &format!("ERR id={} msg={}", r.id, escape_msg(e)),
-                ),
+                Some(e) => send_line(writer, metrics, &err_line(r.id, e)),
                 None => send_line(writer, metrics, &end_line(&r, format)),
             }
         }
@@ -582,6 +756,11 @@ fn execute_and_respond<W: Write + Send>(
 
 /// Per-connection reader loop: parse each line, enforce intake limits,
 /// dispatch jobs to the pool, answer control requests inline.
+///
+/// Reads run under the socket timeout: a timeout is a *poll tick*, not
+/// an error — partial input stays buffered (`read_line` appends) and the
+/// loop re-checks shutdown/drain state. When the peer disconnects, the
+/// connection's cancel token aborts its in-flight jobs.
 fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
     struct ConnGuard(Arc<AtomicUsize>);
     impl Drop for ConnGuard {
@@ -595,7 +774,7 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
-    let reader = match stream.try_clone() {
+    let mut reader = match stream.try_clone() {
         Ok(clone) => BufReader::new(clone),
         Err(e) => {
             log_warn!("{peer}: clone stream: {e}");
@@ -605,20 +784,59 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
     let writer = Arc::new(Mutex::new(stream));
     log_debug!("{peer}: connected");
 
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        let request = match parse_request(&line) {
+    // Aborts this connection's jobs on disconnect; a root cancel (hard
+    // shutdown, drain deadline) propagates through the parent link.
+    let conn_token = ctx.root.child();
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    let mut line = String::new();
+
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: peer closed its write side.
+            Ok(_) => {}
+            Err(e) => match e.kind() {
+                // Read timeout = poll tick. `read_line` has appended any
+                // partial bytes to `line`; keep them for the next read.
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    if conn_token.is_cancelled() {
+                        break;
+                    }
+                    if ctx.shutdown.load(Ordering::Relaxed)
+                        && in_flight.load(Ordering::Relaxed) == 0
+                    {
+                        // Draining and nothing of ours left in flight:
+                        // close so the drain barrier can clear.
+                        break;
+                    }
+                    if line.len() > MAX_LINE_BYTES {
+                        break; // Oversized partial line with a stalled peer.
+                    }
+                    continue;
+                }
+                std::io::ErrorKind::Interrupted => continue,
+                _ => break,
+            },
+        }
+        if line.len() > MAX_LINE_BYTES {
+            ctx.metrics.counter("service.requests").inc();
+            ctx.metrics.counter("service.parse_errors").inc();
+            ctx.metrics.counter("service.errors").inc();
+            let e = JobError::Parse(format!(
+                "request line exceeds {MAX_LINE_BYTES} bytes"
+            ));
+            send_line(&writer, &ctx.metrics, &err_line(0, &e));
+            line.clear();
+            continue;
+        }
+        let consumed = std::mem::take(&mut line);
+        let request = match parse_request(&consumed) {
             Ok(None) => continue,
             Ok(Some(request)) => request,
             Err((id, msg)) => {
                 ctx.metrics.counter("service.requests").inc();
                 ctx.metrics.counter("service.parse_errors").inc();
                 ctx.metrics.counter("service.errors").inc();
-                send_line(
-                    &writer,
-                    &ctx.metrics,
-                    &format!("ERR id={id} msg={}", escape_msg(&msg)),
-                );
+                send_line(&writer, &ctx.metrics, &err_line(id, &JobError::Parse(msg)));
                 continue;
             }
         };
@@ -629,6 +847,21 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
                 let body = ctx.metrics.render_prometheus();
                 send_payload(&writer, &ctx.metrics, "METRICS", body.as_bytes());
             }
+            Request::Drain => {
+                if !ctx.draining.swap(true, Ordering::SeqCst) {
+                    log_info!("{peer}: DRAIN requested");
+                    ctx.metrics.gauge("service.draining").set_bool(true);
+                    ctx.shutdown.store(true, Ordering::Relaxed);
+                    // Nudge the blocking accept so serve() can fall
+                    // through to its drain barrier.
+                    let _ = TcpStream::connect(ctx.addr);
+                }
+                send_line(
+                    &writer,
+                    &ctx.metrics,
+                    &format!("DRAINING queued={}", ctx.intake.depth()),
+                );
+            }
             Request::Job {
                 id,
                 respond,
@@ -636,43 +869,53 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
             } => {
                 ctx.metrics.counter("service.requests").inc();
                 let id = id.unwrap_or_else(|| ctx.next_id.fetch_add(1, Ordering::Relaxed));
+                if ctx.draining.load(Ordering::SeqCst) {
+                    ctx.metrics.counter("service.rejected").inc();
+                    send_line(&writer, &ctx.metrics, &err_line(id, &JobError::Draining));
+                    continue;
+                }
                 let spec = match JobSpec::parse_line(id, &spec_line) {
                     Ok(spec) => spec,
                     Err(e) => {
                         ctx.metrics.counter("service.parse_errors").inc();
                         ctx.metrics.counter("service.errors").inc();
-                        send_line(
-                            &writer,
-                            &ctx.metrics,
-                            &format!("ERR id={id} msg={}", escape_msg(&e)),
-                        );
+                        send_line(&writer, &ctx.metrics, &err_line(id, &JobError::Parse(e)));
                         continue;
                     }
                 };
                 let Some(permit) = ctx.intake.try_enter() else {
                     ctx.metrics.counter("service.rejected").inc();
-                    send_line(
-                        &writer,
-                        &ctx.metrics,
-                        &format!(
-                            "ERR id={id} msg=intake queue full (capacity {}); retry later",
-                            ctx.intake.capacity()
-                        ),
-                    );
+                    let e = JobError::QueueFull {
+                        capacity: ctx.intake.capacity(),
+                    };
+                    send_line(&writer, &ctx.metrics, &err_line(id, &e));
                     continue;
                 };
                 ctx.metrics
                     .gauge("service.intake_depth")
                     .set(ctx.intake.depth() as f64);
+                // Deadline = tighter of the job's own timeout_ms and the
+                // server cap, measured from dispatch (queue wait counts).
+                let job_timeout = match (spec.timeout(), ctx.job_cap) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                let token = conn_token.child_with_timeout(job_timeout);
                 let writer = Arc::clone(&writer);
                 let metrics = ctx.metrics.clone();
+                let in_flight = Arc::clone(&in_flight);
+                in_flight.fetch_add(1, Ordering::SeqCst);
                 ctx.svc.pool().execute(move || {
-                    execute_and_respond(spec, respond, &writer, &metrics);
+                    execute_and_respond(spec, respond, &token, &writer, &metrics);
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
                     drop(permit);
                 });
             }
         }
     }
+    // Peer gone (or connection closing): abort whatever of ours is still
+    // running rather than streaming into a dead socket.
+    conn_token.cancel();
     log_debug!("{peer}: disconnected");
 }
 
@@ -693,8 +936,17 @@ pub enum Event {
         id: u64,
         fields: BTreeMap<String, String>,
     },
-    /// Per-job failure (the connection stays usable).
-    Err { id: u64, msg: String },
+    /// Per-job failure (the connection stays usable). `retryable` echoes
+    /// the server's `retry=` verdict: `true` means resubmitting the same
+    /// line can succeed (queue full, draining, cancelled); `false` means
+    /// it will fail again (parse error, deadline, panic).
+    Err {
+        id: u64,
+        retryable: bool,
+        msg: String,
+    },
+    /// Acknowledgement of `DRAIN` (server stopped accepting jobs).
+    Draining { queued: u64 },
     /// Metrics scrape body.
     Metrics(String),
     /// Answer to `PING`.
@@ -716,6 +968,15 @@ impl Client {
             reader,
             writer: stream,
         })
+    }
+
+    /// Set the socket read/write timeout (`None` = block forever).
+    /// With a read timeout, [`next_event`](Self::next_event) surfaces
+    /// `WouldBlock`/`TimedOut` I/O errors the caller can treat as poll
+    /// ticks — a hung server no longer wedges the client.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)
     }
 
     /// Send one request line.
@@ -760,7 +1021,15 @@ impl Client {
             let fields = kv_fields(head);
             return Ok(Event::Err {
                 id: field_u64(&fields, "id").unwrap_or(0),
+                // Absent retry= (pre-deadline servers) = not retryable.
+                retryable: fields.get("retry").is_some_and(|v| v == "true"),
                 msg,
+            });
+        }
+        if let Some(rest) = line.strip_prefix("DRAINING ") {
+            let fields = kv_fields(rest);
+            return Ok(Event::Draining {
+                queued: field_u64(&fields, "queued").unwrap_or(0),
             });
         }
         if let Some(rest) = line.strip_prefix("CHUNK ") {
@@ -802,7 +1071,7 @@ impl Client {
             match self.next_event()? {
                 Event::Chunk { id: got, data } if got == id => payload.extend_from_slice(&data),
                 Event::End { id: got, fields } if got == id => return Ok((payload, fields)),
-                Event::Err { id: got, msg } if got == id => {
+                Event::Err { id: got, msg, .. } if got == id => {
                     return Err(std::io::Error::other(format!("job {id} failed: {msg}")))
                 }
                 other => {
@@ -812,6 +1081,70 @@ impl Client {
                 }
             }
         }
+    }
+
+    /// Submit a job line, retrying `retry=true` rejections (queue full,
+    /// draining) under `backoff` until the budget runs out. Returns the
+    /// first non-retryable event — `Ok`/`End`/fatal `Err`/the last
+    /// retryable `Err` once retries are exhausted. Jobs are
+    /// deterministic per `(spec, seed)`, so a retried submission yields
+    /// the payload the original attempt would have.
+    pub fn submit_with_retry(
+        &mut self,
+        line: &str,
+        backoff: &mut Backoff,
+    ) -> std::io::Result<Event> {
+        loop {
+            self.send(line)?;
+            let event = self.next_event()?;
+            match &event {
+                Event::Err { retryable: true, .. } => match backoff.next_delay() {
+                    Some(delay) => std::thread::sleep(delay),
+                    None => return Ok(event),
+                },
+                _ => return Ok(event),
+            }
+        }
+    }
+}
+
+/// Capped exponential backoff with decorrelated jitter (seeded, so test
+/// schedules are reproducible): each delay is uniform in
+/// `[base, 3 * previous)`, clamped to `cap`.
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    retries_left: u32,
+    prev: Duration,
+    rng: SplitMix64,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, max_retries: u32, seed: u64) -> Self {
+        Backoff {
+            base,
+            cap,
+            retries_left: max_retries,
+            prev: base,
+            rng: SplitMix64::seed_from_u64(seed),
+        }
+    }
+
+    /// The next sleep, or `None` when the retry budget is exhausted.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.retries_left == 0 {
+            return None;
+        }
+        self.retries_left -= 1;
+        let base = self.base.as_millis() as u64;
+        let hi = (self.prev.as_millis() as u64).saturating_mul(3).max(base + 1);
+        let delay = Duration::from_millis(base + self.rng.next_below(hi - base)).min(self.cap);
+        self.prev = delay;
+        Some(delay)
+    }
+
+    pub fn retries_left(&self) -> u32 {
+        self.retries_left
     }
 }
 
@@ -876,8 +1209,31 @@ mod tests {
         assert_eq!(parse_request("PING").unwrap(), Some(Request::Ping));
         assert_eq!(parse_request("QUIT").unwrap(), Some(Request::Quit));
         assert_eq!(parse_request("METRICS").unwrap(), Some(Request::Metrics));
+        assert_eq!(parse_request("DRAIN").unwrap(), Some(Request::Drain));
         assert_eq!(parse_request("").unwrap(), None);
         assert_eq!(parse_request("  # comment").unwrap(), None);
+    }
+
+    #[test]
+    fn intake_queue_wait_idle_observes_last_leave() {
+        let q = Arc::new(IntakeQueue::new(4));
+        assert!(q.wait_idle(Duration::from_millis(1)), "empty queue is idle");
+        let held = q.try_enter().expect("slot");
+        assert!(
+            !q.wait_idle(Duration::from_millis(20)),
+            "held permit must time the wait out"
+        );
+        let q2 = Arc::clone(&q);
+        let releaser = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            drop(held);
+        });
+        assert!(
+            q.wait_idle(Duration::from_secs(10)),
+            "wait_idle must wake on the releasing drop"
+        );
+        releaser.join().unwrap();
+        let _ = q2;
     }
 
     #[test]
@@ -929,5 +1285,36 @@ mod tests {
     #[test]
     fn escape_msg_keeps_errors_single_line() {
         assert_eq!(escape_msg("a\nb\r\nc"), "a; b; c");
+    }
+
+    #[test]
+    fn err_line_carries_the_retry_verdict() {
+        let full = err_line(7, &JobError::QueueFull { capacity: 4 });
+        assert_eq!(
+            full,
+            "ERR id=7 retry=true msg=intake queue full (capacity 4); retry later"
+        );
+        let parse = err_line(3, &JobError::Parse("bad key".to_string()));
+        assert_eq!(parse, "ERR id=3 retry=false msg=bad key");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_finite() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(200);
+        let mut a = Backoff::new(base, cap, 8, 42);
+        let mut b = Backoff::new(base, cap, 8, 42);
+        let mut delays = Vec::new();
+        while let Some(d) = a.next_delay() {
+            assert_eq!(Some(d), b.next_delay(), "same seed, same schedule");
+            assert!(d >= base && d <= cap, "delay {d:?} out of [base, cap]");
+            delays.push(d);
+        }
+        assert_eq!(delays.len(), 8, "budget must be exactly max_retries");
+        assert!(a.next_delay().is_none(), "exhausted budget stays exhausted");
+        // A different seed should produce a different (jittered) schedule.
+        let mut c = Backoff::new(base, cap, 8, 43);
+        let other: Vec<_> = std::iter::from_fn(|| c.next_delay()).collect();
+        assert_ne!(delays, other, "jitter must depend on the seed");
     }
 }

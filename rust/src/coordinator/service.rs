@@ -20,15 +20,35 @@
 //! sink I/O errors surface through each sink's `try_finish()` and are
 //! reported as job failures.
 //!
-//! # Fault boundaries
+//! # Failure model
 //!
-//! Every job is a hard fault boundary: [`run_job_guarded`] wraps
-//! execution in `catch_unwind`, so a panicking sampler or sink becomes
-//! *that job's* error result (`service.panics` counter) instead of a
-//! dead pool worker. [`JobSpec::parse_line`] rejects up front anything
-//! the samplers would panic on (`n = 0`, `n > u32::MAX`, duplicate
-//! keys), which is what makes the intake path safe to expose over a
-//! socket ([`super::server`]).
+//! Every job is a hard fault *and* liveness boundary, and every failure
+//! is typed ([`JobError`]) so callers can tell load from bugs:
+//!
+//! * **Panics** — [`run_job_guarded`] wraps execution in `catch_unwind`,
+//!   so a panicking sampler or sink becomes *that job's*
+//!   [`JobError::Panic`] (`service.panics` counter) instead of a dead
+//!   pool worker; expected per-job panics are kept off the server's
+//!   stderr by [`with_quiet_panics`]. [`JobSpec::parse_line`] rejects up
+//!   front anything the samplers would panic on (`n = 0`,
+//!   `n > u32::MAX`, `timeout_ms = 0`/overflow, duplicate keys), which
+//!   is what makes the intake path safe to expose over a socket
+//!   ([`super::server`]).
+//! * **Cancellation and deadlines** — [`run_job_ctl`] threads a
+//!   [`CancelToken`] through a [`GuardedSink`] wrapped around whichever
+//!   sink the job streams into, so a cancelled or deadline-expired job
+//!   (its own `timeout_ms=`, the server cap, a client disconnect, a
+//!   drain) aborts within one check interval and reports
+//!   [`JobError::Cancelled`] / [`JobError::DeadlineExceeded`]
+//!   (`service.cancelled` / `service.deadline_exceeded` counters). A
+//!   cancelled job never reports success: the guard re-checks in
+//!   `finish`.
+//! * **Sink I/O errors** — stashed by the sink on the hot path,
+//!   surfaced by `try_finish()` as [`JobError::Io`] (retryable).
+//! * **Retryability** — [`JobError::retryable`] is the contract clients
+//!   key their backoff on: load/liveness failures (cancelled,
+//!   queue-full, draining, I/O) are retryable; request/bug failures
+//!   (parse, deadline, panic) are fatal.
 //!
 //! # Metrics
 //!
@@ -46,9 +66,11 @@ use std::sync::Arc;
 use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::model::params::InitiatorMatrix;
 use crate::sampler::{
-    CollectSink, EdgeSink, HybridSampler, MagmBdpSampler, MagmSimpleSampler, QuiltingSampler,
-    Sampler, TsvSink,
+    CollectSink, EdgeSink, GuardedSink, HybridSampler, MagmBdpSampler, MagmSimpleSampler,
+    QuiltingSampler, Sampler, TsvSink,
 };
+use crate::util::cancel::{catch_cancel, with_quiet_panics, CancelToken};
+use crate::util::error::JobError;
 use crate::util::metrics::Registry;
 use crate::util::rng::{SeedableRng, Xoshiro256pp};
 use crate::util::threadpool::ThreadPool;
@@ -137,6 +159,10 @@ pub struct JobSpec {
     pub output: Option<String>,
     /// File format of `output` (default TSV).
     pub format: OutputFormat,
+    /// Per-job deadline in milliseconds (`timeout_ms=` intake key). The
+    /// network server additionally applies its own default cap; the
+    /// effective deadline is the tighter of the two.
+    pub timeout_ms: Option<u64>,
 }
 
 impl JobSpec {
@@ -145,6 +171,11 @@ impl JobSpec {
     /// reject anything bigger (and `n=0`) up front — a spec that panics a
     /// pool worker instead of failing its own job is a service bug.
     pub const MAX_NODES: u64 = u32::MAX as u64;
+
+    /// Largest accepted `timeout_ms=`: 24 hours. Bounds `Instant`
+    /// deadline arithmetic far away from overflow and catches trace-file
+    /// typos (`timeout_ms=99999999999`) the way the `n=` cap does.
+    pub const MAX_TIMEOUT_MS: u64 = 86_400_000;
 
     /// Parse `theta=a,b,c,d d=12 mu=0.4 n=4096 seed=7 algo=magm-bdp
     /// output=/tmp/e.tsv format=tsv`. Unknown keys and duplicate keys are
@@ -160,6 +191,7 @@ impl JobSpec {
         let mut algo = Algo::MagmBdp;
         let mut output: Option<String> = None;
         let mut format = OutputFormat::Tsv;
+        let mut timeout_ms: Option<u64> = None;
         let mut seen: Vec<&str> = Vec::new();
         for tok in line.split_whitespace() {
             let (k, v) = tok
@@ -191,6 +223,10 @@ impl JobSpec {
                     format = OutputFormat::parse(v)
                         .ok_or_else(|| format!("job {id}: unknown format {v} (tsv|bin)"))?
                 }
+                "timeout_ms" => {
+                    timeout_ms =
+                        Some(v.parse().map_err(|e| format!("job {id}: timeout_ms: {e}"))?)
+                }
                 _ => return Err(format!("job {id}: unknown key {k:?}")),
             }
         }
@@ -212,6 +248,17 @@ impl JobSpec {
                 Self::MAX_NODES
             ));
         }
+        if let Some(t) = timeout_ms {
+            if t == 0 {
+                return Err(format!("job {id}: timeout_ms must be at least 1"));
+            }
+            if t > Self::MAX_TIMEOUT_MS {
+                return Err(format!(
+                    "job {id}: timeout_ms={t} exceeds the maximum {} (24h)",
+                    Self::MAX_TIMEOUT_MS
+                ));
+            }
+        }
         Ok(JobSpec {
             id,
             theta,
@@ -223,12 +270,18 @@ impl JobSpec {
             collect_graph: false,
             output,
             format,
+            timeout_ms,
         })
     }
 
     /// The MAGM this job samples from.
     pub fn params(&self) -> MagmParams {
         MagmParams::replicated(self.theta, self.d, self.mu, self.n)
+    }
+
+    /// The requested per-job deadline as a duration, if any.
+    pub fn timeout(&self) -> Option<std::time::Duration> {
+        self.timeout_ms.map(std::time::Duration::from_millis)
     }
 }
 
@@ -256,7 +309,9 @@ pub struct JobResult {
     /// last-writer-wins per-job gauge is meaningless when `run_all`
     /// workers finish concurrently.
     pub edges_per_sec: f64,
-    pub error: Option<String>,
+    /// Typed failure, `None` on success. `Display` gives the wire/user
+    /// message; [`JobError::retryable`] drives client backoff.
+    pub error: Option<JobError>,
 }
 
 /// The service: a fixed worker pool + metrics registry.
@@ -374,18 +429,29 @@ fn stream_job<W: std::io::Write>(
     format: OutputFormat,
     metrics: &Registry,
     label: &str,
-) -> Result<JobOutcome, String> {
+    token: &CancelToken,
+) -> Result<JobOutcome, JobError> {
     let (counts, bytes) = match format {
         OutputFormat::Tsv => {
             let mut sink = TsvSink::new(writer);
-            let counts = sample_job_into(spec, params, assignment, rng, &mut sink, metrics)?;
-            sink.try_finish().map_err(|e| format!("write {label}: {e}"))?;
+            let counts = {
+                let mut guarded = GuardedSink::new(&mut sink, token.clone());
+                sample_job_into(spec, params, assignment, rng, &mut guarded, metrics)
+                    .map_err(JobError::Other)?
+            };
+            sink.try_finish()
+                .map_err(|e| JobError::Io(format!("write {label}: {e}")))?;
             (counts, sink.bytes)
         }
         OutputFormat::Binary => {
             let mut sink = crate::graph::io::BinaryEdgeSink::new(writer, params.n());
-            let counts = sample_job_into(spec, params, assignment, rng, &mut sink, metrics)?;
-            sink.try_finish().map_err(|e| format!("write {label}: {e}"))?;
+            let counts = {
+                let mut guarded = GuardedSink::new(&mut sink, token.clone());
+                sample_job_into(spec, params, assignment, rng, &mut guarded, metrics)
+                    .map_err(JobError::Other)?
+            };
+            sink.try_finish()
+                .map_err(|e| JobError::Io(format!("write {label}: {e}")))?;
             (counts, sink.bytes)
         }
     };
@@ -407,64 +473,94 @@ pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
 /// the job's edges are streamed into that writer in the given format
 /// (`spec.output` is ignored). This is how the network server sends
 /// `MAGBDP01`/TSV payloads back over the socket through the same
-/// sink-first path that writes local files.
+/// sink-first path that writes local files. The job runs under a fresh
+/// token carrying the spec's own `timeout_ms=` deadline, if any.
 pub fn run_job_with(
     spec: &JobSpec,
     metrics: &Registry,
     respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
 ) -> JobResult {
+    run_job_ctl(spec, metrics, respond, &CancelToken::with_timeout(spec.timeout()))
+}
+
+/// [`run_job_with`] under an externally supplied [`CancelToken`] — the
+/// network server passes a per-job child of its connection token here,
+/// so client disconnects, server drains and the server-side timeout cap
+/// all abort the job through one mechanism. `spec.timeout_ms` is *not*
+/// re-applied; the caller owns deadline composition.
+pub fn run_job_ctl(
+    spec: &JobSpec,
+    metrics: &Registry,
+    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+    token: &CancelToken,
+) -> JobResult {
     let t = std::time::Instant::now();
     let params = spec.params();
-    let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
-    let assignment = params.sample_attributes(&mut rng);
 
-    let outcome: Result<JobOutcome, String> = (|| {
-        if let Some((writer, format)) = respond {
-            // Socket response mode: edges stream back to the client.
-            return stream_job(
-                spec,
-                &params,
-                &assignment,
-                &mut rng,
-                writer,
-                format,
-                metrics,
-                "response",
-            );
-        }
-        match &spec.output {
-            None => {
-                // In-memory mode: collect, then derive the simple graph.
-                let mut sink = CollectSink::new(params.n());
-                let (proposed, edges) =
-                    sample_job_into(spec, &params, &assignment, &mut rng, &mut sink, metrics)?;
-                let simple = sink.graph.into_simple();
-                Ok(JobOutcome {
-                    proposed,
-                    edges,
-                    edges_simple: simple.num_edges() as u64,
-                    edges_list: spec.collect_graph.then_some(simple),
-                    bytes_written: 0,
-                })
+    let outcome: Result<JobOutcome, JobError> = match token.check() {
+        // Queue wait already burned the budget: fail before any work.
+        Err(kind) => Err(kind.into()),
+        Ok(()) => catch_cancel(|| {
+            let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+            let assignment = params.sample_attributes(&mut rng);
+            if let Err(kind) = token.check() {
+                // Attribute sampling is O(n·d) and unguarded; re-check
+                // before committing to the edge stream.
+                return Err(kind.into());
             }
-            Some(path) => {
-                // Streaming mode: edges go straight to disk; memory stays
-                // O(write buffer) however many edges the job emits.
-                let file = std::fs::File::create(path)
-                    .map_err(|e| format!("create {path}: {e}"))?;
-                stream_job(
+            if let Some((writer, format)) = respond {
+                // Socket response mode: edges stream back to the client.
+                return stream_job(
                     spec,
                     &params,
                     &assignment,
                     &mut rng,
-                    file,
-                    spec.format,
+                    writer,
+                    format,
                     metrics,
-                    path,
-                )
+                    "response",
+                    token,
+                );
             }
-        }
-    })();
+            match &spec.output {
+                None => {
+                    // In-memory mode: collect, then derive the simple graph.
+                    let mut sink = CollectSink::new(params.n());
+                    let (proposed, edges) = {
+                        let mut guarded = GuardedSink::new(&mut sink, token.clone());
+                        sample_job_into(spec, &params, &assignment, &mut rng, &mut guarded, metrics)
+                            .map_err(JobError::Other)?
+                    };
+                    let simple = sink.graph.into_simple();
+                    Ok(JobOutcome {
+                        proposed,
+                        edges,
+                        edges_simple: simple.num_edges() as u64,
+                        edges_list: spec.collect_graph.then_some(simple),
+                        bytes_written: 0,
+                    })
+                }
+                Some(path) => {
+                    // Streaming mode: edges go straight to disk; memory stays
+                    // O(write buffer) however many edges the job emits.
+                    let file = std::fs::File::create(path)
+                        .map_err(|e| JobError::Io(format!("create {path}: {e}")))?;
+                    stream_job(
+                        spec,
+                        &params,
+                        &assignment,
+                        &mut rng,
+                        file,
+                        spec.format,
+                        metrics,
+                        path,
+                        token,
+                    )
+                }
+            }
+        })
+        .unwrap_or_else(|kind| Err(kind.into())),
+    };
 
     let wall = t.elapsed();
     metrics.counter("service.jobs").inc();
@@ -496,6 +592,13 @@ pub fn run_job_with(
         }
         Err(e) => {
             metrics.counter("service.errors").inc();
+            match &e {
+                JobError::Cancelled => metrics.counter("service.cancelled").inc(),
+                JobError::DeadlineExceeded => {
+                    metrics.counter("service.deadline_exceeded").inc()
+                }
+                _ => {}
+            }
             set_aggregate_rate(metrics);
             error_result(spec, wall, e)
         }
@@ -514,7 +617,7 @@ fn set_aggregate_rate(metrics: &Registry) {
         .set(edges as f64 / busy_secs.max(1e-9));
 }
 
-fn error_result(spec: &JobSpec, wall: std::time::Duration, error: String) -> JobResult {
+fn error_result(spec: &JobSpec, wall: std::time::Duration, error: JobError) -> JobResult {
     JobResult {
         id: spec.id,
         algo: spec.algo.label(),
@@ -535,20 +638,35 @@ fn error_result(spec: &JobSpec, wall: std::time::Duration, error: String) -> Job
 /// sink) is caught with `catch_unwind` and converted into this job's
 /// error result — a hard requirement for a long-lived service, where one
 /// bad job must never take out a pool worker or a client connection.
-/// Panics increment `service.errors` and `service.panics`.
+/// Panics increment `service.errors` and `service.panics`. The boundary
+/// runs under [`with_quiet_panics`]: a per-job panic is an *expected*
+/// fault here, handled and counted, so it must not spray a backtrace to
+/// the server's stderr (process-level panics elsewhere still do).
 pub fn run_job_guarded_with(
     spec: &JobSpec,
     metrics: &Registry,
     respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
 ) -> JobResult {
+    run_job_guarded_ctl(spec, metrics, respond, &CancelToken::with_timeout(spec.timeout()))
+}
+
+/// [`run_job_ctl`] behind the same panic boundary.
+pub fn run_job_guarded_ctl(
+    spec: &JobSpec,
+    metrics: &Registry,
+    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+    token: &CancelToken,
+) -> JobResult {
     let t = std::time::Instant::now();
-    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_job_with(spec, metrics, respond)
-    })) {
+    match with_quiet_panics(|| {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job_ctl(spec, metrics, respond, token)
+        }))
+    }) {
         Ok(result) => result,
         Err(payload) => {
             let wall = t.elapsed();
-            // `run_job_with` only records its metrics on normal return,
+            // `run_job_ctl` only records its metrics on normal return,
             // so none of these double-count.
             metrics.counter("service.jobs").inc();
             metrics.counter("service.errors").inc();
@@ -559,7 +677,7 @@ pub fn run_job_guarded_with(
             metrics
                 .counter("service.busy_ns")
                 .add(wall.as_nanos().min(u64::MAX as u128) as u64);
-            error_result(spec, wall, format!("panic: {}", panic_message(&payload)))
+            error_result(spec, wall, JobError::Panic(panic_message(&payload)))
         }
     }
 }
@@ -636,6 +754,75 @@ mod tests {
     }
 
     #[test]
+    fn parse_line_validates_timeout_ms() {
+        let j = JobSpec::parse_line(0, "d=6 timeout_ms=250").unwrap();
+        assert_eq!(j.timeout_ms, Some(250));
+        assert_eq!(j.timeout(), Some(std::time::Duration::from_millis(250)));
+        assert!(JobSpec::parse_line(0, "d=6").unwrap().timeout_ms.is_none());
+        let err = JobSpec::parse_line(0, "d=6 timeout_ms=0").unwrap_err();
+        assert!(err.contains("at least 1"), "{err}");
+        let err = JobSpec::parse_line(0, "d=6 timeout_ms=86400001").unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+        // Values that do not even fit u64 fail at parse.
+        assert!(JobSpec::parse_line(0, "d=6 timeout_ms=99999999999999999999999").is_err());
+        assert!(JobSpec::parse_line(0, "d=6 timeout_ms=5 timeout_ms=9").is_err());
+    }
+
+    #[test]
+    fn pre_cancelled_token_fails_job_without_sampling() {
+        let spec = JobSpec::parse_line(0, "d=6 mu=0.5 seed=1").unwrap();
+        let metrics = Registry::new();
+        let token = CancelToken::new();
+        token.cancel();
+        let r = run_job_ctl(&spec, &metrics, None, &token);
+        assert_eq!(r.error, Some(JobError::Cancelled));
+        assert_eq!(r.edges, 0);
+        assert_eq!(metrics.counter("service.cancelled").get(), 1);
+        assert_eq!(metrics.counter("service.errors").get(), 1);
+        assert_eq!(metrics.counter("service.jobs").get(), 1);
+    }
+
+    #[test]
+    fn expired_deadline_fails_job_as_deadline_exceeded() {
+        let spec = JobSpec::parse_line(0, "d=6 mu=0.5 seed=1").unwrap();
+        let metrics = Registry::new();
+        let token = CancelToken::with_timeout(Some(std::time::Duration::ZERO));
+        let r = run_job_ctl(&spec, &metrics, None, &token);
+        assert_eq!(r.error, Some(JobError::DeadlineExceeded));
+        assert_eq!(metrics.counter("service.deadline_exceeded").get(), 1);
+        // And the spec-carried form through the public entry point:
+        let spec = JobSpec::parse_line(1, "d=14 mu=0.6 seed=5 timeout_ms=1").unwrap();
+        let r = run_job_with(&spec, &metrics, None);
+        assert_eq!(r.error, Some(JobError::DeadlineExceeded), "{:?}", r.error);
+        assert!(!r.error.unwrap().retryable(), "same spec would expire again");
+    }
+
+    #[test]
+    fn mid_stream_cancellation_aborts_promptly() {
+        // A job big enough to stream for a while (d=15 → n=32768); the
+        // killer cancels almost immediately, so the guard must trip
+        // somewhere in the edge stream (or at the pre-stream re-check).
+        let spec = JobSpec::parse_line(0, "d=15 mu=0.6 seed=5").unwrap();
+        let metrics = Registry::new();
+        let token = CancelToken::new();
+        let killer = {
+            let token = token.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                token.cancel();
+            })
+        };
+        let r = run_job_ctl(&spec, &metrics, None, &token);
+        killer.join().unwrap();
+        assert_eq!(r.error, Some(JobError::Cancelled), "{:?}", r.error);
+        assert_eq!(metrics.counter("service.cancelled").get(), 1);
+        // The boundary holds: the same spec runs clean on a fresh token.
+        let ok = run_job_ctl(&spec, &metrics, None, &CancelToken::new());
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert!(ok.edges > 0);
+    }
+
+    #[test]
     fn guarded_run_converts_panics_into_job_errors() {
         // Bypass parse_line's validation to hit the sampler assert the
         // way a pre-fix trace line would have.
@@ -644,8 +831,10 @@ mod tests {
         let metrics = Registry::new();
         let r = run_job_guarded(&spec, &metrics);
         let err = r.error.expect("panic surfaces as a job error");
-        assert!(err.starts_with("panic:"), "{err}");
-        assert!(err.contains("u32"), "{err}");
+        assert!(matches!(err, JobError::Panic(_)), "{err:?}");
+        assert!(err.to_string().starts_with("panic:"), "{err}");
+        assert!(err.to_string().contains("u32"), "{err}");
+        assert!(!err.retryable(), "panics are bugs, not load");
         assert_eq!(metrics.counter("service.jobs").get(), 1);
         assert_eq!(metrics.counter("service.errors").get(), 1);
         assert_eq!(metrics.counter("service.panics").get(), 1);
@@ -668,7 +857,7 @@ mod tests {
         let results = svc.run_all(specs);
         assert_eq!(results.len(), 3);
         assert!(results[0].error.is_none());
-        assert!(results[1].error.as_deref().unwrap_or("").starts_with("panic:"));
+        assert!(matches!(results[1].error, Some(JobError::Panic(_))));
         assert!(results[2].error.is_none());
         assert_eq!(svc.metrics().counter("service.panics").get(), 1);
         // Workers survived: the pool still executes a fresh batch.
@@ -752,7 +941,9 @@ mod tests {
         let metrics = Registry::new();
         let r = run_job(&spec, &metrics);
         let err = r.error.expect("create failure surfaces as a job error");
-        assert!(err.contains("create"), "{err}");
+        assert!(matches!(err, JobError::Io(_)), "{err:?}");
+        assert!(err.to_string().contains("create"), "{err}");
+        assert!(err.retryable(), "I/O failures are retryable");
         assert_eq!(metrics.counter("service.errors").get(), 1);
     }
 

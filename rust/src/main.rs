@@ -196,7 +196,33 @@ fn run_stream_algo<S: EdgeSink + Send>(
     }
 }
 
-/// The sink-first `sample --out` path: edges stream to `path` (`.bin` ⇒
+/// [`run_stream_algo`] under an optional wall-clock deadline: the sink
+/// is wrapped in a [`GuardedSink`](magbdp::sampler::GuardedSink) so the
+/// stream aborts within one check interval of expiry, surfacing as a
+/// plain CLI error instead of a partial success.
+#[allow(clippy::too_many_arguments)]
+fn run_stream_algo_deadline<S: EdgeSink + Send>(
+    params: &MagmParams,
+    assignment: &magbdp::model::AttributeAssignment,
+    rng: &mut Xoshiro256pp,
+    seed: u64,
+    threads: usize,
+    algo: &str,
+    sink: &mut S,
+    timeout: Option<std::time::Duration>,
+) -> Result<(&'static str, u64, u64), String> {
+    let Some(timeout) = timeout else {
+        return run_stream_algo(params, assignment, rng, seed, threads, algo, sink);
+    };
+    let token = magbdp::util::cancel::CancelToken::with_timeout(Some(timeout));
+    let mut guarded = magbdp::sampler::GuardedSink::new(&mut *sink, token);
+    magbdp::util::cancel::catch_cancel(|| {
+        run_stream_algo(params, assignment, rng, seed, threads, algo, &mut guarded)
+    })
+    .map_err(|kind| format!("sampling aborted: {} after {timeout:?}", kind.label()))?
+}
+
+/// Stream the sampled multi-edge list straight to `path` (`.bin` selects
 /// the binary edge-list format, anything else TSV) without building a
 /// graph. Single-threaded runs stream with O(write buffer) memory; with
 /// `--threads N` the sharded path still buffers per-shard edge lists so
@@ -212,19 +238,22 @@ fn cmd_sample_stream(
     threads: usize,
     algo: &str,
     path: &str,
+    timeout: Option<std::time::Duration>,
 ) -> Result<(), String> {
     let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
     let t = std::time::Instant::now();
     let (name, proposed, accepted, bytes) = if path.ends_with(".bin") {
         let mut sink = io::BinaryEdgeSink::new(file, params.n());
-        let (name, p, a) =
-            run_stream_algo(params, assignment, rng, seed, threads, algo, &mut sink)?;
+        let (name, p, a) = run_stream_algo_deadline(
+            params, assignment, rng, seed, threads, algo, &mut sink, timeout,
+        )?;
         sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
         (name, p, a, sink.bytes)
     } else {
         let mut sink = magbdp::sampler::TsvSink::new(file);
-        let (name, p, a) =
-            run_stream_algo(params, assignment, rng, seed, threads, algo, &mut sink)?;
+        let (name, p, a) = run_stream_algo_deadline(
+            params, assignment, rng, seed, threads, algo, &mut sink, timeout,
+        )?;
         sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
         (name, p, a, sink.bytes)
     };
@@ -263,6 +292,11 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
             "stream the multi-edge list here (.bin = binary, else TSV)",
             None,
         )
+        .opt(
+            "timeout",
+            "abort sampling after this many milliseconds",
+            None,
+        )
         .flag("degrees", "print the out-degree histogram head (collects in memory)");
     let Some(args) = parse_or_help(&cmd, tokens)? else {
         return Ok(());
@@ -270,6 +304,16 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let seed: u64 = args.u64("seed").map_err(|e| e.to_string())?;
     let threads: usize = args.usize("threads").map_err(|e| e.to_string())?;
     let algo = args.str("algo").map_err(|e| e.to_string())?.to_string();
+    let timeout = match args.get("timeout") {
+        Some(_) => {
+            let ms = args.u64("timeout").map_err(|e| e.to_string())?;
+            if ms == 0 {
+                return Err("--timeout must be at least 1 ms".into());
+            }
+            Some(std::time::Duration::from_millis(ms))
+        }
+        None => None,
+    };
 
     let params = match args.get("config") {
         Some(path) => params_from_config(path)?,
@@ -293,46 +337,27 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
 
     // Pure streaming mode: never materialise the graph.
     if let (Some(path), false) = (&out, degrees) {
-        return cmd_sample_stream(&params, &assignment, &mut rng, seed, threads, &algo, path);
+        return cmd_sample_stream(
+            &params, &assignment, &mut rng, seed, threads, &algo, path, timeout,
+        );
     }
 
+    // Collect mode runs through the same streaming dispatch with a
+    // CollectSink terminal, so --timeout and --threads behave
+    // identically whether or not the graph is materialised.
     let t = std::time::Instant::now();
-    let (name, graph, proposed): (&str, magbdp::graph::MultiEdgeList, u64) = match algo.as_str() {
-        "magm-bdp" => {
-            let s = magbdp::sampler::MagmBdpSampler::new(&params, &assignment);
-            if threads > 1 {
-                (s.name(), s.sample_parallel(seed, threads), 0)
-            } else {
-                let (g, p, _) = s.sample_counted(&mut rng);
-                (s.name(), g, p)
-            }
-        }
-        "magm-bdp-xla" => {
-            let s = magbdp::sampler::MagmBdpSampler::new(&params, &assignment);
-            let mut backend = magbdp::runtime::XlaAccept::new(&params, s.index())
-                .map_err(|e| format!("{e:#}"))?;
-            let batch = backend.batch_capacity();
-            let (g, p, _) = s.sample_batched(&mut rng, &mut backend, batch);
-            ("magm-bdp-xla", g, p)
-        }
-        "simple" => {
-            let s = magbdp::sampler::MagmSimpleSampler::new(&params, &assignment);
-            let (g, p, _) = s.sample_counted(&mut rng);
-            (s.name(), g, p)
-        }
-        "quilting" => {
-            let s = magbdp::sampler::QuiltingSampler::new(&params, &assignment, &mut rng);
-            let (g, p, _) = s.sample_counted(&mut rng);
-            (s.name(), g, p)
-        }
-        "hybrid" => {
-            let s = HybridSampler::new(&params, &assignment, &mut rng);
-            let g = s.sample(&mut rng);
-            println!("hybrid choice: {}", s.choice().label());
-            ("hybrid", g, 0)
-        }
-        other => return Err(format!("unknown algo {other:?}")),
-    };
+    let mut collect = magbdp::sampler::CollectSink::new(params.n());
+    let (name, proposed, _accepted) = run_stream_algo_deadline(
+        &params,
+        &assignment,
+        &mut rng,
+        seed,
+        threads,
+        &algo,
+        &mut collect,
+        timeout,
+    )?;
+    let graph = collect.graph;
     let wall = t.elapsed();
 
     let multi_edges = graph.num_edges();
@@ -567,21 +592,34 @@ modes:
 
 wire protocol (--listen):
   requests:  one job per line in the trace grammar (d=, mu=, n=, seed=,
-             algo=, ...) plus `id=<u64>` (correlation id) and
-             `respond=none|tsv|bin` (stream edges back instead of `OK`);
-             control lines PING, METRICS, QUIT; `#` comments ignored.
-  responses: `OK id=.. edges=..` | `ERR id=.. msg=..` |
+             algo=, timeout_ms=, ...) plus `id=<u64>` (correlation id)
+             and `respond=none|tsv|bin` (stream edges back instead of
+             `OK`); control lines PING, METRICS, QUIT, DRAIN; `#`
+             comments ignored.
+  responses: `OK id=.. edges=..` | `ERR id=.. retry=<bool> msg=..` |
              `CHUNK id=.. bytes=<k>` + k raw bytes + newline, ending in
-             `END id=.. format=.. bytes=..` | `METRICS bytes=<k>` + body
-             (Prometheus text exposition) | `PONG`.
+             `END id=.. format=.. bytes=..` | `DRAINING queued=<n>` |
+             `METRICS bytes=<k>` + body (Prometheus text exposition) |
+             `PONG`.
   A full queue rejects jobs with `ERR ... intake queue full` instead of
   buffering unboundedly; parse errors and sampler panics fail only their
   own job — the pool and the connection always survive.
 
+deadlines and shutdown:
+  every job runs under the tighter of its own `timeout_ms=` and
+  --job-timeout, measured from dispatch; an expired job fails with a
+  non-retryable `ERR ... deadline exceeded`. A disconnecting client
+  cancels its in-flight jobs. `DRAIN` (or SIGTERM-style shutdown)
+  stops intake, finishes queued jobs within --drain-timeout, then
+  cancels stragglers with retryable `ERR`s. `retry=true` marks
+  failures worth resubmitting (queue full, draining, cancelled) —
+  back off with jitter; `retry=false` ones will fail again.
+
 examples:
   magbdp serve --jobs trace.txt --stats
   magbdp serve --listen 127.0.0.1:7711 --queue 256 --max-conns 64
-  printf 'id=1 d=10 mu=0.4 seed=7 respond=bin\\n' | nc 127.0.0.1 7711
+  magbdp serve --listen 127.0.0.1:7711 --job-timeout 60000 --drain-timeout 2000
+  printf 'id=1 d=10 mu=0.4 seed=7 timeout_ms=5000 respond=bin\\n' | nc 127.0.0.1 7711
 ";
 
 fn cmd_serve(tokens: &[String]) -> Result<(), String> {
@@ -591,6 +629,17 @@ fn cmd_serve(tokens: &[String]) -> Result<(), String> {
         .opt("threads", "worker threads (0 = all cores)", Some("0"))
         .opt("queue", "max queued+running jobs before rejection", Some("256"))
         .opt("max-conns", "max concurrent client connections", Some("64"))
+        .opt("io-timeout", "socket read/write timeout in ms (0 = none)", Some("30000"))
+        .opt(
+            "job-timeout",
+            "server-side deadline cap per job in ms (0 = uncapped)",
+            Some("600000"),
+        )
+        .opt(
+            "drain-timeout",
+            "grace for queued jobs on DRAIN in ms before cancelling",
+            Some("5000"),
+        )
         .flag("stats", "print the metrics registry after the run (--jobs mode)")
         .after_help(SERVE_HELP);
     let Some(args) = parse_or_help(&cmd, tokens)? else {
@@ -607,6 +656,9 @@ fn cmd_serve(tokens: &[String]) -> Result<(), String> {
                 threads: args.usize("threads").map_err(|e| e.to_string())?,
                 queue_capacity: args.usize("queue").map_err(|e| e.to_string())?,
                 max_connections: args.usize("max-conns").map_err(|e| e.to_string())?,
+                io_timeout_ms: args.u64("io-timeout").map_err(|e| e.to_string())?,
+                job_timeout_ms: args.u64("job-timeout").map_err(|e| e.to_string())?,
+                drain_timeout_ms: args.u64("drain-timeout").map_err(|e| e.to_string())?,
             };
             let server = magbdp::coordinator::JobServer::bind(&config)?;
             println!("listening on {}", server.local_addr()?);

@@ -34,8 +34,8 @@ pub use naive::{NaiveKpgmSampler, NaiveMagmSampler};
 pub use proposal::{Component, ProposalSet};
 pub use quilting::QuiltingSampler;
 pub use sink::{
-    CollectSink, CountSink, EdgeSink, FnWriter, ShardHandle, ShardedSink, TeeSink, TsvSink,
-    Unordered,
+    CollectSink, CountSink, EdgeSink, FnWriter, GuardedSink, ShardHandle, ShardedSink, TeeSink,
+    TsvSink, Unordered,
 };
 pub use undirected::UndirectedMagmSampler;
 

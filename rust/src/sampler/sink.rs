@@ -41,6 +41,15 @@
 //! `Result`-returning finisher the CLI and service propagate to their
 //! exit codes).
 //!
+//! Cancellation rides the same path: [`GuardedSink`] wraps any sink with
+//! a [`CancelToken`] checked every few pushes, aborting the enclosing
+//! `sample_into` by unwinding (see
+//! [`catch_cancel`](crate::util::cancel::catch_cancel)) — which bounds a
+//! cancelled or deadline-expired job's overrun to one check interval
+//! without touching any sampler's inner loop. [`ShardedSink`] propagates
+//! the terminal's token (via [`EdgeSink::cancel_token`]) into every
+//! [`ShardHandle`], so parallel shards abort just as promptly.
+//!
 //! [`MagmBdpSampler::sample_parallel_into`]:
 //!     crate::sampler::MagmBdpSampler::sample_parallel_into
 
@@ -48,6 +57,7 @@ use std::io::Write;
 use std::sync::Mutex;
 
 use crate::graph::MultiEdgeList;
+use crate::util::cancel::{cancel_unwind, CancelToken};
 
 /// Receives accepted edges as they are produced.
 pub trait EdgeSink {
@@ -63,6 +73,35 @@ pub trait EdgeSink {
     /// in shard order.
     fn order_sensitive(&self) -> bool {
         true
+    }
+
+    /// The cancellation token guarding this sink, if any. Adapters that
+    /// split one logical stream across threads ([`ShardedSink`]) use
+    /// this to carry the terminal's guard into their per-thread handles.
+    fn cancel_token(&self) -> Option<CancelToken> {
+        None
+    }
+}
+
+/// Sinks compose by mutable borrow: wrapping `&mut sink` in an adapter
+/// (e.g. [`GuardedSink`]) leaves the owner free to inspect the sink —
+/// counters, `try_finish()` — after the adapter is dropped.
+impl<S: EdgeSink + ?Sized> EdgeSink for &mut S {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        (**self).push(src, dst);
+    }
+
+    fn finish(&mut self) {
+        (**self).finish();
+    }
+
+    fn order_sensitive(&self) -> bool {
+        (**self).order_sensitive()
+    }
+
+    fn cancel_token(&self) -> Option<CancelToken> {
+        (**self).cancel_token()
     }
 }
 
@@ -219,6 +258,105 @@ impl<S: EdgeSink> EdgeSink for Unordered<S> {
     }
 }
 
+/// Default push interval between [`GuardedSink`] token checks: frequent
+/// enough that cancellation latency is microseconds on the hot path,
+/// sparse enough that the atomic load + clock read never shows up in a
+/// profile.
+const GUARD_CHECK_EVERY: usize = 1024;
+
+/// Wraps a sink with a [`CancelToken`] checked on the streaming path.
+///
+/// The *first* push checks (so a pre-cancelled or already-expired job
+/// aborts before doing any work), then every
+/// [`GUARD_CHECK_EVERY`]/`with_interval` pushes, and once more in
+/// [`finish`](EdgeSink::finish) — a cancelled job can never report
+/// success, however few edges it produced. On a tripped check the push
+/// is *not* delivered and the sink aborts the enclosing computation via
+/// [`cancel_unwind`]; run the sampling call under
+/// [`catch_cancel`](crate::util::cancel::catch_cancel) to convert the
+/// abort into `Err(CancelKind)`.
+///
+/// Wrap by mutable borrow to keep the inner sink inspectable afterwards:
+///
+/// ```ignore
+/// let mut sink = TsvSink::new(file);
+/// let counts = {
+///     let mut guarded = GuardedSink::new(&mut sink, token.clone());
+///     catch_cancel(|| sampler.sample_into(&mut rng, &mut guarded))
+/// };
+/// sink.try_finish()?; // inner sink still owned here
+/// ```
+pub struct GuardedSink<S: EdgeSink> {
+    inner: S,
+    token: CancelToken,
+    every: usize,
+    since: usize,
+}
+
+impl<S: EdgeSink> GuardedSink<S> {
+    pub fn new(inner: S, token: CancelToken) -> Self {
+        Self::with_interval(inner, token, GUARD_CHECK_EVERY)
+    }
+
+    /// Explicit check interval (tests use tiny intervals to exercise
+    /// mid-stream aborts).
+    pub fn with_interval(inner: S, token: CancelToken, every: usize) -> Self {
+        let every = every.max(1);
+        Self {
+            inner,
+            token,
+            every,
+            // Primed so the very first push performs a check.
+            since: every - 1,
+        }
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    pub fn token(&self) -> &CancelToken {
+        &self.token
+    }
+}
+
+impl<S: EdgeSink> EdgeSink for GuardedSink<S> {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        self.since += 1;
+        if self.since >= self.every {
+            self.since = 0;
+            if let Err(kind) = self.token.check() {
+                cancel_unwind(kind);
+            }
+        }
+        self.inner.push(src, dst);
+    }
+
+    fn finish(&mut self) {
+        if let Err(kind) = self.token.check() {
+            cancel_unwind(kind);
+        }
+        self.inner.finish();
+    }
+
+    fn order_sensitive(&self) -> bool {
+        self.inner.order_sensitive()
+    }
+
+    fn cancel_token(&self) -> Option<CancelToken> {
+        Some(self.token.clone())
+    }
+}
+
 /// Adapts a byte callback into a [`Write`], turning any consumer of
 /// byte slices into a sink target: each buffered spill of a [`TsvSink`]
 /// or [`crate::graph::io::BinaryEdgeSink`] arrives as one `f(chunk)`
@@ -265,6 +403,11 @@ pub struct ShardedSink<'a> {
     terminal: Mutex<&'a mut (dyn EdgeSink + Send)>,
     eager: bool,
     chunk: usize,
+    /// The terminal's guard (if it is a [`GuardedSink`] or forwards
+    /// one), captured at construction so every [`ShardHandle`] can check
+    /// it without touching the terminal lock.
+    token: Option<CancelToken>,
+    check_every: usize,
 }
 
 impl<'a> ShardedSink<'a> {
@@ -277,10 +420,13 @@ impl<'a> ShardedSink<'a> {
     pub fn with_chunk(terminal: &'a mut (dyn EdgeSink + Send), chunk: usize) -> Self {
         assert!(chunk > 0, "shard chunk must be positive");
         let eager = !terminal.order_sensitive();
+        let token = terminal.cancel_token();
         Self {
             terminal: Mutex::new(terminal),
             eager,
             chunk,
+            token,
+            check_every: chunk.min(GUARD_CHECK_EVERY),
         }
     }
 
@@ -289,6 +435,7 @@ impl<'a> ShardedSink<'a> {
         ShardHandle {
             owner: self,
             buf: Vec::new(),
+            since_check: self.check_every.saturating_sub(1),
         }
     }
 
@@ -316,6 +463,7 @@ impl<'a> ShardedSink<'a> {
 pub struct ShardHandle<'s, 'a> {
     owner: &'s ShardedSink<'a>,
     buf: Vec<(u32, u32)>,
+    since_check: usize,
 }
 
 impl ShardHandle<'_, '_> {
@@ -329,6 +477,18 @@ impl ShardHandle<'_, '_> {
 impl EdgeSink for ShardHandle<'_, '_> {
     #[inline]
     fn push(&mut self, src: u32, dst: u32) {
+        // Check the terminal's guard *before* ever taking the terminal
+        // lock, so a cancellation unwind never poisons the Mutex for
+        // sibling shards mid-flush.
+        if let Some(token) = &self.owner.token {
+            self.since_check += 1;
+            if self.since_check >= self.owner.check_every {
+                self.since_check = 0;
+                if let Err(kind) = token.check() {
+                    cancel_unwind(kind);
+                }
+            }
+        }
         self.buf.push((src, dst));
         if self.owner.eager && self.buf.len() >= self.owner.chunk {
             let mut terminal = self.owner.terminal.lock().unwrap();
@@ -341,6 +501,10 @@ impl EdgeSink for ShardHandle<'_, '_> {
 
     // finish() is a no-op: the terminal is finished exactly once by
     // `ShardedSink::finish` after every shard's residual is drained.
+
+    fn cancel_token(&self) -> Option<CancelToken> {
+        self.owner.token.clone()
+    }
 }
 
 #[cfg(test)]
@@ -509,6 +673,80 @@ mod tests {
             assert_eq!(s as usize, i / 10);
             assert_eq!(k as usize, i % 10);
         }
+    }
+
+    #[test]
+    fn guarded_sink_aborts_before_first_push_when_pre_cancelled() {
+        use crate::util::cancel::{catch_cancel, CancelKind};
+        let token = CancelToken::new();
+        token.cancel();
+        let mut count = CountSink::default();
+        let r = catch_cancel(|| {
+            let mut guarded = GuardedSink::new(&mut count, token);
+            guarded.push(1, 2);
+        });
+        assert_eq!(r, Err(CancelKind::Cancelled));
+        assert_eq!(count.edges, 0, "no edge may slip past a tripped guard");
+    }
+
+    #[test]
+    fn guarded_sink_reports_deadline_expiry() {
+        use crate::util::cancel::{catch_cancel, CancelKind};
+        let token = CancelToken::with_timeout(Some(std::time::Duration::ZERO));
+        let mut count = CountSink::default();
+        let r = catch_cancel(|| {
+            let mut guarded = GuardedSink::new(&mut count, token);
+            guarded.push(1, 2);
+        });
+        assert_eq!(r, Err(CancelKind::DeadlineExceeded));
+    }
+
+    #[test]
+    fn guarded_sink_aborts_mid_stream_within_one_interval() {
+        use crate::util::cancel::{catch_cancel, CancelKind};
+        let token = CancelToken::new();
+        let mut count = CountSink::default();
+        let r = catch_cancel(|| {
+            let mut guarded = GuardedSink::with_interval(&mut count, token.clone(), 4);
+            for k in 0..3u32 {
+                guarded.push(k, k);
+            }
+            token.cancel();
+            for k in 0..100u32 {
+                guarded.push(k, k); // must trip within 4 pushes
+            }
+        });
+        assert_eq!(r, Err(CancelKind::Cancelled));
+        assert!(count.edges <= 3 + 4, "overrun exceeded one check interval");
+    }
+
+    #[test]
+    fn guarded_finish_never_lets_a_cancelled_job_complete() {
+        use crate::util::cancel::{catch_cancel, CancelKind};
+        let token = CancelToken::new();
+        let mut count = CountSink::default();
+        let r = catch_cancel(|| {
+            let mut guarded = GuardedSink::new(&mut count, token.clone());
+            guarded.push(1, 2); // first-push check passes…
+            token.cancel();
+            guarded.finish(); // …but finish re-checks
+        });
+        assert_eq!(r, Err(CancelKind::Cancelled));
+    }
+
+    #[test]
+    fn sharded_handles_observe_the_terminal_guard() {
+        use crate::util::cancel::{catch_cancel, CancelKind};
+        let token = CancelToken::new();
+        token.cancel();
+        let mut guarded = GuardedSink::new(CountSink::default(), token);
+        let r = catch_cancel(|| {
+            let sharded = ShardedSink::with_chunk(&mut guarded, 4);
+            let mut h = sharded.shard();
+            h.push(1, 2);
+        });
+        assert_eq!(r, Err(CancelKind::Cancelled));
+        assert_eq!(guarded.inner().edges, 0);
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Cooperative cancellation and deadlines for the sampling pipeline.
+//!
+//! The samplers' hot loops know nothing about time or clients: they push
+//! edges into an [`EdgeSink`](crate::sampler::EdgeSink) until the sample
+//! is done. Cancellation therefore rides the sink path —
+//! [`GuardedSink`](crate::sampler::GuardedSink) checks a [`CancelToken`]
+//! every few pushes and aborts by *unwinding* with a typed payload
+//! ([`CancelUnwind`]), which [`catch_cancel`] converts back into a
+//! `Result` at the job boundary. That makes every `sample_into`
+//! implementation — including the parallel sharded path — abortable
+//! within one check interval without touching a single sampler inner
+//! loop.
+//!
+//! Tokens form a hierarchy: a server holds a root token, each connection
+//! a child, each job a grandchild (optionally deadline-bounded). A
+//! parent's `cancel()` is observed by every descendant, so "client
+//! disconnected" and "server draining" need no bookkeeping beyond the
+//! token tree.
+//!
+//! Unwinding is an implementation detail that must never reach a panic
+//! hook or a pool worker: [`catch_cancel`] is the one legitimate catcher,
+//! and [`with_quiet_panics`] keeps expected per-job panics (injected
+//! faults, cancellation unwinds) from spraying backtraces to a server's
+//! stderr while `service.panics` keeps counting.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Once};
+use std::time::{Duration, Instant};
+
+/// Why a guarded computation was aborted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelKind {
+    /// The token (or an ancestor) was explicitly cancelled — client
+    /// disconnect, server drain, operator action.
+    Cancelled,
+    /// The token's deadline passed.
+    DeadlineExceeded,
+}
+
+impl CancelKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            CancelKind::Cancelled => "cancelled",
+            CancelKind::DeadlineExceeded => "deadline exceeded",
+        }
+    }
+}
+
+/// Shared cancellation flag with an optional parent (checked on read, so
+/// cancelling a parent instantly cancels the whole subtree).
+#[derive(Debug, Default)]
+struct Flag {
+    cancelled: AtomicBool,
+    parent: Option<Arc<Flag>>,
+}
+
+impl Flag {
+    fn is_cancelled(&self) -> bool {
+        if self.cancelled.load(Ordering::Acquire) {
+            return true;
+        }
+        match &self.parent {
+            Some(p) => p.is_cancelled(),
+            None => false,
+        }
+    }
+}
+
+/// A cheaply clonable cancellation token with an optional deadline.
+///
+/// Clones share the same flag; [`child`](Self::child) creates a new flag
+/// whose cancellation state also observes this token's. Deadlines are
+/// per-token `Instant`s fixed at construction — a child's effective
+/// deadline is the *minimum* of its own and every ancestor's.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<Flag>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A fresh root token with no deadline.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh root token expiring `timeout` from now (`None` = never).
+    pub fn with_timeout(timeout: Option<Duration>) -> Self {
+        CancelToken {
+            flag: Arc::default(),
+            deadline: timeout.and_then(|t| Instant::now().checked_add(t)),
+        }
+    }
+
+    /// A child token: observes this token's cancellation and deadline,
+    /// and can additionally be cancelled on its own.
+    pub fn child(&self) -> Self {
+        self.child_with_timeout(None)
+    }
+
+    /// A child whose deadline is the earlier of the parent's and
+    /// `timeout` from now.
+    pub fn child_with_timeout(&self, timeout: Option<Duration>) -> Self {
+        let own = timeout.and_then(|t| Instant::now().checked_add(t));
+        let deadline = match (self.deadline, own) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        CancelToken {
+            flag: Arc::new(Flag {
+                cancelled: AtomicBool::new(false),
+                parent: Some(Arc::clone(&self.flag)),
+            }),
+            deadline,
+        }
+    }
+
+    /// Cancel this token and every descendant.
+    pub fn cancel(&self) {
+        self.flag.cancelled.store(true, Ordering::Release);
+    }
+
+    /// Has this token (or any ancestor) been cancelled?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.is_cancelled()
+    }
+
+    /// The effective deadline, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// `Err` if the computation should stop. Explicit cancellation wins
+    /// over deadline expiry when both hold (a drained job that also ran
+    /// out of time reports the drain).
+    pub fn check(&self) -> Result<(), CancelKind> {
+        if self.is_cancelled() {
+            return Err(CancelKind::Cancelled);
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                return Err(CancelKind::DeadlineExceeded);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The typed unwind payload [`cancel_unwind`] throws. Public so panic
+/// machinery (hooks, scoped-thread joiners) can recognise — and stay
+/// quiet about — cancellation unwinds.
+#[derive(Clone, Copy, Debug)]
+pub struct CancelUnwind(pub CancelKind);
+
+/// Abort the current computation by unwinding with a [`CancelUnwind`]
+/// payload. Only call under a [`catch_cancel`] boundary (the service's
+/// job runner); anywhere else the process' ordinary panic path applies.
+pub fn cancel_unwind(kind: CancelKind) -> ! {
+    install_filter_hook();
+    std::panic::panic_any(CancelUnwind(kind))
+}
+
+/// Run `f`, converting a [`cancel_unwind`] abort into `Err(kind)`.
+/// Genuine panics (anything whose payload is not [`CancelUnwind`]) are
+/// resumed untouched so outer `catch_unwind` boundaries — and their
+/// `service.panics` accounting — still see them.
+pub fn catch_cancel<T>(f: impl FnOnce() -> T) -> Result<T, CancelKind> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => match payload.downcast::<CancelUnwind>() {
+            Ok(cancel) => Err(cancel.0),
+            Err(payload) => resume_unwind(payload),
+        },
+    }
+}
+
+thread_local! {
+    /// Depth of nested [`with_quiet_panics`] scopes on this thread.
+    static QUIET_DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+static INSTALL_HOOK: Once = Once::new();
+
+/// Install (once, process-wide) a panic hook that wraps the previous one
+/// and suppresses output for *expected* panics: any [`CancelUnwind`]
+/// payload, and — while a [`with_quiet_panics`] scope is active on the
+/// panicking thread — every panic. A per-call `take_hook`/`set_hook`
+/// swap would race between concurrent pool workers, so the wrapping hook
+/// is permanent and the quiet state is scoped instead; outside those two
+/// cases it defers to the previously installed hook unchanged.
+fn install_filter_hook() {
+    INSTALL_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<CancelUnwind>().is_some() {
+                return;
+            }
+            if QUIET_DEPTH.with(Cell::get) > 0 {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Run `f` with panic-hook output suppressed on this thread (the panics
+/// still unwind and are still caught/counted by the caller — only the
+/// stderr backtrace spray is silenced). Used around guarded job
+/// execution, where a panicking sampler is an *expected*, per-job fault.
+pub fn with_quiet_panics<T>(f: impl FnOnce() -> T) -> T {
+    install_filter_hook();
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            QUIET_DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        }
+    }
+    QUIET_DEPTH.with(|d| d.set(d.get() + 1));
+    let _guard = Guard;
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_propagates_from_parent_to_child() {
+        let root = CancelToken::new();
+        let conn = root.child();
+        let job = conn.child();
+        assert!(job.check().is_ok());
+        root.cancel();
+        assert!(root.is_cancelled());
+        assert!(conn.is_cancelled());
+        assert_eq!(job.check(), Err(CancelKind::Cancelled));
+    }
+
+    #[test]
+    fn child_cancel_does_not_affect_parent_or_sibling() {
+        let root = CancelToken::new();
+        let a = root.child();
+        let b = root.child();
+        a.cancel();
+        assert!(a.is_cancelled());
+        assert!(!root.is_cancelled());
+        assert!(b.check().is_ok());
+    }
+
+    #[test]
+    fn deadline_expiry_reports_deadline_exceeded() {
+        let t = CancelToken::with_timeout(Some(Duration::ZERO));
+        assert_eq!(t.check(), Err(CancelKind::DeadlineExceeded));
+        let far = CancelToken::with_timeout(Some(Duration::from_secs(3600)));
+        assert!(far.check().is_ok());
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_expired_deadline() {
+        let t = CancelToken::with_timeout(Some(Duration::ZERO));
+        t.cancel();
+        assert_eq!(t.check(), Err(CancelKind::Cancelled));
+    }
+
+    #[test]
+    fn child_inherits_the_tighter_deadline() {
+        let expired = CancelToken::with_timeout(Some(Duration::ZERO));
+        let child = expired.child_with_timeout(Some(Duration::from_secs(3600)));
+        assert_eq!(child.check(), Err(CancelKind::DeadlineExceeded));
+        let lax = CancelToken::new();
+        let bounded = lax.child_with_timeout(Some(Duration::ZERO));
+        assert_eq!(bounded.check(), Err(CancelKind::DeadlineExceeded));
+        assert!(lax.check().is_ok(), "child deadlines never leak upward");
+    }
+
+    #[test]
+    fn catch_cancel_converts_cancel_unwinds_only() {
+        let r: Result<u32, CancelKind> = catch_cancel(|| 7);
+        assert_eq!(r, Ok(7));
+        let r: Result<(), CancelKind> =
+            catch_cancel(|| cancel_unwind(CancelKind::DeadlineExceeded));
+        assert_eq!(r, Err(CancelKind::DeadlineExceeded));
+        // A genuine panic passes through to the outer catch_unwind.
+        let outer = catch_unwind(AssertUnwindSafe(|| {
+            let _ = catch_cancel(|| -> () { panic!("real bug") });
+        }));
+        let payload = outer.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"real bug"));
+    }
+
+    #[test]
+    fn quiet_panics_scope_nests_and_returns_values() {
+        let v = with_quiet_panics(|| with_quiet_panics(|| 41) + 1);
+        assert_eq!(v, 42);
+        QUIET_DEPTH.with(|d| assert_eq!(d.get(), 0, "scopes must unwind the depth"));
+        // Panics inside the scope still unwind and are catchable.
+        let r = with_quiet_panics(|| catch_unwind(AssertUnwindSafe(|| panic!("quiet"))));
+        assert!(r.is_err());
+    }
+}

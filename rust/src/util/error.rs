@@ -103,6 +103,87 @@ macro_rules! ensure {
     };
 }
 
+/// Why a service job failed — typed so callers (the wire protocol, the
+/// CLI replay loop, retry logic) can distinguish fault classes instead
+/// of grepping message strings.
+///
+/// The [`Display`](fmt::Display) strings are the wire/user-facing
+/// messages; [`retryable`](Self::retryable) is the contract clients key
+/// their backoff on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// Cancelled before completion (client disconnect, server drain,
+    /// operator action). The job may succeed if resubmitted.
+    Cancelled,
+    /// The job's deadline (its own `timeout_ms=` or the server cap)
+    /// passed. Resubmitting the same spec will time out again.
+    DeadlineExceeded,
+    /// Rejected at intake: the bounded queue was full. Retry later.
+    QueueFull { capacity: usize },
+    /// Rejected at intake: the server is draining for shutdown.
+    Draining,
+    /// The spec line failed validation; fix the request.
+    Parse(String),
+    /// The job panicked inside its fault boundary — a bug, not load.
+    Panic(String),
+    /// Sink/file I/O failed mid-job. Often transient; retryable.
+    Io(String),
+    /// Anything else surfaced by the sampling pipeline.
+    Other(String),
+}
+
+impl JobError {
+    /// Whether a client should retry the *same* request (possibly after
+    /// backoff). Load- and liveness-class failures are retryable;
+    /// request- and bug-class failures are fatal.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            JobError::Cancelled | JobError::QueueFull { .. } | JobError::Draining | JobError::Io(_)
+        )
+    }
+
+    /// Stable short code, used as a metrics/log discriminant.
+    pub fn code(&self) -> &'static str {
+        match self {
+            JobError::Cancelled => "cancelled",
+            JobError::DeadlineExceeded => "deadline_exceeded",
+            JobError::QueueFull { .. } => "queue_full",
+            JobError::Draining => "draining",
+            JobError::Parse(_) => "parse",
+            JobError::Panic(_) => "panic",
+            JobError::Io(_) => "io",
+            JobError::Other(_) => "other",
+        }
+    }
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Cancelled => write!(f, "job cancelled"),
+            JobError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            JobError::QueueFull { capacity } => {
+                write!(f, "intake queue full (capacity {capacity}); retry later")
+            }
+            JobError::Draining => write!(f, "server draining; retry later"),
+            JobError::Panic(m) => write!(f, "panic: {m}"),
+            JobError::Parse(m) | JobError::Io(m) | JobError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+impl From<crate::util::cancel::CancelKind> for JobError {
+    fn from(kind: crate::util::cancel::CancelKind) -> Self {
+        match kind {
+            crate::util::cancel::CancelKind::Cancelled => JobError::Cancelled,
+            crate::util::cancel::CancelKind::DeadlineExceeded => JobError::DeadlineExceeded,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +207,36 @@ mod tests {
         let e = v.context("missing key").unwrap_err();
         assert_eq!(format!("{e}"), "missing key");
         assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn job_error_retryability_splits_load_from_request_faults() {
+        use crate::util::cancel::CancelKind;
+        assert!(JobError::Cancelled.retryable());
+        assert!(JobError::QueueFull { capacity: 4 }.retryable());
+        assert!(JobError::Draining.retryable());
+        assert!(JobError::Io("disk".into()).retryable());
+        assert!(!JobError::DeadlineExceeded.retryable());
+        assert!(!JobError::Parse("bad".into()).retryable());
+        assert!(!JobError::Panic("boom".into()).retryable());
+        assert!(!JobError::Other("misc".into()).retryable());
+        assert_eq!(JobError::from(CancelKind::Cancelled), JobError::Cancelled);
+        assert_eq!(
+            JobError::from(CancelKind::DeadlineExceeded),
+            JobError::DeadlineExceeded
+        );
+    }
+
+    #[test]
+    fn job_error_display_preserves_wire_messages() {
+        assert_eq!(
+            JobError::QueueFull { capacity: 64 }.to_string(),
+            "intake queue full (capacity 64); retry later"
+        );
+        assert_eq!(JobError::Panic("boom".into()).to_string(), "panic: boom");
+        assert_eq!(JobError::DeadlineExceeded.to_string(), "deadline exceeded");
+        assert_eq!(JobError::Parse("job 1: bad".into()).to_string(), "job 1: bad");
+        assert_eq!(JobError::Cancelled.code(), "cancelled");
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Deterministic fault injection for the streaming pipeline.
+//!
+//! Robustness claims ("a sink failure fails only its job", "pool workers
+//! never die", "a retry after any fault is byte-identical") are only as
+//! good as the faults they were tested against. This module makes
+//! failure a first-class, *seedable* input: wrappers that fail, stall or
+//! panic after an exact number of edges/bytes/chunks, so every fault
+//! fires at the same point on every run and the chaos tests are
+//! reproducible.
+//!
+//! * [`FaultySink`] wraps any [`EdgeSink`] and trips after N pushes —
+//!   either stashing a deferred I/O-style error (the pattern every real
+//!   I/O sink follows: `TsvSink`, `BinaryEdgeSink`), stalling once (a
+//!   wedged disk), or panicking (an assert deep in a sink).
+//! * [`FaultyWriter`] wraps any [`Write`] and trips after N bytes or N
+//!   write calls — the layer below the sinks, exercising their deferred
+//!   `try_finish()` error paths end to end.
+
+use std::io::{self, Write};
+use std::time::Duration;
+
+use crate::sampler::EdgeSink;
+use crate::util::cancel::CancelToken;
+
+/// What happens when an injected fault trips.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Stash a deferred error; every later push/write is dropped or
+    /// fails, and `try_finish()` surfaces the error exactly once.
+    Fail,
+    /// Sleep this long once, then carry on (a stalled device or peer).
+    Stall(Duration),
+    /// Panic with a recognisable message (tests the unwind boundaries).
+    Panic,
+}
+
+/// An [`EdgeSink`] that injects one fault after exactly `after`
+/// delivered edges, then keeps honouring the sink contract (pushes after
+/// a `Fail` trip are dropped; the error surfaces once via
+/// [`try_finish`](Self::try_finish), like every deferred-I/O sink).
+pub struct FaultySink<S: EdgeSink> {
+    inner: S,
+    after: u64,
+    mode: FaultMode,
+    /// Pushes observed, including ones dropped after a `Fail` trip.
+    pub seen: u64,
+    /// Pushes forwarded to the inner sink.
+    pub delivered: u64,
+    tripped: bool,
+    failed: Option<io::Error>,
+}
+
+impl<S: EdgeSink> FaultySink<S> {
+    fn new(inner: S, after: u64, mode: FaultMode) -> Self {
+        Self {
+            inner,
+            after,
+            mode,
+            seen: 0,
+            delivered: 0,
+            tripped: false,
+            failed: None,
+        }
+    }
+
+    /// Fail (deferred error) on the push following `after` edges.
+    pub fn fail_after(inner: S, after: u64) -> Self {
+        Self::new(inner, after, FaultMode::Fail)
+    }
+
+    /// Stall once for `pause` on the push following `after` edges.
+    pub fn stall_after(inner: S, after: u64, pause: Duration) -> Self {
+        Self::new(inner, after, FaultMode::Stall(pause))
+    }
+
+    /// Panic on the push following `after` edges.
+    pub fn panic_after(inner: S, after: u64) -> Self {
+        Self::new(inner, after, FaultMode::Panic)
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    /// Has the injected fault fired yet?
+    pub fn tripped(&self) -> bool {
+        self.tripped
+    }
+
+    /// Surface the deferred injected error exactly once (mirrors
+    /// `TsvSink::try_finish`).
+    pub fn try_finish(&mut self) -> io::Result<()> {
+        match self.failed.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl<S: EdgeSink> EdgeSink for FaultySink<S> {
+    fn push(&mut self, src: u32, dst: u32) {
+        let at = self.seen;
+        self.seen += 1;
+        if !self.tripped && at == self.after {
+            self.tripped = true;
+            match self.mode {
+                FaultMode::Fail => {
+                    self.failed = Some(io::Error::other(format!(
+                        "injected sink failure after {} edges",
+                        self.after
+                    )));
+                }
+                FaultMode::Stall(pause) => std::thread::sleep(pause),
+                FaultMode::Panic => panic!("injected sink panic after {} edges", self.after),
+            }
+        }
+        if self.failed.is_some() {
+            return;
+        }
+        self.delivered += 1;
+        self.inner.push(src, dst);
+    }
+
+    fn finish(&mut self) {
+        self.inner.finish();
+    }
+
+    fn order_sensitive(&self) -> bool {
+        self.inner.order_sensitive()
+    }
+
+    fn cancel_token(&self) -> Option<CancelToken> {
+        self.inner.cancel_token()
+    }
+}
+
+/// A [`Write`] that injects one fault after exactly `after_bytes`
+/// written bytes, or (`Panic` mode) on the `after_calls`-th write call —
+/// "call" meaning one buffered spill when sitting under a `BufWriter`,
+/// which is how panic-on-Nth-chunk injection reaches the sinks.
+pub struct FaultyWriter<W: Write> {
+    inner: W,
+    mode: FaultMode,
+    after_bytes: u64,
+    after_calls: u64,
+    /// Bytes accepted so far.
+    pub bytes: u64,
+    /// Write calls (≈ buffered chunks) observed so far.
+    pub calls: u64,
+    tripped: bool,
+}
+
+impl<W: Write> FaultyWriter<W> {
+    fn new(inner: W, mode: FaultMode, after_bytes: u64, after_calls: u64) -> Self {
+        Self {
+            inner,
+            mode,
+            after_bytes,
+            after_calls,
+            bytes: 0,
+            calls: 0,
+            tripped: false,
+        }
+    }
+
+    /// Error on (and after) the write crossing `after` accepted bytes.
+    pub fn fail_after_bytes(inner: W, after: u64) -> Self {
+        Self::new(inner, FaultMode::Fail, after, u64::MAX)
+    }
+
+    /// Stall once on the write crossing `after` accepted bytes.
+    pub fn stall_after_bytes(inner: W, after: u64, pause: Duration) -> Self {
+        Self::new(inner, FaultMode::Stall(pause), after, u64::MAX)
+    }
+
+    /// Panic on the write call following `after` calls (0-based: the
+    /// `after + 1`-th chunk panics).
+    pub fn panic_after_calls(inner: W, after: u64) -> Self {
+        Self::new(inner, FaultMode::Panic, u64::MAX, after)
+    }
+
+    pub fn tripped(&self) -> bool {
+        self.tripped
+    }
+}
+
+impl<W: Write> Write for FaultyWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let call = self.calls;
+        self.calls += 1;
+        if !self.tripped && (call >= self.after_calls || self.bytes + buf.len() as u64 > self.after_bytes)
+        {
+            self.tripped = true;
+            match self.mode {
+                FaultMode::Fail => {}
+                FaultMode::Stall(pause) => std::thread::sleep(pause),
+                FaultMode::Panic => {
+                    panic!("injected writer panic on chunk {call}")
+                }
+            }
+        }
+        if self.tripped && self.mode == FaultMode::Fail {
+            return Err(io::Error::other(format!(
+                "injected write failure after {} bytes",
+                self.after_bytes
+            )));
+        }
+        let n = self.inner.write(buf)?;
+        self.bytes += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.tripped && self.mode == FaultMode::Fail {
+            return Err(io::Error::other("injected write failure (flush)"));
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{CountSink, TsvSink};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::time::Instant;
+
+    #[test]
+    fn faulty_sink_fail_drops_later_pushes_and_errors_once() {
+        let mut sink = FaultySink::fail_after(CountSink::default(), 5);
+        for k in 0..20u32 {
+            sink.push(k, k);
+        }
+        sink.finish();
+        assert!(sink.tripped());
+        assert_eq!(sink.seen, 20);
+        assert_eq!(sink.delivered, 5, "pushes after the trip are dropped");
+        assert_eq!(sink.inner().edges, 5);
+        assert!(sink.try_finish().is_err(), "deferred error surfaces");
+        assert!(sink.try_finish().is_ok(), "…exactly once");
+    }
+
+    #[test]
+    fn faulty_sink_panic_mode_panics_with_marker() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut sink = FaultySink::panic_after(CountSink::default(), 2);
+            for k in 0..10u32 {
+                sink.push(k, k);
+            }
+        }));
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("injected sink panic"), "{msg}");
+    }
+
+    #[test]
+    fn faulty_sink_stall_delays_once() {
+        let pause = Duration::from_millis(30);
+        let mut sink = FaultySink::stall_after(CountSink::default(), 3, pause);
+        let t = Instant::now();
+        for k in 0..10u32 {
+            sink.push(k, k);
+        }
+        assert!(t.elapsed() >= pause, "stall must actually sleep");
+        assert_eq!(sink.inner().edges, 10, "all edges still delivered");
+        assert!(sink.try_finish().is_ok());
+    }
+
+    #[test]
+    fn faulty_writer_fail_surfaces_via_sink_try_finish() {
+        let mut sink = TsvSink::new(FaultyWriter::fail_after_bytes(Vec::new(), 64));
+        // BufWriter defers the failure until its 8 KiB buffer spills.
+        for _ in 0..10_000 {
+            sink.push(1, 2);
+        }
+        assert!(sink.try_finish().is_err());
+    }
+
+    #[test]
+    fn faulty_writer_panics_on_nth_chunk() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut sink = TsvSink::new(FaultyWriter::panic_after_calls(Vec::new(), 1));
+            // Enough edges for multiple 8 KiB spills: the second spill
+            // (call index 1) panics.
+            for _ in 0..20_000 {
+                sink.push(123_456, 654_321);
+            }
+            sink.try_finish().ok();
+        }));
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("injected writer panic"), "{msg}");
+    }
+}

@@ -43,6 +43,11 @@ impl Gauge {
         self.bits.store(v.to_bits(), Ordering::Relaxed);
     }
 
+    /// Set a 0/1 state flag (e.g. `service.draining`).
+    pub fn set_bool(&self, on: bool) {
+        self.set(if on { 1.0 } else { 0.0 });
+    }
+
     pub fn get(&self) -> f64 {
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
@@ -258,6 +263,15 @@ mod tests {
         r.gauge("load").set(0.25);
         r.gauge("load").set(0.75);
         assert_eq!(r.gauge("load").get(), 0.75);
+    }
+
+    #[test]
+    fn gauge_set_bool_is_zero_or_one() {
+        let g = Gauge::default();
+        g.set_bool(true);
+        assert_eq!(g.get(), 1.0);
+        g.set_bool(false);
+        assert_eq!(g.get(), 0.0);
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //! implemented here from scratch and unit-tested in place.
 
 pub mod benchkit;
+pub mod cancel;
 pub mod cli;
 pub mod config;
 pub mod error;
+pub mod fault;
 pub mod logging;
 pub mod metrics;
 pub mod quickcheck;

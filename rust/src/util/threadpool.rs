@@ -4,7 +4,8 @@
 //! ranges / shards), so a simple shared-queue pool is sufficient; work
 //! items are boxed closures and results flow back through channels.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -12,10 +13,15 @@ use std::thread::JoinHandle;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed pool of worker threads consuming a shared FIFO queue.
+///
+/// Workers are panic-hardened: a job that panics is caught and counted
+/// ([`panic_count`](Self::panic_count)) and the worker moves on to the
+/// next job — a long-lived service never loses capacity to one bad job.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    panics: Arc<AtomicU64>,
 }
 
 impl ThreadPool {
@@ -24,15 +30,21 @@ impl ThreadPool {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicU64::new(0));
         let workers = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
                 std::thread::Builder::new()
                     .name(format!("magbdp-worker-{i}"))
                     .spawn(move || loop {
                         let job = rx.lock().unwrap().recv();
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
                             Err(_) => break, // queue closed
                         }
                     })
@@ -43,6 +55,7 @@ impl ThreadPool {
             tx: Some(tx),
             workers,
             size,
+            panics,
         }
     }
 
@@ -54,6 +67,11 @@ impl ThreadPool {
     /// Number of workers.
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Jobs that panicked inside a worker since the pool was created.
+    pub fn panic_count(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
     }
 
     /// Fire-and-forget execution.
@@ -87,7 +105,9 @@ impl ThreadPool {
         for (i, v) in rx {
             out[i] = Some(v);
         }
-        out.into_iter().map(|v| v.expect("worker panicked")).collect()
+        out.into_iter()
+            .map(|v| v.expect("a pool job panicked; its result is missing"))
+            .collect()
     }
 }
 
@@ -119,6 +139,17 @@ pub fn default_parallelism() -> usize {
 /// This is the primitive the sharded samplers use: each chunk owns an
 /// independent RNG stream, so results are deterministic for a fixed
 /// `(seed, threads)` pair regardless of scheduling.
+///
+/// Panic payloads are preserved: `std::thread::scope` itself would
+/// replace a spawned thread's payload with a generic "a scoped thread
+/// panicked" panic, destroying the typed
+/// [`CancelUnwind`](crate::util::cancel::CancelUnwind) a cancelled shard
+/// unwinds with. Each chunk therefore runs under `catch_unwind` and the
+/// parent resumes the original payload — preferring a `CancelUnwind`
+/// over collateral panics (e.g. a sibling shard hitting a lock poisoned
+/// by the cancelled one), so the job boundary's
+/// [`catch_cancel`](crate::util::cancel::catch_cancel) always sees the
+/// cancellation, not the fallout.
 pub fn scoped_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -126,18 +157,42 @@ where
 {
     let threads = threads.max(1).min(n.max(1));
     let chunk = n.div_ceil(threads);
-    let mut out: Vec<Option<T>> = (0..threads).map(|_| None).collect();
+    let mut out: Vec<Option<std::thread::Result<T>>> = (0..threads).map(|_| None).collect();
     std::thread::scope(|s| {
         for (t, slot) in out.iter_mut().enumerate() {
             let f = &f;
             s.spawn(move || {
                 let lo = (t * chunk).min(n);
                 let hi = ((t + 1) * chunk).min(n);
-                *slot = Some(f(t, lo..hi));
+                *slot = Some(std::panic::catch_unwind(AssertUnwindSafe(|| f(t, lo..hi))));
             });
         }
     });
-    out.into_iter().map(|v| v.expect("scoped thread panicked")).collect()
+    let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+    let mut values = Vec::with_capacity(out.len());
+    for slot in out {
+        match slot.expect("scoped thread exited without reporting a result") {
+            Ok(v) => values.push(v),
+            Err(payload) => {
+                let replace = match &first_panic {
+                    None => true,
+                    // A cancellation unwind outranks whatever collateral
+                    // panic another chunk produced.
+                    Some(p) => {
+                        !p.is::<crate::util::cancel::CancelUnwind>()
+                            && payload.is::<crate::util::cancel::CancelUnwind>()
+                    }
+                };
+                if replace {
+                    first_panic = Some(payload);
+                }
+            }
+        }
+    }
+    if let Some(payload) = first_panic {
+        std::panic::resume_unwind(payload);
+    }
+    values
 }
 
 /// A monotonically increasing work counter shared across shards (used for
@@ -200,6 +255,65 @@ mod tests {
     fn scoped_chunks_more_threads_than_items() {
         let ranges = scoped_chunks(2, 8, |_, r| r.len());
         assert_eq!(ranges.iter().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn workers_survive_panicking_jobs() {
+        use crate::util::cancel::with_quiet_panics;
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.execute(|| with_quiet_panics(|| panic!("injected job panic")));
+        }
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // All 10 healthy jobs must still run on the same 2 workers.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while counter.load(Ordering::SeqCst) < 10 {
+            assert!(std::time::Instant::now() < deadline, "workers died");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(pool.panic_count(), 4);
+        drop(pool); // clean join: no worker unwound away
+    }
+
+    #[test]
+    fn scoped_chunks_resumes_original_panic_payload() {
+        let r = std::panic::catch_unwind(|| {
+            scoped_chunks(4, 2, |t, _r| {
+                if t == 1 {
+                    crate::util::cancel::with_quiet_panics(|| std::panic::panic_any(42i32))
+                } else {
+                    t
+                }
+            })
+        });
+        let payload = r.unwrap_err();
+        assert_eq!(payload.downcast_ref::<i32>(), Some(&42));
+    }
+
+    #[test]
+    fn scoped_chunks_prefers_cancel_unwind_payloads() {
+        use crate::util::cancel::{cancel_unwind, with_quiet_panics, CancelKind, CancelUnwind};
+        let r = std::panic::catch_unwind(|| {
+            scoped_chunks(2, 2, |t, _r| -> usize {
+                with_quiet_panics(|| {
+                    if t == 0 {
+                        panic!("collateral damage")
+                    }
+                    cancel_unwind(CancelKind::Cancelled)
+                })
+            })
+        });
+        let payload = r.unwrap_err();
+        assert!(
+            payload.is::<CancelUnwind>(),
+            "cancellation payload must win over collateral panics"
+        );
     }
 
     #[test]

@@ -1,19 +1,42 @@
 //! Networked generation service end-to-end: a real TCP client against a
 //! spawned `JobServer` — per-job fault isolation, byte-identical payload
-//! streaming, metrics scrape, bounded-queue backpressure.
+//! streaming, metrics scrape, bounded-queue backpressure, deadlines,
+//! disconnect cancellation, graceful drain, and a seeded chaos session.
+
+use std::time::{Duration, Instant};
 
 use magbdp::coordinator::service::run_job_with;
-use magbdp::coordinator::{Client, Event, JobSpec, OutputFormat, ServerConfig};
+use magbdp::coordinator::{Backoff, Client, Event, JobSpec, OutputFormat, ServerConfig};
 use magbdp::util::metrics::Registry;
+use magbdp::util::rng::{Rng, SeedableRng, SplitMix64};
 
-fn spawn_server(queue: usize) -> magbdp::coordinator::ServerHandle {
+fn spawn_server_cfg(
+    configure: impl FnOnce(&mut ServerConfig),
+) -> magbdp::coordinator::ServerHandle {
     let mut config = ServerConfig::new("127.0.0.1:0");
     config.threads = 2;
-    config.queue_capacity = queue;
+    configure(&mut config);
     magbdp::coordinator::JobServer::bind(&config)
         .expect("bind")
         .spawn()
         .expect("spawn")
+}
+
+fn spawn_server(queue: usize) -> magbdp::coordinator::ServerHandle {
+    spawn_server_cfg(|c| c.queue_capacity = queue)
+}
+
+/// Poll `cond` until it holds or `secs` elapse (metrics are updated by
+/// pool workers, so assertions on them need a grace window).
+fn wait_until(secs: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
 }
 
 /// The ISSUE acceptance scenario: one session submits a malformed job
@@ -28,8 +51,9 @@ fn mixed_session_streams_byte_identical_payload() {
 
     client.send("id=1 d=6 mu=0.5 n=0").unwrap();
     match client.next_event().unwrap() {
-        Event::Err { id, msg } => {
+        Event::Err { id, retryable, msg } => {
             assert_eq!(id, 1);
+            assert!(!retryable, "parse errors are not retryable");
             assert!(msg.contains("at least 1"), "{msg}");
         }
         other => panic!("expected ERR for n=0, got {other:?}"),
@@ -39,8 +63,9 @@ fn mixed_session_streams_byte_identical_payload() {
         .send(&format!("id=2 d=6 mu=0.5 n={}", 1u64 << 33))
         .unwrap();
     match client.next_event().unwrap() {
-        Event::Err { id, msg } => {
+        Event::Err { id, retryable, msg } => {
             assert_eq!(id, 2);
+            assert!(!retryable, "parse errors are not retryable");
             assert!(msg.contains("exceeds"), "{msg}");
         }
         other => panic!("expected ERR for oversized n, got {other:?}"),
@@ -185,8 +210,9 @@ fn full_queue_rejects_jobs_with_error() {
 
     client.send("id=7 d=6 mu=0.5").unwrap();
     match client.next_event().unwrap() {
-        Event::Err { id, msg } => {
+        Event::Err { id, retryable, msg } => {
             assert_eq!(id, 7);
+            assert!(retryable, "queue-full rejections are retryable");
             assert!(msg.contains("queue full"), "{msg}");
         }
         other => panic!("expected queue-full ERR, got {other:?}"),
@@ -238,4 +264,352 @@ fn shutdown_is_clean_with_live_connections() {
     // Shut down while c1 is still open — must not hang.
     h1.shutdown();
     h2.shutdown();
+}
+
+/// A `timeout_ms=` deadline that cannot be met fails its own job with a
+/// non-retryable deadline error; the connection keeps serving and the
+/// `service.deadline_exceeded` counter records it.
+#[test]
+fn timeout_ms_deadline_fails_job_with_fatal_err() {
+    let handle = spawn_server(8);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    // d=16 (65k nodes) cannot finish in 1 ms; the guard aborts it.
+    client.send("id=20 d=16 mu=0.6 seed=5 timeout_ms=1").unwrap();
+    match client.next_event().unwrap() {
+        Event::Err { id, retryable, msg } => {
+            assert_eq!(id, 20);
+            assert!(!retryable, "deadline expiry is not retryable");
+            assert!(msg.contains("deadline exceeded"), "{msg}");
+        }
+        other => panic!("expected deadline ERR, got {other:?}"),
+    }
+    assert!(
+        wait_until(10, || {
+            handle.metrics().counter("service.deadline_exceeded").get() == 1
+        }),
+        "deadline_exceeded counter must record the abort"
+    );
+    // The same spec without the deadline completes on this connection.
+    client.send("id=21 d=8 mu=0.6 seed=5").unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { id, .. } => assert_eq!(id, 21),
+        other => panic!("expected OK after deadline ERR, got {other:?}"),
+    }
+    assert_eq!(handle.metrics().counter("service.panics").get(), 0);
+    handle.shutdown();
+}
+
+/// The server-side `job_timeout_ms` cap bounds jobs that carry no
+/// `timeout_ms=` of their own.
+#[test]
+fn server_job_cap_bounds_every_job() {
+    let handle = spawn_server_cfg(|c| c.job_timeout_ms = 1);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+    client.send("id=22 d=16 mu=0.6 seed=5").unwrap();
+    match client.next_event().unwrap() {
+        Event::Err { id, retryable, msg } => {
+            assert_eq!(id, 22);
+            assert!(!retryable);
+            assert!(msg.contains("deadline exceeded"), "{msg}");
+        }
+        other => panic!("expected deadline ERR under the server cap, got {other:?}"),
+    }
+    handle.shutdown();
+}
+
+/// Dropping a client mid-payload cancels its in-flight job: the worker
+/// aborts within one guard interval (counted in `service.cancelled`)
+/// instead of streaming the rest into a dead socket, and the pool stays
+/// healthy for other connections.
+#[test]
+fn client_disconnect_cancels_in_flight_job() {
+    let handle = spawn_server(8);
+    let intake = handle.intake().clone();
+    {
+        let mut doomed = Client::connect(handle.addr()).expect("connect");
+        // Big counts-only job: d=18 keeps the worker busy well past the
+        // disconnect below, and with no payload writes the only abort
+        // path is the cancellation token — the outcome is deterministic.
+        doomed.send("id=30 d=18 mu=0.6 seed=9").unwrap();
+        assert!(
+            wait_until(30, || intake.depth() >= 1),
+            "job must be dispatched before the disconnect"
+        );
+    } // drop = disconnect
+
+    assert!(
+        wait_until(30, || handle.metrics().counter("service.cancelled").get() >= 1),
+        "disconnect must cancel the in-flight job, got cancelled={}",
+        handle.metrics().counter("service.cancelled").get()
+    );
+    // The pool survived: a fresh connection runs a job to completion.
+    let mut client = Client::connect(handle.addr()).expect("connect 2");
+    client.send("id=31 d=6 mu=0.5 seed=1").unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { id, .. } => assert_eq!(id, 31),
+        other => panic!("expected OK after disconnect, got {other:?}"),
+    }
+    assert_eq!(handle.metrics().counter("service.panics").get(), 0);
+    handle.shutdown();
+}
+
+/// `DRAIN` stops intake, lets queued jobs finish, and cancels jobs that
+/// outlive the drain deadline — queued-but-quick work completes, the
+/// straggler gets a retryable cancellation, and new jobs are refused
+/// with a retryable "draining" error.
+#[test]
+fn drain_completes_quick_jobs_and_cancels_stragglers() {
+    let handle = spawn_server_cfg(|c| {
+        c.queue_capacity = 8;
+        c.drain_timeout_ms = 500;
+    });
+    let mut long = Client::connect(handle.addr()).expect("connect long");
+    let mut ctl = Client::connect(handle.addr()).expect("connect ctl");
+
+    // A counts-only straggler that cannot finish inside the drain
+    // window (no payload writes, so only the drain cancel can end it)...
+    long.send("id=40 d=18 mu=0.6 seed=9").unwrap();
+    assert!(
+        wait_until(30, || handle.intake().depth() >= 1),
+        "straggler must be dispatched before DRAIN"
+    );
+    // ...and a quick job that must still complete under drain.
+    ctl.send("id=41 d=6 mu=0.5 seed=3").unwrap();
+
+    ctl.send("DRAIN").unwrap();
+    let mut saw_draining = false;
+    let mut saw_quick_ok = false;
+    for _ in 0..2 {
+        match ctl.next_event().unwrap() {
+            Event::Draining { .. } => saw_draining = true,
+            Event::Ok { id, .. } => {
+                assert_eq!(id, 41);
+                saw_quick_ok = true;
+            }
+            other => panic!("unexpected event during drain: {other:?}"),
+        }
+    }
+    assert!(saw_draining, "DRAIN must be acknowledged");
+    assert!(saw_quick_ok, "queued quick job must complete during drain");
+
+    // New intake is refused with a retryable error while draining.
+    ctl.send("id=42 d=6 mu=0.5").unwrap();
+    match ctl.next_event().unwrap() {
+        Event::Err { id, retryable, msg } => {
+            assert_eq!(id, 42);
+            assert!(retryable, "draining rejections are retryable");
+            assert!(msg.contains("draining"), "{msg}");
+        }
+        other => panic!("expected draining ERR, got {other:?}"),
+    }
+
+    // The straggler is cancelled once the drain deadline passes.
+    assert!(
+        wait_until(30, || handle.metrics().counter("service.cancelled").get() >= 1),
+        "drain deadline must cancel the straggler"
+    );
+    handle.shutdown_graceful();
+}
+
+/// `Client::submit_with_retry` rides out queue-full rejections with
+/// seeded, capped backoff and then succeeds — without the caller ever
+/// seeing the transient errors.
+#[test]
+fn client_retries_queue_full_with_backoff() {
+    let handle = spawn_server(2);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    // Pin the queue full, release it shortly after the first rejection.
+    let intake = handle.intake().clone();
+    let a = intake.try_enter().expect("slot 1");
+    let b = intake.try_enter().expect("slot 2");
+    let releaser = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        drop(a);
+        drop(b);
+    });
+
+    let mut backoff = Backoff::new(
+        Duration::from_millis(20),
+        Duration::from_millis(200),
+        12,
+        7,
+    );
+    let event = client
+        .submit_with_retry("id=80 d=6 mu=0.5 seed=2", &mut backoff)
+        .expect("submission with retries");
+    match event {
+        Event::Ok { id, .. } => assert_eq!(id, 80),
+        other => panic!("expected eventual OK, got {other:?}"),
+    }
+    assert!(
+        handle.metrics().counter("service.rejected").get() >= 1,
+        "the queue must have rejected at least the first attempt"
+    );
+    releaser.join().unwrap();
+    handle.shutdown();
+}
+
+/// Seeded chaos session — the ISSUE acceptance scenario. A deterministic
+/// schedule (override with MAGBDP_CHAOS_SEED) interleaves malformed
+/// lines, queue-full rejections, impossible deadlines, mid-payload
+/// disconnects and healthy streaming jobs. Afterwards: no pool worker
+/// died, every request is accounted for
+/// (`jobs + parse_errors + rejected == requests`), and each healthy
+/// job's payload is byte-identical to the local reference — including
+/// jobs submitted after faults.
+#[test]
+fn chaos_session_faults_are_isolated_and_accounted() {
+    let seed = std::env::var("MAGBDP_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let handle = spawn_server(4);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    // Local reference bytes for the healthy job (spec, seed) — every
+    // healthy round must reproduce exactly these.
+    let healthy_spec = "d=8 mu=0.4 seed=7 algo=magm-bdp";
+    let spec = JobSpec::parse_line(0, healthy_spec).unwrap();
+    let mut reference: Vec<u8> = Vec::new();
+    let local = run_job_with(
+        &spec,
+        &Registry::new(),
+        Some((&mut reference, OutputFormat::Binary)),
+    );
+    assert!(local.error.is_none(), "{:?}", local.error);
+
+    let (mut malformed, mut queue_full, mut deadlines, mut disconnects, mut healthy) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    const ROUNDS: usize = 18;
+    for round in 0..ROUNDS {
+        // First five rounds cover every fault class once; the rest of
+        // the schedule is seeded chaos.
+        let action = if round < 5 {
+            round as u64
+        } else {
+            rng.next_u64() % 5
+        };
+        let id = 100 + round as u64;
+        if action >= 2 {
+            // These rounds submit a job that must be *accepted*; wait
+            // for straggling disconnect jobs to release their permits.
+            let intake = handle.intake();
+            assert!(
+                wait_until(30, || intake.depth() < intake.capacity()),
+                "round {round}: no free intake slot"
+            );
+        }
+        match action {
+            0 => {
+                malformed += 1;
+                client.send(&format!("id={id} d=6 n=0")).unwrap();
+                match client.next_event().unwrap() {
+                    Event::Err { retryable, .. } => assert!(!retryable),
+                    other => panic!("round {round}: expected parse ERR, got {other:?}"),
+                }
+            }
+            1 => {
+                queue_full += 1;
+                let intake = handle.intake().clone();
+                // Wait out any straggling disconnect job first — a
+                // permit released mid-round would un-fill the queue.
+                assert!(
+                    intake.wait_idle(Duration::from_secs(30)),
+                    "round {round}: queue never went idle"
+                );
+                let permits: Vec<_> = (0..intake.capacity())
+                    .map(|i| {
+                        intake
+                            .try_enter()
+                            .unwrap_or_else(|| panic!("round {round}: pin slot {i}"))
+                    })
+                    .collect();
+                client.send(&format!("id={id} d=6 mu=0.5")).unwrap();
+                match client.next_event().unwrap() {
+                    Event::Err { retryable, msg, .. } => {
+                        assert!(retryable, "round {round}: {msg}");
+                        assert!(msg.contains("queue full"), "round {round}: {msg}");
+                    }
+                    other => panic!("round {round}: expected queue-full ERR, got {other:?}"),
+                }
+                drop(permits);
+            }
+            2 => {
+                deadlines += 1;
+                client
+                    .send(&format!("id={id} d=16 mu=0.6 seed=5 timeout_ms=1"))
+                    .unwrap();
+                match client.next_event().unwrap() {
+                    Event::Err { retryable, msg, .. } => {
+                        assert!(!retryable, "round {round}: {msg}");
+                        assert!(msg.contains("deadline exceeded"), "round {round}: {msg}");
+                    }
+                    other => panic!("round {round}: expected deadline ERR, got {other:?}"),
+                }
+            }
+            3 => {
+                disconnects += 1;
+                let mut doomed = Client::connect(handle.addr()).expect("chaos connect");
+                doomed
+                    .send(&format!("id={id} d=18 mu=0.6 seed=9 respond=bin"))
+                    .unwrap();
+                match doomed.next_event().unwrap() {
+                    Event::Chunk { .. } => {}
+                    other => panic!("round {round}: expected CHUNK, got {other:?}"),
+                }
+                drop(doomed); // mid-payload disconnect
+            }
+            _ => {
+                healthy += 1;
+                client
+                    .send(&format!("id={id} {healthy_spec} respond=bin"))
+                    .unwrap();
+                let (payload, _) = client
+                    .collect_payload(id)
+                    .unwrap_or_else(|e| panic!("round {round}: healthy job failed: {e}"));
+                assert_eq!(
+                    payload, reference,
+                    "round {round}: healthy payload diverged after faults"
+                );
+            }
+        }
+    }
+    assert_eq!(
+        malformed + queue_full + deadlines + disconnects + healthy,
+        ROUNDS as u64
+    );
+
+    // Every request resolves: executed, parse-rejected, or load-shed.
+    let m = handle.metrics().clone();
+    assert!(
+        wait_until(30, || {
+            m.counter("service.jobs").get()
+                + m.counter("service.parse_errors").get()
+                + m.counter("service.rejected").get()
+                == m.counter("service.requests").get()
+        }),
+        "unaccounted requests: jobs={} parse_errors={} rejected={} requests={}",
+        m.counter("service.jobs").get(),
+        m.counter("service.parse_errors").get(),
+        m.counter("service.rejected").get(),
+        m.counter("service.requests").get(),
+    );
+    assert_eq!(m.counter("service.parse_errors").get(), malformed);
+    assert_eq!(m.counter("service.rejected").get(), queue_full);
+    assert_eq!(m.counter("service.deadline_exceeded").get(), deadlines);
+    assert!(
+        m.counter("service.cancelled").get() <= disconnects,
+        "only disconnected jobs may be cancelled"
+    );
+    // The whole point: no pool worker ever died.
+    assert_eq!(m.counter("service.panics").get(), 0);
+
+    // And the server still serves: one more byte-identical healthy job.
+    client.send(&format!("id=999 {healthy_spec} respond=bin")).unwrap();
+    let (payload, _) = client.collect_payload(999).expect("post-chaos job");
+    assert_eq!(payload, reference, "post-chaos payload diverged");
+    handle.shutdown();
 }

@@ -206,6 +206,58 @@ fn binary_sink_streams_a_real_sample() {
     assert_eq!(g.num_edges() as u64, accepted);
 }
 
+/// An injected terminal-sink failure under parallel sharding is
+/// contained: workers survive, pushes after the trip are dropped, shard
+/// residuals still drain, and the deferred error surfaces exactly once
+/// — after which the same (seed, threads) run reproduces the same trip.
+#[test]
+fn faulty_sink_failure_under_parallel_sharding_is_contained() {
+    use magbdp::util::fault::FaultySink;
+
+    let (params, a) = fixture(8, 0.4, 1 << 8, 5);
+    let s = MagmBdpSampler::new(&params, &a);
+    let run = || {
+        let mut faulty = FaultySink::fail_after(CountSink::default(), 100);
+        let (_, accepted) = s.sample_parallel_into(99, 4, &mut faulty);
+        assert!(faulty.tripped(), "the fault must fire");
+        assert!(accepted > 100, "need a sample big enough to trip");
+        assert_eq!(
+            faulty.seen, accepted,
+            "every sampled edge must still reach the terminal (no dead worker)"
+        );
+        assert_eq!(
+            faulty.delivered, 100,
+            "pushes after the trip are dropped, not delivered"
+        );
+        assert_eq!(faulty.inner().edges, 100);
+        assert!(faulty.try_finish().is_err(), "deferred error surfaces");
+        assert!(faulty.try_finish().is_ok(), "…exactly once");
+        accepted
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "the fault schedule must be deterministic");
+}
+
+/// A pre-cancelled token on the terminal sink aborts parallel sampling
+/// before any edge lands: the shard handles observe the terminal's
+/// guard, the unwind crosses `scoped_chunks` intact, and `catch_cancel`
+/// reports the cancellation.
+#[test]
+fn pre_cancelled_token_aborts_parallel_sampling() {
+    use magbdp::sampler::GuardedSink;
+    use magbdp::util::cancel::{catch_cancel, CancelKind, CancelToken};
+
+    let (params, a) = fixture(8, 0.4, 1 << 8, 5);
+    let s = MagmBdpSampler::new(&params, &a);
+    let token = CancelToken::new();
+    token.cancel();
+    let mut sink = GuardedSink::new(CountSink::default(), token);
+    let aborted = catch_cancel(|| s.sample_parallel_into(99, 4, &mut sink));
+    assert_eq!(aborted.unwrap_err(), CancelKind::Cancelled);
+    assert_eq!(sink.inner().edges, 0, "no edge may land after cancellation");
+}
+
 #[test]
 fn undirected_streaming_respects_canonical_order() {
     let (params, a) = fixture(5, 0.4, 80, 30);
