@@ -11,7 +11,10 @@
 //!   5. a valid `respond=bin` job       → `CHUNK`* + `END`; the payload is
 //!      decoded as a `MAGBDP01` stream and cross-checked against the edge
 //!      count the server reported
-//!   6. `METRICS`                       → Prometheus scrape; asserts the
+//!   6. the same spec as `threads=1` and `threads=4` jobs → the
+//!      chunk-sequenced drain must return byte-identical payloads
+//!      whatever the thread grant
+//!   7. `METRICS`                       → Prometheus scrape; asserts the
 //!      jobs/errors counters match what this session caused
 //!
 //! The socket carries a 10 s I/O timeout so a wedged server fails the
@@ -105,7 +108,39 @@ fn run(addr: &str) -> Result<(), String> {
         g.n()
     );
 
-    // 6. Scrape and cross-check the counters this session moved.
+    // 6. Multi-core jobs: the chunk-sequenced drain makes the reply a
+    // function of (spec, seed) alone, so a `threads=1` and a `threads=4`
+    // submission of the same spec must stream byte-identical payloads —
+    // even when the server caps the grant at its own pool size.
+    let mut threaded = Vec::new();
+    for (id, threads) in [(5u64, 1usize), (6, 4)] {
+        send(
+            &mut client,
+            &format!("id={id} d=10 mu=0.4 seed=7 algo=magm-bdp threads={threads} respond=bin"),
+        )?;
+        let (payload, fields) = client
+            .collect_payload(id)
+            .map_err(|e| format!("threads={threads} job: {e}"))?;
+        let granted = fields
+            .get("threads")
+            .cloned()
+            .ok_or("END missing threads=")?;
+        println!(
+            "job {id} (threads={threads}) streamed {} bytes with grant threads={granted}",
+            payload.len()
+        );
+        threaded.push(payload);
+    }
+    if threaded[0] != threaded[1] {
+        return Err(
+            "threads=1 and threads=4 replies differ — the sequenced drain leaked \
+             thread-count dependence into the payload"
+                .to_string(),
+        );
+    }
+    println!("threads=1 and threads=4 payloads are byte-identical");
+
+    // 7. Scrape and cross-check the counters this session moved.
     send(&mut client, "METRICS")?;
     let body = match client.next_event().map_err(|e| e.to_string())? {
         Event::Metrics(body) => body,
@@ -121,13 +156,16 @@ fn run(addr: &str) -> Result<(), String> {
     let jobs = metric("service_jobs")?;
     let errors = metric("service_errors")?;
     let expired = metric("service_deadline_exceeded")?;
+    let parallel = metric("service_parallel_jobs")?;
     println!(
-        "scrape: service_jobs={jobs} service_errors={errors} service_deadline_exceeded={expired}"
+        "scrape: service_jobs={jobs} service_errors={errors} \
+         service_deadline_exceeded={expired} service_parallel_jobs={parallel}"
     );
     // ≥, not ==: the server may have served other clients.
-    if jobs < 2.0 || errors < 3.0 || expired < 1.0 {
+    if jobs < 4.0 || errors < 3.0 || expired < 1.0 || parallel < 2.0 {
         return Err(format!(
-            "counters too low for this session (jobs={jobs}, errors={errors})"
+            "counters too low for this session (jobs={jobs}, errors={errors}, \
+             parallel={parallel})"
         ));
     }
 

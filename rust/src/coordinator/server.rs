@@ -31,6 +31,14 @@
 //!   server always applies its own default cap
 //!   ([`ServerConfig::job_timeout_ms`]); the effective deadline is the
 //!   tighter of the two.
+//!
+//!   `threads=<1..=256>` is also a regular spec key (`algo=magm-bdp` /
+//!   `algo=hybrid` only): fan the job's edge stream across that many
+//!   workers through the chunk-sequenced parallel sampler. The server
+//!   caps the grant to its worker-pool size before dispatch and echoes
+//!   the granted value as `threads=` in the `OK`/`END` response. The
+//!   streamed payload is **byte-identical for every grant** — a
+//!   `threads=8` reply matches the `threads=1` reply bit for bit.
 //! * `METRICS` — scrape the registry (Prometheus text exposition).
 //! * `PING` — liveness probe.
 //! * `QUIT` — close this connection.
@@ -45,15 +53,19 @@
 //! ## Responses (server → client)
 //!
 //! * `OK id=<id> algo=<a> nodes=<n> edges=<e> edges_simple=<s>
-//!   proposed=<p> bytes=<b> wall_ms=<ms> eps=<rate>` — job finished,
-//!   no payload.
+//!   proposed=<p> bytes=<b> threads=<t> wall_ms=<ms> eps=<rate>` — job
+//!   finished, no payload. For streaming (`output=`) jobs the
+//!   distinct-edge field reads `edges_simple≈<s>`: a HyperLogLog
+//!   estimate (streaming never holds the edge set), visibly marked so
+//!   nothing mistakes it for the exact in-memory count.
 //! * `CHUNK id=<id> bytes=<k>` followed by exactly `k` raw payload
 //!   bytes and one `\n` — one slice of a `respond=` job's payload.
 //!   Chunks of concurrent jobs may interleave; reassemble per id.
 //! * `END id=<id> format=<tsv|bin> edges=<e> proposed=<p> bytes=<b>
-//!   wall_ms=<ms>` — a `respond=` job finished; the concatenated chunk
-//!   payloads are byte-identical to the file [`run_job`] writes locally
-//!   for the same `(spec, seed)`.
+//!   threads=<t> wall_ms=<ms>` — a `respond=` job finished; the
+//!   concatenated chunk payloads are byte-identical to the file
+//!   [`run_job`] writes locally for the same `(spec, seed)`, whatever
+//!   thread grant either side used.
 //! * `ERR id=<id> retry=<true|false> msg=<text to end of line>` — the
 //!   job failed (parse error, sampler error, caught panic, deadline,
 //!   cancellation, or intake rejection). The connection and the worker
@@ -127,7 +139,7 @@ use crate::util::cancel::CancelToken;
 use crate::util::error::JobError;
 use crate::util::metrics::Registry;
 use crate::util::rng::{Rng, SeedableRng, SplitMix64};
-use crate::util::threadpool::default_parallelism;
+use crate::util::threadpool::{default_parallelism, grant_threads};
 use crate::{log_debug, log_info, log_warn};
 
 /// Default [`ServerConfig::queue_capacity`].
@@ -696,15 +708,22 @@ fn send_payload<W: Write>(out: &Mutex<W>, metrics: &Registry, head: &str, payloa
 }
 
 fn ok_line(r: &JobResult) -> String {
+    // Streaming jobs report a HyperLogLog estimate; the `≈` keeps an
+    // estimate from ever being read as the exact in-memory count.
+    let simple = if r.simple_approx {
+        format!("edges_simple≈{}", r.edges_simple)
+    } else {
+        format!("edges_simple={}", r.edges_simple)
+    };
     format!(
-        "OK id={} algo={} nodes={} edges={} edges_simple={} proposed={} bytes={} wall_ms={:.3} eps={:.1}",
+        "OK id={} algo={} nodes={} edges={} {simple} proposed={} bytes={} threads={} wall_ms={:.3} eps={:.1}",
         r.id,
         r.algo,
         r.nodes,
         r.edges,
-        r.edges_simple,
         r.proposed,
         r.bytes_written,
+        r.threads,
         r.wall.as_secs_f64() * 1e3,
         r.edges_per_sec,
     )
@@ -712,12 +731,13 @@ fn ok_line(r: &JobResult) -> String {
 
 fn end_line(r: &JobResult, format: OutputFormat) -> String {
     format!(
-        "END id={} format={} edges={} proposed={} bytes={} wall_ms={:.3}",
+        "END id={} format={} edges={} proposed={} bytes={} threads={} wall_ms={:.3}",
         r.id,
         format.label(),
         r.edges,
         r.proposed,
         r.bytes_written,
+        r.threads,
         r.wall.as_secs_f64() * 1e3,
     )
 }
@@ -874,7 +894,7 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
                     send_line(&writer, &ctx.metrics, &err_line(id, &JobError::Draining));
                     continue;
                 }
-                let spec = match JobSpec::parse_line(id, &spec_line) {
+                let mut spec = match JobSpec::parse_line(id, &spec_line) {
                     Ok(spec) => spec,
                     Err(e) => {
                         ctx.metrics.counter("service.parse_errors").inc();
@@ -883,6 +903,12 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
                         continue;
                     }
                 };
+                if let Some(t) = spec.threads.as_mut() {
+                    // Cap the fan-out grant at the worker-pool size; the
+                    // granted value is echoed in the OK/END response and
+                    // never changes the payload bytes.
+                    *t = grant_threads(*t, ctx.svc.pool().size());
+                }
                 let Some(permit) = ctx.intake.try_enter() else {
                     ctx.metrics.counter("service.rejected").inc();
                     let e = JobError::QueueFull {

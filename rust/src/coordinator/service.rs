@@ -20,6 +20,29 @@
 //! sink I/O errors surface through each sink's `try_finish()` and are
 //! reported as job failures.
 //!
+//! Streaming jobs never hold the edge set, so the exact distinct-edge
+//! count is off the table; instead every streamed edge feeds a
+//! fixed-width [`HyperLogLog`] sketch and the result reports
+//! `edges_simple` as an *estimate* (`JobResult::simple_approx`, the
+//! `edges_simple≈` OK-line field) instead of the old hard `0`.
+//!
+//! # Multi-core jobs (`threads=`)
+//!
+//! A job carrying a validated `threads=` key fans its edge stream out
+//! across that many workers through
+//! [`MagmBdpSampler::sample_parallel_into`]'s chunk-sequenced drain
+//! (`algo=magm-bdp` and `algo=hybrid`; see
+//! [`crate::sampler::SequencedSink`]). The decomposition is over fixed
+//! logical shards, so the streamed bytes are **identical for every
+//! granted thread count** per `(spec, seed)` — a `threads=8` reply is
+//! byte-for-byte the `threads=1` reply, just faster. The effective
+//! grant is capped by the worker-pool size ([`GenerationService::run_all`]
+//! and the network server both cap before dispatch), reported in
+//! [`JobResult::threads`] and counted by `service.parallel_jobs`.
+//!
+//! [`MagmBdpSampler::sample_parallel_into`]:
+//!     crate::sampler::MagmBdpSampler::sample_parallel_into
+//!
 //! # Failure model
 //!
 //! Every job is a hard fault *and* liveness boundary, and every failure
@@ -52,7 +75,8 @@
 //!
 //! # Metrics
 //!
-//! `service.jobs` / `service.errors` / `service.panics` counters, the
+//! `service.jobs` / `service.errors` / `service.panics` /
+//! `service.parallel_jobs` counters, the
 //! `service.job_latency_ns` histogram, the `service.edges`,
 //! `service.bytes_written` and `service.busy_ns` counters, and the
 //! `service.edges_per_sec` gauge — the **aggregate** rate
@@ -63,6 +87,7 @@
 
 use std::sync::Arc;
 
+use crate::graph::HyperLogLog;
 use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::model::params::InitiatorMatrix;
 use crate::sampler::{
@@ -154,8 +179,9 @@ pub struct JobSpec {
     /// Ignored for streaming jobs (`output` set).
     pub collect_graph: bool,
     /// Stream accepted edges to this path instead of materialising the
-    /// graph in memory. Streaming jobs report `edges_simple = 0` (the
-    /// distinct-edge count requires the full edge set).
+    /// graph in memory. Streaming jobs report `edges_simple` as a
+    /// [`HyperLogLog`] estimate (the exact count requires the full edge
+    /// set, which streaming deliberately never holds).
     pub output: Option<String>,
     /// File format of `output` (default TSV).
     pub format: OutputFormat,
@@ -163,6 +189,14 @@ pub struct JobSpec {
     /// network server additionally applies its own default cap; the
     /// effective deadline is the tighter of the two.
     pub timeout_ms: Option<u64>,
+    /// Worker threads to fan this job's edge stream across (`threads=`
+    /// intake key, validated `1..=MAX_THREADS`, `algo=magm-bdp` /
+    /// `algo=hybrid` only). `None` keeps the exact legacy sequential
+    /// path; `Some(k)` routes through the chunk-sequenced parallel
+    /// sampler, whose output is byte-identical for every `k`. The
+    /// effective grant is capped to the worker-pool size by
+    /// [`GenerationService::run_all`] and the network server.
+    pub threads: Option<usize>,
 }
 
 impl JobSpec {
@@ -177,11 +211,17 @@ impl JobSpec {
     /// typos (`timeout_ms=99999999999`) the way the `n=` cap does.
     pub const MAX_TIMEOUT_MS: u64 = 86_400_000;
 
+    /// Largest accepted `threads=`. The sampler clamps its fan-out to
+    /// [`crate::sampler::LOGICAL_SHARDS`] anyway; this cap rejects
+    /// trace-file typos (`threads=9999`) at intake like the other keys.
+    pub const MAX_THREADS: usize = 256;
+
     /// Parse `theta=a,b,c,d d=12 mu=0.4 n=4096 seed=7 algo=magm-bdp
-    /// output=/tmp/e.tsv format=tsv`. Unknown keys and duplicate keys are
-    /// rejected (silent last-wins would hide trace-file typos); omitted
-    /// keys get defaults (`theta=Θ₁`, `n=2^d`, `seed=id`,
-    /// `algo=magm-bdp`, no output, `format=tsv`).
+    /// output=/tmp/e.tsv format=tsv threads=8`. Unknown keys and
+    /// duplicate keys are rejected (silent last-wins would hide
+    /// trace-file typos); omitted keys get defaults (`theta=Θ₁`,
+    /// `n=2^d`, `seed=id`, `algo=magm-bdp`, no output, `format=tsv`,
+    /// sequential execution).
     pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
         let mut theta = InitiatorMatrix::THETA1;
         let mut d: usize = 12;
@@ -192,6 +232,7 @@ impl JobSpec {
         let mut output: Option<String> = None;
         let mut format = OutputFormat::Tsv;
         let mut timeout_ms: Option<u64> = None;
+        let mut threads: Option<usize> = None;
         let mut seen: Vec<&str> = Vec::new();
         for tok in line.split_whitespace() {
             let (k, v) = tok
@@ -227,6 +268,9 @@ impl JobSpec {
                     timeout_ms =
                         Some(v.parse().map_err(|e| format!("job {id}: timeout_ms: {e}"))?)
                 }
+                "threads" => {
+                    threads = Some(v.parse().map_err(|e| format!("job {id}: threads: {e}"))?)
+                }
                 _ => return Err(format!("job {id}: unknown key {k:?}")),
             }
         }
@@ -259,6 +303,20 @@ impl JobSpec {
                 ));
             }
         }
+        if let Some(t) = threads {
+            if t == 0 || t > Self::MAX_THREADS {
+                return Err(format!(
+                    "job {id}: threads must be in 1..={}",
+                    Self::MAX_THREADS
+                ));
+            }
+            if !matches!(algo, Algo::MagmBdp | Algo::Hybrid) {
+                return Err(format!(
+                    "job {id}: threads= requires algo=magm-bdp or algo=hybrid (got {})",
+                    algo.label()
+                ));
+            }
+        }
         Ok(JobSpec {
             id,
             theta,
@@ -271,6 +329,7 @@ impl JobSpec {
             output,
             format,
             timeout_ms,
+            threads,
         })
     }
 
@@ -293,9 +352,17 @@ pub struct JobResult {
     pub nodes: u64,
     /// Multi-graph edge count.
     pub edges: u64,
-    /// Distinct-edge count (0 for streaming jobs — it needs the full
-    /// edge set, which streaming deliberately never holds).
+    /// Distinct-edge count. Exact for in-memory jobs; for streaming
+    /// jobs a [`HyperLogLog`] estimate (`simple_approx` set) — the
+    /// exact count needs the full edge set, which streaming
+    /// deliberately never holds.
     pub edges_simple: u64,
+    /// Set when `edges_simple` is a sketch estimate (streaming jobs),
+    /// clear when it is an exact count (in-memory jobs, failures).
+    pub simple_approx: bool,
+    /// Threads granted to this job (1 on the sequential path; capped by
+    /// the worker-pool size for `threads=` jobs).
+    pub threads: usize,
     pub proposed: u64,
     pub wall: std::time::Duration,
     pub edges_list: Option<crate::graph::EdgeList>,
@@ -344,9 +411,13 @@ impl GenerationService {
     pub fn run_all(&self, specs: Vec<JobSpec>) -> Vec<JobResult> {
         let specs = Arc::new(specs);
         let metrics = self.metrics.clone();
+        let pool_size = self.pool.size();
         let n = specs.len();
         self.pool.map_indexed(n, move |i| {
-            let spec = specs[i].clone();
+            let mut spec = specs[i].clone();
+            if let Some(t) = spec.threads.as_mut() {
+                *t = crate::util::threadpool::grant_threads(*t, pool_size);
+            }
             run_job_guarded(&spec, &metrics)
         })
     }
@@ -405,11 +476,87 @@ pub fn sample_job_into(
     }
 }
 
+/// [`sample_job_into`] plus the multi-core dispatch: a spec carrying a
+/// `threads=` grant routes `magm-bdp` (and `hybrid`, which delegates
+/// when its cost model picks MAGM-BDP) through the chunk-sequenced
+/// parallel sampler. Its decomposition is over fixed logical shards, so
+/// the edge stream is **byte-identical for every grant** — including
+/// `threads=1`, which runs the same parallel schedule on one worker.
+/// Jobs without `threads=` take the exact legacy sequential path.
+fn sample_job_streaming<S: EdgeSink + Send>(
+    spec: &JobSpec,
+    params: &MagmParams,
+    assignment: &AttributeAssignment,
+    rng: &mut Xoshiro256pp,
+    sink: &mut S,
+    metrics: &Registry,
+) -> Result<(u64, u64), String> {
+    let threads = match spec.threads {
+        None => return sample_job_into(spec, params, assignment, rng, sink, metrics),
+        Some(t) => t,
+    };
+    match spec.algo {
+        Algo::MagmBdp => {
+            let s = MagmBdpSampler::new(params, assignment);
+            Ok(s.sample_parallel_into(spec.seed, threads, sink))
+        }
+        Algo::Hybrid => {
+            let s = HybridSampler::new(params, assignment, rng);
+            Ok(s.sample_parallel_into(spec.seed, threads, sink))
+        }
+        // parse_line rejects threads= for the rest; programmatic specs
+        // just fall back to the sequential dispatch.
+        _ => sample_job_into(spec, params, assignment, rng, sink, metrics),
+    }
+}
+
+/// Tees every streamed edge into a [`HyperLogLog`] sketch on its way to
+/// the wrapped sink, so streaming jobs report an approximate
+/// distinct-edge count without ever holding the edge set. Forwards the
+/// wrapped sink's ordering and cancellation contracts, and is `Send`
+/// whenever the wrapped sink is — which the parallel sequenced drain
+/// requires of its terminal.
+struct EstimatingSink<S: EdgeSink> {
+    inner: S,
+    sketch: HyperLogLog,
+}
+
+impl<S: EdgeSink> EstimatingSink<S> {
+    fn new(inner: S) -> Self {
+        Self {
+            inner,
+            sketch: HyperLogLog::new(),
+        }
+    }
+}
+
+impl<S: EdgeSink> EdgeSink for EstimatingSink<S> {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        self.sketch.insert(src, dst);
+        self.inner.push(src, dst);
+    }
+
+    fn finish(&mut self) {
+        self.inner.finish();
+    }
+
+    fn order_sensitive(&self) -> bool {
+        self.inner.order_sensitive()
+    }
+
+    fn cancel_token(&self) -> Option<CancelToken> {
+        self.inner.cancel_token()
+    }
+}
+
 /// What one execution produced besides the counts.
 struct JobOutcome {
     proposed: u64,
     edges: u64,
     edges_simple: u64,
+    /// `edges_simple` is a sketch estimate (streaming), not exact.
+    simple_approx: bool,
     edges_list: Option<crate::graph::EdgeList>,
     bytes_written: u64,
 }
@@ -420,7 +567,7 @@ struct JobOutcome {
 /// payload is byte-identical to the file `run_job` writes locally for
 /// the same `(spec, seed)`.
 #[allow(clippy::too_many_arguments)]
-fn stream_job<W: std::io::Write>(
+fn stream_job<W: std::io::Write + Send>(
     spec: &JobSpec,
     params: &MagmParams,
     assignment: &AttributeAssignment,
@@ -431,34 +578,43 @@ fn stream_job<W: std::io::Write>(
     label: &str,
     token: &CancelToken,
 ) -> Result<JobOutcome, JobError> {
-    let (counts, bytes) = match format {
+    let (counts, bytes, simple) = match format {
         OutputFormat::Tsv => {
             let mut sink = TsvSink::new(writer);
-            let counts = {
-                let mut guarded = GuardedSink::new(&mut sink, token.clone());
-                sample_job_into(spec, params, assignment, rng, &mut guarded, metrics)
-                    .map_err(JobError::Other)?
+            let (counts, simple) = {
+                let mut est = EstimatingSink::new(&mut sink);
+                let counts = {
+                    let mut guarded = GuardedSink::new(&mut est, token.clone());
+                    sample_job_streaming(spec, params, assignment, rng, &mut guarded, metrics)
+                        .map_err(JobError::Other)?
+                };
+                (counts, est.sketch.estimate())
             };
             sink.try_finish()
                 .map_err(|e| JobError::Io(format!("write {label}: {e}")))?;
-            (counts, sink.bytes)
+            (counts, sink.bytes, simple)
         }
         OutputFormat::Binary => {
             let mut sink = crate::graph::io::BinaryEdgeSink::new(writer, params.n());
-            let counts = {
-                let mut guarded = GuardedSink::new(&mut sink, token.clone());
-                sample_job_into(spec, params, assignment, rng, &mut guarded, metrics)
-                    .map_err(JobError::Other)?
+            let (counts, simple) = {
+                let mut est = EstimatingSink::new(&mut sink);
+                let counts = {
+                    let mut guarded = GuardedSink::new(&mut est, token.clone());
+                    sample_job_streaming(spec, params, assignment, rng, &mut guarded, metrics)
+                        .map_err(JobError::Other)?
+                };
+                (counts, est.sketch.estimate())
             };
             sink.try_finish()
                 .map_err(|e| JobError::Io(format!("write {label}: {e}")))?;
-            (counts, sink.bytes)
+            (counts, sink.bytes, simple)
         }
     };
     Ok(JobOutcome {
         proposed: counts.0,
         edges: counts.1,
-        edges_simple: 0,
+        edges_simple: simple,
+        simple_approx: true,
         edges_list: None,
         bytes_written: bytes,
     })
@@ -478,7 +634,7 @@ pub fn run_job(spec: &JobSpec, metrics: &Registry) -> JobResult {
 pub fn run_job_with(
     spec: &JobSpec,
     metrics: &Registry,
-    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+    respond: Option<(&mut (dyn std::io::Write + Send), OutputFormat)>,
 ) -> JobResult {
     run_job_ctl(spec, metrics, respond, &CancelToken::with_timeout(spec.timeout()))
 }
@@ -491,7 +647,7 @@ pub fn run_job_with(
 pub fn run_job_ctl(
     spec: &JobSpec,
     metrics: &Registry,
-    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+    respond: Option<(&mut (dyn std::io::Write + Send), OutputFormat)>,
     token: &CancelToken,
 ) -> JobResult {
     let t = std::time::Instant::now();
@@ -528,14 +684,17 @@ pub fn run_job_ctl(
                     let mut sink = CollectSink::new(params.n());
                     let (proposed, edges) = {
                         let mut guarded = GuardedSink::new(&mut sink, token.clone());
-                        sample_job_into(spec, &params, &assignment, &mut rng, &mut guarded, metrics)
-                            .map_err(JobError::Other)?
+                        sample_job_streaming(
+                            spec, &params, &assignment, &mut rng, &mut guarded, metrics,
+                        )
+                        .map_err(JobError::Other)?
                     };
                     let simple = sink.graph.into_simple();
                     Ok(JobOutcome {
                         proposed,
                         edges,
                         edges_simple: simple.num_edges() as u64,
+                        simple_approx: false,
                         edges_list: spec.collect_graph.then_some(simple),
                         bytes_written: 0,
                     })
@@ -564,6 +723,9 @@ pub fn run_job_ctl(
 
     let wall = t.elapsed();
     metrics.counter("service.jobs").inc();
+    if spec.threads.is_some() {
+        metrics.counter("service.parallel_jobs").inc();
+    }
     metrics
         .histogram("service.job_latency_ns")
         .observe(wall.as_nanos() as f64);
@@ -581,6 +743,8 @@ pub fn run_job_ctl(
                 nodes: spec.n,
                 edges: out.edges,
                 edges_simple: out.edges_simple,
+                simple_approx: out.simple_approx,
+                threads: spec.threads.unwrap_or(1),
                 proposed: out.proposed,
                 wall,
                 edges_list: out.edges_list,
@@ -624,6 +788,8 @@ fn error_result(spec: &JobSpec, wall: std::time::Duration, error: JobError) -> J
         nodes: spec.n,
         edges: 0,
         edges_simple: 0,
+        simple_approx: false,
+        threads: spec.threads.unwrap_or(1),
         proposed: 0,
         wall,
         edges_list: None,
@@ -645,7 +811,7 @@ fn error_result(spec: &JobSpec, wall: std::time::Duration, error: JobError) -> J
 pub fn run_job_guarded_with(
     spec: &JobSpec,
     metrics: &Registry,
-    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+    respond: Option<(&mut (dyn std::io::Write + Send), OutputFormat)>,
 ) -> JobResult {
     run_job_guarded_ctl(spec, metrics, respond, &CancelToken::with_timeout(spec.timeout()))
 }
@@ -654,7 +820,7 @@ pub fn run_job_guarded_with(
 pub fn run_job_guarded_ctl(
     spec: &JobSpec,
     metrics: &Registry,
-    respond: Option<(&mut dyn std::io::Write, OutputFormat)>,
+    respond: Option<(&mut (dyn std::io::Write + Send), OutputFormat)>,
     token: &CancelToken,
 ) -> JobResult {
     let t = std::time::Instant::now();
@@ -766,6 +932,70 @@ mod tests {
         // Values that do not even fit u64 fail at parse.
         assert!(JobSpec::parse_line(0, "d=6 timeout_ms=99999999999999999999999").is_err());
         assert!(JobSpec::parse_line(0, "d=6 timeout_ms=5 timeout_ms=9").is_err());
+    }
+
+    #[test]
+    fn parse_line_validates_threads() {
+        let j = JobSpec::parse_line(0, "d=6 threads=4").unwrap();
+        assert_eq!(j.threads, Some(4));
+        assert!(JobSpec::parse_line(0, "d=6").unwrap().threads.is_none());
+        let err = JobSpec::parse_line(0, "d=6 threads=0").unwrap_err();
+        assert!(err.contains("1..="), "{err}");
+        let err = JobSpec::parse_line(0, "d=6 threads=257").unwrap_err();
+        assert!(err.contains("1..="), "{err}");
+        assert!(JobSpec::parse_line(0, "d=6 threads=x").is_err());
+        assert!(JobSpec::parse_line(0, "d=6 threads=2 threads=4").is_err());
+        // Only the parallel-capable algorithms accept a fan-out.
+        let err = JobSpec::parse_line(0, "d=6 algo=simple threads=2").unwrap_err();
+        assert!(err.contains("algo"), "{err}");
+        assert!(JobSpec::parse_line(0, "d=6 algo=quilting threads=2").is_err());
+        let j = JobSpec::parse_line(0, "d=6 algo=hybrid threads=256").unwrap();
+        assert_eq!(j.threads, Some(256));
+    }
+
+    #[test]
+    fn threaded_respond_stream_is_byte_identical_across_grants() {
+        let metrics = Registry::new();
+        let mut payloads: Vec<Vec<u8>> = Vec::new();
+        for threads in [1usize, 2, 7] {
+            let mut spec = JobSpec::parse_line(0, "d=8 mu=0.5 seed=21").unwrap();
+            spec.threads = Some(threads);
+            let mut buf: Vec<u8> = Vec::new();
+            let r = run_job_with(&spec, &metrics, Some((&mut buf, OutputFormat::Binary)));
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.threads, threads);
+            assert!(r.simple_approx);
+            assert!(r.edges > 0);
+            payloads.push(buf);
+        }
+        assert_eq!(payloads[0], payloads[1], "threads=2 changed the bytes");
+        assert_eq!(payloads[0], payloads[2], "threads=7 changed the bytes");
+        assert_eq!(metrics.counter("service.parallel_jobs").get(), 3);
+    }
+
+    #[test]
+    fn threaded_collect_job_stays_exact_and_deterministic() {
+        // In-memory parallel jobs still dedup exactly (no sketch).
+        let spec = JobSpec::parse_line(0, "d=6 mu=0.5 seed=33 threads=4").unwrap();
+        let m = Registry::new();
+        let a = run_job(&spec, &m);
+        let b = run_job(&spec, &m);
+        assert!(a.error.is_none(), "{:?}", a.error);
+        assert!(!a.simple_approx, "collect mode stays exact");
+        assert!(a.edges > 0);
+        assert!(a.edges_simple <= a.edges);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.edges_simple, b.edges_simple);
+    }
+
+    #[test]
+    fn run_all_caps_thread_grants_to_the_pool() {
+        let svc = GenerationService::new(2);
+        let spec = JobSpec::parse_line(0, "d=6 mu=0.5 seed=9 threads=64").unwrap();
+        let r = svc.run_all(vec![spec]);
+        assert!(r[0].error.is_none(), "{:?}", r[0].error);
+        assert_eq!(r[0].threads, 2, "grant capped by pool size");
+        assert_eq!(svc.metrics().counter("service.parallel_jobs").get(), 1);
     }
 
     #[test]
@@ -901,7 +1131,16 @@ mod tests {
         let r = run_job(&spec, &metrics);
         assert!(r.error.is_none(), "{:?}", r.error);
         assert!(r.edges > 0);
-        assert_eq!(r.edges_simple, 0, "streaming jobs do not dedup");
+        // Streaming jobs never hold the edge set; edges_simple is the
+        // HyperLogLog estimate of the distinct count, flagged as such.
+        assert!(r.simple_approx, "streaming edges_simple is an estimate");
+        assert!(r.edges_simple > 0, "the sketch saw the stream");
+        assert!(
+            (r.edges_simple as f64) <= r.edges as f64 * 1.2,
+            "estimate {} implausible for {} edges",
+            r.edges_simple,
+            r.edges
+        );
         assert!(r.edges_list.is_none());
         assert_eq!(r.output.as_deref(), Some(path.as_str()));
         assert!(r.bytes_written > 0);

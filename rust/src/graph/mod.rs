@@ -11,4 +11,4 @@ pub mod stats;
 
 pub use csr::Graph;
 pub use edgelist::{EdgeList, MultiEdgeList};
-pub use stats::DegreeStats;
+pub use stats::{DegreeStats, HyperLogLog};

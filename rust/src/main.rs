@@ -225,10 +225,11 @@ fn run_stream_algo_deadline<S: EdgeSink + Send>(
 /// Stream the sampled multi-edge list straight to `path` (`.bin` selects
 /// the binary edge-list format, anything else TSV) without building a
 /// graph. Single-threaded runs stream with O(write buffer) memory; with
-/// `--threads N` the sharded path still buffers per-shard edge lists so
-/// the file reproduces the deterministic shard order (see the
-/// `ShardedSink` docs — count-only terminals are the bounded-memory
-/// case). Deferred sink I/O errors propagate to the CLI exit code.
+/// `--threads N` the chunk-sequenced drain (see the `SequencedSink`
+/// docs) delivers shard chunks in canonical order while buffering at
+/// most O(threads × chunk × window) edges — and the file's bytes are
+/// identical for every thread count. Deferred sink I/O errors propagate
+/// to the CLI exit code.
 #[allow(clippy::too_many_arguments)]
 fn cmd_sample_stream(
     params: &MagmParams,
@@ -592,10 +593,10 @@ modes:
 
 wire protocol (--listen):
   requests:  one job per line in the trace grammar (d=, mu=, n=, seed=,
-             algo=, timeout_ms=, ...) plus `id=<u64>` (correlation id)
-             and `respond=none|tsv|bin` (stream edges back instead of
-             `OK`); control lines PING, METRICS, QUIT, DRAIN; `#`
-             comments ignored.
+             algo=, timeout_ms=, threads=, ...) plus `id=<u64>`
+             (correlation id) and `respond=none|tsv|bin` (stream edges
+             back instead of `OK`); control lines PING, METRICS, QUIT,
+             DRAIN; `#` comments ignored.
   responses: `OK id=.. edges=..` | `ERR id=.. retry=<bool> msg=..` |
              `CHUNK id=.. bytes=<k>` + k raw bytes + newline, ending in
              `END id=.. format=.. bytes=..` | `DRAINING queued=<n>` |
@@ -604,6 +605,16 @@ wire protocol (--listen):
   A full queue rejects jobs with `ERR ... intake queue full` instead of
   buffering unboundedly; parse errors and sampler panics fail only their
   own job — the pool and the connection always survive.
+
+multi-core jobs:
+  `threads=<1..=256>` (algo=magm-bdp|hybrid) fans one job's edge stream
+  across that many workers through the chunk-sequenced parallel
+  sampler. The grant is capped at the worker-pool size and echoed as
+  `threads=` in the OK/END response; the payload bytes are identical
+  for every grant, so `threads=` only buys wall-clock. Streaming jobs
+  report `edges_simple≈` — a HyperLogLog estimate of the distinct-edge
+  count (exact dedup needs the full edge set, which streaming never
+  holds).
 
 deadlines and shutdown:
   every job runs under the tighter of its own `timeout_ms=` and
@@ -696,7 +707,12 @@ fn cmd_serve(tokens: &[String]) -> Result<(), String> {
             r.algo,
             r.nodes,
             r.edges,
-            r.edges_simple,
+            // Streaming jobs report a HyperLogLog estimate, marked `≈`.
+            if r.simple_approx {
+                format!("≈{}", r.edges_simple)
+            } else {
+                r.edges_simple.to_string()
+            },
             r.wall.as_secs_f64() * 1e3,
             match &r.output {
                 Some(path) => format!("  -> {path} ({} bytes)", r.bytes_written),

@@ -166,8 +166,9 @@ impl<'a> HybridSampler<'a> {
     }
 
     /// Sink-first form of [`sample_parallel`](Self::sample_parallel):
-    /// Algorithm 2 streams through its sharded sink layer; the baselines
-    /// stream sequentially from a seeded RNG. Returns
+    /// Algorithm 2 streams through its sequenced sharded sink layer
+    /// (byte-identical per seed whatever the thread count); the
+    /// baselines stream sequentially from a seeded RNG. Returns
     /// `(proposed, accepted)`.
     pub fn sample_parallel_into(
         &self,
@@ -186,6 +187,26 @@ impl<'a> HybridSampler<'a> {
                 let mut rng = Xoshiro256pp::seed_from_u64(seed);
                 Sampler::sample_into(self, &mut rng, sink)
             }
+        }
+    }
+
+    /// Explicit-window form of
+    /// [`sample_parallel_into`](Self::sample_parallel_into); the window
+    /// only affects peak buffering, never the edge stream.
+    pub fn sample_parallel_into_windowed(
+        &self,
+        seed: u64,
+        threads: usize,
+        window: usize,
+        sink: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        match self.choice {
+            HybridChoice::MagmBdp => self
+                .magm_bdp
+                .as_ref()
+                .unwrap()
+                .sample_parallel_into_windowed(seed, threads, window, sink),
+            _ => self.sample_parallel_into(seed, threads, sink),
         }
     }
 }

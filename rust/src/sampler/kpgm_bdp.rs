@@ -2,10 +2,12 @@
 //! (Leskovec et al., 2010, as formalised by Theorem 2).
 
 use super::bdp::BdpSampler;
-use super::sink::EdgeSink;
+use super::magm_bdp::{LOGICAL_SHARDS, SEQ_WINDOW};
+use super::sink::{EdgeSink, ShardedSink};
 use super::Sampler;
 use crate::model::kpgm::KpgmParams;
-use crate::util::rng::Rng;
+use crate::util::rng::dist::binomial;
+use crate::util::rng::{split_streams, Rng, SeedableRng, Xoshiro256pp};
 
 /// BDP-based KPGM sampler.
 ///
@@ -41,6 +43,79 @@ impl KpgmBdpSampler {
     /// The compiled underlying BDP.
     pub fn bdp(&self) -> &BdpSampler {
         &self.bdp
+    }
+
+    /// Multi-threaded streaming with the default reordering window; see
+    /// [`sample_parallel_into_windowed`](Self::sample_parallel_into_windowed).
+    pub fn sample_parallel_into(
+        &self,
+        seed: u64,
+        threads: usize,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        self.sample_parallel_into_windowed(seed, threads, SEQ_WINDOW, terminal)
+    }
+
+    /// Multi-threaded streaming sampler, same decomposition contract as
+    /// [`MagmBdpSampler::sample_parallel_into_windowed`]: the ball total
+    /// is split across [`LOGICAL_SHARDS`] fixed logical shards by
+    /// sequential binomial thinning, each shard drops with its own
+    /// forked RNG stream, and workers stream through the sequenced
+    /// reordering drain — the edge stream is byte-identical for every
+    /// `(threads, window)` combination per seed. Plain mode only: the
+    /// compensated variant needs a *global* distinct-edge set, which is
+    /// inherently sequential, so it falls back to the seeded sequential
+    /// stream (still deterministic per seed). Returns
+    /// `(proposed, accepted)`.
+    ///
+    /// [`MagmBdpSampler::sample_parallel_into_windowed`]:
+    ///     super::magm_bdp::MagmBdpSampler::sample_parallel_into_windowed
+    pub fn sample_parallel_into_windowed(
+        &self,
+        seed: u64,
+        threads: usize,
+        window: usize,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        if self.compensate {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            return Sampler::sample_into(self, &mut rng, terminal);
+        }
+        let threads = threads.clamp(1, LOGICAL_SHARDS);
+        let window = window.max(1);
+        let mut root = Xoshiro256pp::seed_from_u64(seed);
+        let total = self.bdp.draw_ball_count(&mut root);
+        // quotas[s]: logical shard s's share — a function of seed alone.
+        let mut quotas = vec![0u64; LOGICAL_SHARDS];
+        let mut remaining = total;
+        for (s, quota) in quotas.iter_mut().enumerate() {
+            let left = (LOGICAL_SHARDS - s) as u64;
+            let take = if left == 1 {
+                remaining
+            } else {
+                binomial(&mut root, remaining, 1.0 / left as f64)
+            };
+            *quota = take;
+            remaining -= take;
+        }
+        let shard_rngs: Vec<Xoshiro256pp> =
+            split_streams(seed ^ 0x9E3779B97F4A7C15, LOGICAL_SHARDS);
+        let seq = ShardedSink::sequenced(terminal, threads, LOGICAL_SHARDS, window);
+        crate::util::threadpool::scoped_chunks(threads, threads, |w, _| {
+            let mut shard = w;
+            while shard < LOGICAL_SHARDS {
+                let mut rng = shard_rngs[shard].clone();
+                let mut handle = seq.handle(w, shard);
+                for _ in 0..quotas[shard] {
+                    let (i, j) = self.bdp.drop_ball(&mut rng);
+                    handle.push(i as u32, j as u32);
+                }
+                handle.complete();
+                shard += threads;
+            }
+        });
+        seq.finish();
+        (total, total)
     }
 }
 
@@ -141,6 +216,39 @@ mod tests {
         assert_eq!(g.num_edges(), target);
         // Output is already deduplicated.
         assert_eq!(g.into_simple().num_edges(), target);
+    }
+
+    #[test]
+    fn parallel_plain_mode_is_thread_and_window_invariant() {
+        use crate::sampler::sink::CollectSink;
+        let params = KpgmParams::replicated(InitiatorMatrix::THETA1, 7);
+        let s = KpgmBdpSampler::new(&params);
+        let mut base = CollectSink::new(params.n());
+        let (p0, a0) = s.sample_parallel_into_windowed(11, 1, 1, &mut base);
+        assert_eq!(p0, a0, "plain mode: every ball is an edge");
+        for (threads, window) in [(2usize, 1usize), (7, 4), (64, 2)] {
+            let mut c = CollectSink::new(params.n());
+            let r = s.sample_parallel_into_windowed(11, threads, window, &mut c);
+            assert_eq!(r, (p0, a0), "t={threads} w={window}: counts drifted");
+            assert_eq!(
+                c.graph.edges(),
+                base.graph.edges(),
+                "t={threads} w={window}: edge stream drifted"
+            );
+        }
+    }
+
+    #[test]
+    fn compensated_parallel_falls_back_to_the_sequential_stream() {
+        use crate::sampler::sink::CollectSink;
+        let params = KpgmParams::replicated(InitiatorMatrix::THETA1, 6);
+        let s = KpgmBdpSampler::with_compensation(&params);
+        let mut seq = CollectSink::new(params.n());
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        Sampler::sample_into(&s, &mut rng, &mut seq);
+        let mut par = CollectSink::new(params.n());
+        s.sample_parallel_into(5, 4, &mut par);
+        assert_eq!(seq.graph.edges(), par.graph.edges());
     }
 
     #[test]

@@ -34,6 +34,20 @@ use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::util::rng::dist::binomial;
 use crate::util::rng::{split_streams, Rng, SeedableRng, Xoshiro256pp};
 
+/// Fixed logical-shard count for the parallel decomposition. Quotas and
+/// RNG streams are per *logical shard* — never per worker thread — so
+/// the sampled edge stream is a function of the seed alone and stays
+/// byte-identical for every thread count (workers just pick up shards
+/// round-robin). 64 divides or over-subscribes every realistic core
+/// count while keeping the quota-split loop and per-shard RNG fork
+/// negligible.
+pub const LOGICAL_SHARDS: usize = 64;
+
+/// Default reordering window (undelivered chunks per worker) for the
+/// sequenced parallel drain: deep enough to absorb shard-size jitter,
+/// shallow enough that peak buffering stays a few chunks per thread.
+pub const SEQ_WINDOW: usize = 4;
+
 /// Batched evaluation of acceptance probabilities (step 2 above).
 pub trait AcceptBackend {
     /// For each proposed `(c, c')` in `balls`, write `Λ_cc' / Λ'^(AB)_cc'`
@@ -284,37 +298,60 @@ impl<'a> MagmBdpSampler<'a> {
         sink.graph
     }
 
-    /// Multi-threaded streaming sampler. The per-component Poisson total
-    /// is drawn once from `seed`'s root stream, then split across
-    /// `threads` shards by sequential binomial thinning (shard `t` takes
-    /// `Binomial(remaining, 1/(threads−t))`) — an exact multinomial split
-    /// of the total, so the joint ball distribution is identical to the
-    /// sequential sampler's. Each shard drops its quota with an
-    /// independent RNG stream into a private [`ShardedSink`] buffer:
-    /// order-insensitive terminals (counting) absorb chunks as they fill
-    /// (O(shard buffer) peak memory); order-sensitive ones are drained
-    /// once, in shard order, reproducing the sequential-merge edge order.
-    /// Deterministic for a fixed `(seed, threads)` pair. Returns
-    /// `(proposed, accepted)`.
+    /// Multi-threaded streaming sampler with the default reordering
+    /// window ([`SEQ_WINDOW`]); see
+    /// [`sample_parallel_into_windowed`](Self::sample_parallel_into_windowed).
     pub fn sample_parallel_into(
         &self,
         seed: u64,
         threads: usize,
         terminal: &mut (dyn EdgeSink + Send),
     ) -> (u64, u64) {
-        let threads = threads.max(1);
+        self.sample_parallel_into_windowed(seed, threads, SEQ_WINDOW, terminal)
+    }
+
+    /// Multi-threaded streaming sampler. The decomposition is over
+    /// [`LOGICAL_SHARDS`] **fixed logical shards**, not over `threads`:
+    /// each per-component Poisson total is drawn once from `seed`'s root
+    /// stream, then split across the logical shards by sequential
+    /// binomial thinning (shard `s` takes
+    /// `Binomial(remaining, 1/(LOGICAL_SHARDS−s))`) — an exact
+    /// multinomial split of the total, so the joint ball distribution is
+    /// identical to the sequential sampler's. Each logical shard drops
+    /// its quota with its own forked RNG stream; worker `w` of `W`
+    /// processes shards `w, w+W, w+2W, …` in order, streaming chunks
+    /// through a [`ShardedSink::sequenced`] reordering window that
+    /// delivers them to order-sensitive terminals in canonical shard
+    /// order with `O(threads × chunk × window)` peak buffering
+    /// (order-insensitive terminals flush eagerly instead).
+    ///
+    /// Because quotas, shard RNG streams and delivery order are all
+    /// functions of `seed` alone, the edge stream — every byte of a
+    /// TSV/binary file — is **identical for every `(threads, window)`
+    /// combination**. `threads` is clamped to `1..=LOGICAL_SHARDS`.
+    /// Returns `(proposed, accepted)`.
+    pub fn sample_parallel_into_windowed(
+        &self,
+        seed: u64,
+        threads: usize,
+        window: usize,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        let threads = threads.clamp(1, LOGICAL_SHARDS);
+        let window = window.max(1);
         let mut root = Xoshiro256pp::seed_from_u64(seed);
         // Component ball totals from the root stream.
         let totals: Vec<u64> = Component::ALL
             .iter()
             .map(|&c| self.proposal.bdp(c).draw_ball_count(&mut root))
             .collect();
-        // quotas[t][ci]: shard t's share of component ci's total.
-        let mut quotas = vec![[0u64; 4]; threads];
+        // quotas[s][ci]: logical shard s's share of component ci's total
+        // — a function of `seed` alone, never of `threads`.
+        let mut quotas = vec![[0u64; 4]; LOGICAL_SHARDS];
         for (ci, &total) in totals.iter().enumerate() {
             let mut remaining = total;
-            for (t, quota) in quotas.iter_mut().enumerate() {
-                let left = (threads - t) as u64;
+            for (s, quota) in quotas.iter_mut().enumerate() {
+                let left = (LOGICAL_SHARDS - s) as u64;
                 let take = if left == 1 {
                     remaining
                 } else {
@@ -324,34 +361,34 @@ impl<'a> MagmBdpSampler<'a> {
                 remaining -= take;
             }
         }
-        let shard_rngs: Vec<Xoshiro256pp> = split_streams(seed ^ 0x9E3779B97F4A7C15, threads);
-        let sharded = ShardedSink::new(terminal);
-        let shards = crate::util::threadpool::scoped_chunks(threads, threads, |t, _| {
-            let mut rng = shard_rngs[t].clone();
-            let rng = &mut rng;
-            let mut handle = sharded.shard();
+        let shard_rngs: Vec<Xoshiro256pp> =
+            split_streams(seed ^ 0x9E3779B97F4A7C15, LOGICAL_SHARDS);
+        let seq = ShardedSink::sequenced(terminal, threads, LOGICAL_SHARDS, window);
+        let per_worker = crate::util::threadpool::scoped_chunks(threads, threads, |w, _| {
             let mut accepted = 0u64;
-            for (ci, &comp) in Component::ALL.iter().enumerate() {
-                let bdp = self.proposal.bdp(comp);
-                let (rowf, colf) = self.proposal.filters(comp);
-                for _ in 0..quotas[t][ci] {
-                    let Some((c, cp)) = bdp.drop_ball_pruned(rowf, colf, rng) else {
-                        continue;
-                    };
-                    let p = self.proposal.accept_prob(comp, c, cp);
-                    accepted += self.accept_one(c, cp, p, rng, &mut handle);
+            let mut shard = w;
+            while shard < LOGICAL_SHARDS {
+                let mut rng = shard_rngs[shard].clone();
+                let rng = &mut rng;
+                let mut handle = seq.handle(w, shard);
+                for (ci, &comp) in Component::ALL.iter().enumerate() {
+                    let bdp = self.proposal.bdp(comp);
+                    let (rowf, colf) = self.proposal.filters(comp);
+                    for _ in 0..quotas[shard][ci] {
+                        let Some((c, cp)) = bdp.drop_ball_pruned(rowf, colf, rng) else {
+                            continue;
+                        };
+                        let p = self.proposal.accept_prob(comp, c, cp);
+                        accepted += self.accept_one(c, cp, p, rng, &mut handle);
+                    }
                 }
+                handle.complete();
+                shard += threads;
             }
-            (accepted, handle.into_buffer())
+            accepted
         });
-        let mut accepted = 0u64;
-        let mut residuals = Vec::with_capacity(shards.len());
-        for (a, buf) in shards {
-            accepted += a;
-            residuals.push(buf);
-        }
-        sharded.finish(residuals);
-        (totals.iter().sum(), accepted)
+        seq.finish();
+        (totals.iter().sum(), per_worker.iter().sum())
     }
 }
 

@@ -28,14 +28,14 @@ pub use bdp::{BallBatch, BdpSampler, PrefixFilter};
 pub use cost::CostModel;
 pub use hybrid::{HybridChoice, HybridSampler};
 pub use kpgm_bdp::KpgmBdpSampler;
-pub use magm_bdp::{AcceptBackend, MagmBdpSampler, NativeAccept};
+pub use magm_bdp::{AcceptBackend, MagmBdpSampler, NativeAccept, LOGICAL_SHARDS, SEQ_WINDOW};
 pub use magm_simple::MagmSimpleSampler;
 pub use naive::{NaiveKpgmSampler, NaiveMagmSampler};
 pub use proposal::{Component, ProposalSet};
 pub use quilting::QuiltingSampler;
 pub use sink::{
-    CollectSink, CountSink, EdgeSink, FnWriter, GuardedSink, ShardHandle, ShardedSink, TeeSink,
-    TsvSink, Unordered,
+    CollectSink, CountSink, EdgeSink, FnWriter, GuardedSink, SeqHandle, SequencedSink,
+    SequencerStats, ShardHandle, ShardedSink, TeeSink, TsvSink, Unordered,
 };
 pub use undirected::UndirectedMagmSampler;
 

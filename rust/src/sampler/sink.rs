@@ -27,6 +27,32 @@
 //!   absorb full chunks eagerly (bounded memory); order-sensitive ones
 //!   are drained once, in shard order, so a fixed `(seed, threads)` pair
 //!   reproduces the sequential-merge edge order exactly.
+//! * [`SequencedSink`] — the sharded layer's *sequenced* drain mode and
+//!   the parallel path's default. Drain-once buffering (above) costs
+//!   O(largest shard) peak memory on order-sensitive terminals; the
+//!   sequencer instead has workers emit fixed-size chunks tagged
+//!   `(shard, seq)` (the seq is implicit: one producer per shard, FIFO
+//!   per-shard queues) into a **bounded reordering window** that
+//!   delivers them in canonical shard order. A delivery *cursor* walks
+//!   shards `0, 1, 2, …`; chunks at the cursor stream straight to the
+//!   terminal, out-of-order chunks park in the window, and a worker
+//!   whose window allowance (`window` undelivered chunks) is full
+//!   **parks with backpressure** — first helping drain if the cursor
+//!   has deliverable chunks — until the drain catches up. Peak buffered
+//!   memory is therefore `O(workers × chunk × window)` edges
+//!   (instrumented: [`SequencerStats::peak_buffered_chunks`]) instead
+//!   of O(largest shard), while the delivered edge order — and thus
+//!   every byte of an order-sensitive file — is *identical* for every
+//!   `(workers, window)` combination over the same logical shard
+//!   streams. Deadlock-freedom argument: shards are assigned to
+//!   workers round-robin and each worker produces its shards in
+//!   increasing order, so whenever the cursor shard's producer is
+//!   parked, either that shard is already complete (cursor advances)
+//!   or its queue is non-empty (deliverable) — and every parked worker
+//!   re-checks deliverability before sleeping, electing itself drainer
+//!   when possible. A drain failure (terminal panic or cancellation
+//!   unwind) flips a `failed` flag on the way out so parked siblings
+//!   wake and abort instead of waiting forever.
 //! * [`TeeSink`] — duplicate the stream into two sinks (e.g. file +
 //!   in-memory for degree statistics).
 //! * [`Unordered`] — opt a terminal out of ordering guarantees, enabling
@@ -53,8 +79,10 @@
 //! [`MagmBdpSampler::sample_parallel_into`]:
 //!     crate::sampler::MagmBdpSampler::sample_parallel_into
 
+use std::collections::VecDeque;
 use std::io::Write;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 use crate::graph::MultiEdgeList;
 use crate::util::cancel::{cancel_unwind, CancelToken};
@@ -439,6 +467,20 @@ impl<'a> ShardedSink<'a> {
         }
     }
 
+    /// The sharded layer's *sequenced* drain mode: a bounded reordering
+    /// window instead of drain-once buffering. The mode (windowed vs.
+    /// eager) is chosen automatically from the terminal's
+    /// [`EdgeSink::order_sensitive`]; see [`SequencedSink`] for the
+    /// protocol, contracts and memory bound.
+    pub fn sequenced(
+        terminal: &'a mut (dyn EdgeSink + Send),
+        workers: usize,
+        shards: usize,
+        window: usize,
+    ) -> SequencedSink<'a> {
+        SequencedSink::new(terminal, workers, shards, window)
+    }
+
     /// Drain the residual shard buffers **in shard order** and finish
     /// the terminal. `residuals[t]` must be shard `t`'s
     /// [`ShardHandle::into_buffer`] — the full shard stream for
@@ -501,6 +543,363 @@ impl EdgeSink for ShardHandle<'_, '_> {
 
     // finish() is a no-op: the terminal is finished exactly once by
     // `ShardedSink::finish` after every shard's residual is drained.
+
+    fn cancel_token(&self) -> Option<CancelToken> {
+        self.owner.token.clone()
+    }
+}
+
+/// How long a parked worker sleeps between re-checks of the window,
+/// the cancel token and the `failed` flag. Pure belt-and-braces: every
+/// state change that could unpark a worker also `notify_all`s.
+const SEQ_WAIT_TICK: Duration = Duration::from_millis(10);
+
+/// Instrumentation returned by [`SequencedSink::finish`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SequencerStats {
+    /// Highest number of chunks simultaneously parked in the reordering
+    /// window (0 in eager mode). The backpressure invariant bounds this
+    /// by `workers × window` whatever the sample size.
+    pub peak_buffered_chunks: usize,
+}
+
+/// One parked chunk: the producing worker and its edges.
+type SeqChunk = (usize, Vec<(u32, u32)>);
+
+/// Shared reordering state; every field is guarded by one mutex.
+struct SeqState {
+    /// Per-shard FIFO of `(worker, chunk)` — the implicit `(shard, seq)`
+    /// tag: one producer per shard pushes in sequence order.
+    queues: Vec<VecDeque<SeqChunk>>,
+    /// Shards whose producer called [`SeqHandle::complete`].
+    done: Vec<bool>,
+    /// Next shard owed to the terminal; only a drainer advances it.
+    cursor: usize,
+    /// Undelivered chunks per worker — the windowed backpressure gauge.
+    outstanding: Vec<usize>,
+    /// Total chunks currently parked in the window, and its high-water
+    /// mark (the tested O(workers × window) bound).
+    buffered: usize,
+    peak_buffered: usize,
+    /// Exactly one thread at a time delivers to the terminal.
+    draining: bool,
+    /// A drainer unwound (terminal panic or cancellation); parked
+    /// siblings must abort instead of waiting for a drain that will
+    /// never come.
+    failed: bool,
+}
+
+/// Chunk-sequencing fan-in: the bounded-memory drain mode for
+/// order-sensitive terminals (see the module docs for the design).
+///
+/// Contracts the producers must uphold (the parallel samplers do):
+///
+/// * exactly one [`SeqHandle`] per `(worker, shard)` pair, and exactly
+///   one producer per shard;
+/// * worker `w` of `W` produces shards `w, w + W, w + 2W, …` in
+///   increasing order, calling [`SeqHandle::complete`] on each before
+///   opening the next — the round-robin schedule the deadlock-freedom
+///   argument relies on.
+///
+/// The terminal is delivered shard `0`'s chunks in order, then shard
+/// `1`'s, … — byte-identical to a sequential merge, for every
+/// `(workers, window)` combination. Order-insensitive terminals flip
+/// the sink into *eager* mode automatically: chunks flush straight
+/// through under the terminal lock and no window state exists at all.
+pub struct SequencedSink<'a> {
+    terminal: Mutex<&'a mut (dyn EdgeSink + Send)>,
+    state: Mutex<SeqState>,
+    cv: Condvar,
+    /// Order-insensitive terminal: bypass the window entirely.
+    eager: bool,
+    chunk: usize,
+    /// Max undelivered chunks per worker before its `submit` parks.
+    window: usize,
+    /// The terminal's guard, captured once (same as [`ShardedSink`]).
+    token: Option<CancelToken>,
+    check_every: usize,
+}
+
+impl<'a> SequencedSink<'a> {
+    pub fn new(
+        terminal: &'a mut (dyn EdgeSink + Send),
+        workers: usize,
+        shards: usize,
+        window: usize,
+    ) -> Self {
+        Self::with_chunk(terminal, workers, shards, window, SHARD_CHUNK)
+    }
+
+    /// Explicit chunk capacity (tests use tiny chunks to exercise the
+    /// window without huge samples).
+    pub fn with_chunk(
+        terminal: &'a mut (dyn EdgeSink + Send),
+        workers: usize,
+        shards: usize,
+        window: usize,
+        chunk: usize,
+    ) -> Self {
+        assert!(workers > 0, "need at least one worker");
+        assert!(shards >= workers, "fewer shards than workers");
+        assert!(window > 0, "reordering window must be positive");
+        assert!(chunk > 0, "chunk must be positive");
+        let eager = !terminal.order_sensitive();
+        let token = terminal.cancel_token();
+        Self {
+            terminal: Mutex::new(terminal),
+            state: Mutex::new(SeqState {
+                queues: (0..shards).map(|_| VecDeque::new()).collect(),
+                done: vec![false; shards],
+                cursor: 0,
+                outstanding: vec![0; workers],
+                buffered: 0,
+                peak_buffered: 0,
+                draining: false,
+                failed: false,
+            }),
+            cv: Condvar::new(),
+            eager,
+            chunk,
+            window,
+            token,
+            check_every: chunk.min(GUARD_CHECK_EVERY),
+        }
+    }
+
+    /// The handle for `worker`'s production of `shard`; see the type
+    /// docs for the one-producer-per-shard and round-robin contracts.
+    pub fn handle(&self, worker: usize, shard: usize) -> SeqHandle<'_, 'a> {
+        SeqHandle {
+            owner: self,
+            worker,
+            shard,
+            buf: Vec::new(),
+            since_check: self.check_every.saturating_sub(1),
+        }
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, SeqState> {
+        // A poisoned state lock means some worker unwound mid-update;
+        // the `failed` flag (set by the drain guard) is the authority,
+        // so recover the guard rather than cascading panics.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Is there at least one chunk the cursor could deliver right now?
+    fn deliverable(st: &SeqState) -> bool {
+        let mut c = st.cursor;
+        while c < st.queues.len() && st.done[c] && st.queues[c].is_empty() {
+            c += 1;
+        }
+        c < st.queues.len() && !st.queues[c].is_empty()
+    }
+
+    /// Accept one chunk from `worker` for `shard`, parking (with
+    /// drain-helping) while the worker's window allowance is full.
+    fn submit(&self, worker: usize, shard: usize, chunk: Vec<(u32, u32)>) {
+        if self.eager {
+            let mut terminal = self.terminal.lock().unwrap();
+            for &(s, d) in &chunk {
+                terminal.push(s, d);
+            }
+            return;
+        }
+        let mut st = self.lock_state();
+        loop {
+            // Token before failure flag: a cancelled job must abort via
+            // `cancel_unwind` (the retryable verdict), not a bare panic.
+            if let Some(token) = &self.token {
+                if let Err(kind) = token.check() {
+                    drop(st);
+                    cancel_unwind(kind);
+                }
+            }
+            if st.failed {
+                drop(st);
+                panic!("sequenced drain failed; see the original worker error");
+            }
+            if st.outstanding[worker] < self.window {
+                break;
+            }
+            if !st.draining && Self::deliverable(&st) {
+                st.draining = true;
+                st = self.drain_locked(st);
+                continue;
+            }
+            st = self
+                .cv
+                .wait_timeout(st, SEQ_WAIT_TICK)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+        st.queues[shard].push_back((worker, chunk));
+        st.outstanding[worker] += 1;
+        st.buffered += 1;
+        st.peak_buffered = st.peak_buffered.max(st.buffered);
+        // Fast path: an in-order chunk streams out immediately instead
+        // of waiting for backpressure to elect a drainer.
+        if !st.draining && st.cursor == shard {
+            st.draining = true;
+            drop(self.drain_locked(st));
+        }
+    }
+
+    /// Deliver everything the cursor allows. Enters and leaves with the
+    /// state lock held and `draining == true` on entry, `false` on exit;
+    /// the terminal lock is only taken with the state lock released.
+    fn drain_locked<'g>(&self, mut st: MutexGuard<'g, SeqState>) -> MutexGuard<'g, SeqState> {
+        let guard = DrainGuard { owner: self };
+        loop {
+            let mut batch: Vec<SeqChunk> = Vec::new();
+            while st.cursor < st.queues.len() {
+                let c = st.cursor;
+                if let Some(entry) = st.queues[c].pop_front() {
+                    batch.push(entry);
+                } else if st.done[c] {
+                    st.cursor += 1;
+                } else {
+                    break;
+                }
+            }
+            if batch.is_empty() {
+                break;
+            }
+            drop(st);
+            {
+                let mut terminal = self.terminal.lock().unwrap();
+                for (_, chunk) in &batch {
+                    for &(s, d) in chunk {
+                        terminal.push(s, d);
+                    }
+                }
+            }
+            st = self.lock_state();
+            for (w, _) in &batch {
+                st.outstanding[*w] -= 1;
+                st.buffered -= 1;
+            }
+            // Window slots opened: wake parked producers (and pick up
+            // chunks they submitted while the terminal lock was held).
+            self.cv.notify_all();
+        }
+        st.draining = false;
+        self.cv.notify_all();
+        std::mem::forget(guard);
+        st
+    }
+
+    /// Mark `shard` complete so the cursor can step past it.
+    fn mark_done(&self, shard: usize) {
+        if self.eager {
+            return;
+        }
+        let mut st = self.lock_state();
+        st.done[shard] = true;
+        // The cursor may now advance: wake parked workers so one elects
+        // itself drainer for whatever just became deliverable.
+        self.cv.notify_all();
+    }
+
+    /// Drain whatever the window still holds (single-threaded by now:
+    /// every producer has completed), finish the terminal and report the
+    /// window's high-water mark.
+    pub fn finish(self) -> SequencerStats {
+        let terminal = self
+            .terminal
+            .into_inner()
+            .expect("a sequenced worker panicked while draining");
+        if self.eager {
+            terminal.finish();
+            return SequencerStats::default();
+        }
+        let mut st = self
+            .state
+            .into_inner()
+            .unwrap_or_else(|p| p.into_inner());
+        assert!(!st.failed, "sequenced drain failed; see the original worker error");
+        while st.cursor < st.queues.len() {
+            let c = st.cursor;
+            if let Some((_, chunk)) = st.queues[c].pop_front() {
+                for &(s, d) in &chunk {
+                    terminal.push(s, d);
+                }
+            } else {
+                debug_assert!(st.done[c], "finish with an incomplete shard {c}");
+                st.cursor += 1;
+            }
+        }
+        terminal.finish();
+        SequencerStats {
+            peak_buffered_chunks: st.peak_buffered,
+        }
+    }
+}
+
+/// Failure propagation for a drainer that unwinds (terminal panic or a
+/// cancellation unwind mid-delivery): flip `failed`, clear `draining`
+/// and wake every parked producer so none waits on a dead drain.
+/// Disarmed with `mem::forget` on the normal exit path.
+struct DrainGuard<'s, 'a> {
+    owner: &'s SequencedSink<'a>,
+}
+
+impl Drop for DrainGuard<'_, '_> {
+    fn drop(&mut self) {
+        let mut st = self.owner.lock_state();
+        st.failed = true;
+        st.draining = false;
+        drop(st);
+        self.owner.cv.notify_all();
+    }
+}
+
+/// One `(worker, shard)` production stream of a [`SequencedSink`]:
+/// edges land in a local buffer; every `chunk` edges the buffer is
+/// submitted to the reordering window (possibly parking — see
+/// [`SequencedSink::submit`]'s backpressure).
+pub struct SeqHandle<'s, 'a> {
+    owner: &'s SequencedSink<'a>,
+    worker: usize,
+    shard: usize,
+    buf: Vec<(u32, u32)>,
+    since_check: usize,
+}
+
+impl SeqHandle<'_, '_> {
+    /// Submit the residual tail and mark the shard complete. Must be
+    /// called exactly once, before the worker opens its next shard.
+    pub fn complete(mut self) {
+        let residual = std::mem::take(&mut self.buf);
+        if !residual.is_empty() {
+            self.owner.submit(self.worker, self.shard, residual);
+        }
+        self.owner.mark_done(self.shard);
+    }
+}
+
+impl EdgeSink for SeqHandle<'_, '_> {
+    #[inline]
+    fn push(&mut self, src: u32, dst: u32) {
+        // Same pre-lock guard discipline as `ShardHandle`: a cancel
+        // unwind here never poisons the shared locks.
+        if let Some(token) = &self.owner.token {
+            self.since_check += 1;
+            if self.since_check >= self.owner.check_every {
+                self.since_check = 0;
+                if let Err(kind) = token.check() {
+                    cancel_unwind(kind);
+                }
+            }
+        }
+        self.buf.push((src, dst));
+        if self.buf.len() >= self.owner.chunk {
+            let chunk = std::mem::replace(&mut self.buf, Vec::with_capacity(self.owner.chunk));
+            self.owner.submit(self.worker, self.shard, chunk);
+        }
+    }
+
+    // finish() is a no-op: shard completion is explicit (`complete`)
+    // and the terminal is finished once by `SequencedSink::finish`.
 
     fn cancel_token(&self) -> Option<CancelToken> {
         self.owner.token.clone()
@@ -743,6 +1142,84 @@ mod tests {
         let r = catch_cancel(|| {
             let sharded = ShardedSink::with_chunk(&mut guarded, 4);
             let mut h = sharded.shard();
+            h.push(1, 2);
+        });
+        assert_eq!(r, Err(CancelKind::Cancelled));
+        assert_eq!(guarded.inner().edges, 0);
+    }
+
+    #[test]
+    fn sequenced_drain_matches_shard_order_for_every_window() {
+        // 3 workers × 6 round-robin shards: whatever the window, the
+        // delivered order must equal the canonical shard order, and the
+        // window high-water mark must respect the workers × window bound.
+        let workers = 3usize;
+        let shards = 6usize;
+        let per_shard = 10u32;
+        let mut want: Vec<(u32, u32)> = Vec::new();
+        for s in 0..shards as u32 {
+            for k in 0..per_shard {
+                want.push((s, k));
+            }
+        }
+        for window in [1usize, 2, 4] {
+            let mut collect = CollectSink::new(100);
+            {
+                let seq = SequencedSink::with_chunk(&mut collect, workers, shards, window, 4);
+                crate::util::threadpool::scoped_chunks(workers, workers, |w, _| {
+                    let mut s = w;
+                    while s < shards {
+                        let mut h = seq.handle(w, s);
+                        for k in 0..per_shard {
+                            h.push(s as u32, k);
+                        }
+                        h.complete();
+                        s += workers;
+                    }
+                });
+                let stats = seq.finish();
+                assert!(
+                    stats.peak_buffered_chunks <= workers * window,
+                    "peak {} > workers × window {}",
+                    stats.peak_buffered_chunks,
+                    workers * window
+                );
+            }
+            assert_eq!(collect.graph.edges(), &want[..], "window {window}");
+        }
+    }
+
+    #[test]
+    fn sequenced_eager_terminal_bypasses_the_window() {
+        let mut count = CountSink::default();
+        {
+            let seq = SequencedSink::with_chunk(&mut count, 2, 4, 1, 8);
+            crate::util::threadpool::scoped_chunks(2, 2, |w, _| {
+                let mut s = w;
+                while s < 4 {
+                    let mut h = seq.handle(w, s);
+                    for k in 0..37u32 {
+                        h.push(s as u32, k);
+                    }
+                    h.complete();
+                    s += 2;
+                }
+            });
+            let stats = seq.finish();
+            assert_eq!(stats.peak_buffered_chunks, 0, "eager mode must not buffer");
+        }
+        assert_eq!(count.edges, 4 * 37);
+    }
+
+    #[test]
+    fn sequenced_handles_observe_the_terminal_guard() {
+        use crate::util::cancel::{catch_cancel, CancelKind};
+        let token = CancelToken::new();
+        token.cancel();
+        let mut guarded = GuardedSink::new(CountSink::default(), token);
+        let r = catch_cancel(|| {
+            let seq = SequencedSink::with_chunk(&mut guarded, 1, 1, 1, 4);
+            let mut h = seq.handle(0, 0);
             h.push(1, 2);
         });
         assert_eq!(r, Err(CancelKind::Cancelled));

@@ -120,6 +120,16 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Cap a requested per-job thread fan-out at the hosting pool's size
+/// (≥ 1 either way). This is the one grant policy shared by
+/// `GenerationService::run_all` and the network server: a single job
+/// never fans out wider than the pool the batch itself runs on. Grants
+/// only affect speed — the chunk-sequenced samplers produce
+/// byte-identical output for every grant.
+pub fn grant_threads(requested: usize, pool_size: usize) -> usize {
+    requested.max(1).min(pool_size.max(1))
+}
+
 /// Available CPU parallelism (≥ 1), overridable via `MAGBDP_THREADS`.
 pub fn default_parallelism() -> usize {
     if let Ok(v) = std::env::var("MAGBDP_THREADS") {
@@ -314,6 +324,14 @@ mod tests {
             payload.is::<CancelUnwind>(),
             "cancellation payload must win over collateral panics"
         );
+    }
+
+    #[test]
+    fn grant_threads_caps_and_clamps() {
+        assert_eq!(grant_threads(8, 4), 4, "capped at the pool");
+        assert_eq!(grant_threads(2, 4), 2, "small requests pass through");
+        assert_eq!(grant_threads(0, 4), 1, "zero request clamps to 1");
+        assert_eq!(grant_threads(8, 0), 1, "zero pool clamps to 1");
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //!   `ShardedSink` is edge-for-edge identical to the buffered merge for
 //!   a fixed `(seed, threads)` pair, and the count-only terminal keeps
 //!   shard residuals bounded (O(shard buffer), not O(edges)).
+//! * Chunk sequencing: order-sensitive terminals receive byte-identical
+//!   streams for every `(threads, window)` combination, the reordering
+//!   window's high-water mark stays within O(workers × window), and a
+//!   terminal panic mid-sequence errors out without deadlocking parked
+//!   workers.
 //! * Service streaming: `output=`/`format=` jobs write real files whose
 //!   contents round-trip.
 
@@ -80,8 +85,8 @@ fn parallel_streaming_is_identical_to_buffered_merge() {
     let (params, a) = fixture(8, 0.4, 1 << 8, 5);
     let s = MagmBdpSampler::new(&params, &a);
     for threads in [1usize, 2, 4, 7] {
-        // The buffered path (itself a CollectSink wrapper now, but the
-        // quota split + shard RNG schedule is the pre-refactor one).
+        // The buffered path (a CollectSink wrapper over the same fixed
+        // logical-shard schedule — output is a function of seed alone).
         let buffered = s.sample_parallel(99, threads);
         // Explicit streaming through the sharded sink layer.
         let mut collect = CollectSink::new(params.n());
@@ -99,6 +104,126 @@ fn parallel_streaming_is_identical_to_buffered_merge() {
         assert_eq!((p2, a2), (proposed, accepted));
         assert_eq!(count.edges, accepted);
     }
+}
+
+/// The chunk-sequenced drain contract: order-sensitive terminals receive
+/// the exact same byte stream for every `(threads, window)` combination —
+/// the output is a function of `(spec, seed)` alone.
+#[test]
+fn sequenced_stream_is_byte_identical_across_threads_and_windows() {
+    use magbdp::sampler::TsvSink;
+
+    let (params, a) = fixture(8, 0.4, 1 << 8, 5);
+    let s = MagmBdpSampler::new(&params, &a);
+
+    let tsv = |threads: usize, window: usize| -> Vec<u8> {
+        let mut buf = Vec::new();
+        let mut sink = TsvSink::new(&mut buf);
+        s.sample_parallel_into_windowed(99, threads, window, &mut sink);
+        sink.try_finish().unwrap();
+        drop(sink);
+        buf
+    };
+    let bin = |threads: usize, window: usize| -> Vec<u8> {
+        let mut buf = Vec::new();
+        let mut sink = BinaryEdgeSink::new(&mut buf, params.n());
+        s.sample_parallel_into_windowed(99, threads, window, &mut sink);
+        sink.try_finish().unwrap();
+        drop(sink);
+        buf
+    };
+
+    let ref_tsv = tsv(1, 1);
+    let ref_bin = bin(1, 1);
+    assert!(!ref_tsv.is_empty(), "need a non-trivial sample");
+    assert!(ref_bin.len() > 16, "binary stream must carry edges past the header");
+    for threads in [1usize, 2, 7] {
+        for window in [1usize, 4] {
+            assert_eq!(
+                tsv(threads, window),
+                ref_tsv,
+                "TSV bytes drifted at threads={threads} window={window}"
+            );
+            assert_eq!(
+                bin(threads, window),
+                ref_bin,
+                "binary bytes drifted at threads={threads} window={window}"
+            );
+        }
+    }
+}
+
+/// The windowed backpressure invariant: the reordering window never
+/// parks more than `workers × window` chunks, and the terminal sees
+/// canonical shard order whatever order producers ran in.
+///
+/// Driven single-threaded for determinism: workers 1 and 2 produce their
+/// shards entirely before worker 0, so every one of their chunks must
+/// park behind the cursor until shard 0 arrives.
+#[test]
+fn sequencer_peak_buffer_is_bounded_by_workers_times_window() {
+    use magbdp::sampler::SequencedSink;
+
+    let (workers, shards, window, chunk) = (3usize, 3usize, 4usize, 16usize);
+    let per_shard = 40u32; // 2 full chunks + a residual = 3 chunks/worker
+    let mut collect = CollectSink::new(64);
+    let stats = {
+        let seq = SequencedSink::with_chunk(&mut collect, workers, shards, window, chunk);
+        for worker in [1usize, 2, 0] {
+            let mut h = seq.handle(worker, worker);
+            for k in 0..per_shard {
+                h.push(worker as u32, k);
+            }
+            h.complete();
+        }
+        seq.finish()
+    };
+    assert!(
+        stats.peak_buffered_chunks <= workers * window,
+        "peak {} exceeds the O(workers × window) bound {}",
+        stats.peak_buffered_chunks,
+        workers * window
+    );
+    assert!(
+        stats.peak_buffered_chunks >= 6,
+        "shards 1 and 2 (3 chunks each) must have parked in the window, got peak {}",
+        stats.peak_buffered_chunks
+    );
+    // Canonical shard order at the terminal regardless of production order.
+    let expected: Vec<(u32, u32)> = (0..shards as u32)
+        .flat_map(|s| (0..per_shard).map(move |k| (s, k)))
+        .collect();
+    assert_eq!(collect.graph.edges(), &expected[..]);
+}
+
+/// Chaos round: the terminal panics mid-sequence while later shards are
+/// parked behind the cursor. The drain guard must flip the failure flag
+/// and wake every parked worker, so the job errors instead of
+/// deadlocking — bounded by the recv timeout below.
+#[test]
+fn faulty_sink_panic_mid_sequence_errors_without_deadlock() {
+    use magbdp::util::cancel::with_quiet_panics;
+    use magbdp::util::fault::FaultySink;
+    use std::panic::AssertUnwindSafe;
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let (params, a) = fixture(8, 0.4, 1 << 8, 5);
+        let s = MagmBdpSampler::new(&params, &a);
+        // CollectSink is order-sensitive, so the windowed sequencer (not
+        // the eager bypass) is in play when the panic fires.
+        let mut faulty = FaultySink::panic_after(CollectSink::new(params.n()), 100);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_quiet_panics(|| {
+                s.sample_parallel_into(99, 4, &mut faulty);
+            })
+        }));
+        let _ = tx.send(r.is_err());
+    });
+    let errored = rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("parked workers deadlocked after the terminal panic");
+    assert!(errored, "the injected terminal panic must surface as a job error");
 }
 
 #[test]
