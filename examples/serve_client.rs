@@ -15,30 +15,40 @@
 //!      chunk-sequenced drain must return byte-identical payloads
 //!      whatever the thread grant
 //!   7. `METRICS`                       → Prometheus scrape; asserts the
-//!      jobs/errors counters match what this session caused
+//!      jobs/errors counters match what this session caused, and that
+//!      the trace roll-up histogram families (`job_queue_wait_ns`,
+//!      `sampler_propose_ns`, …) are present with `job_queue_wait_ns`
+//!      moving on every executed job
+//!   8. `TRACE id=6`                    → span tree of the threads=4 job
+//!      (asserted when the server runs `--trace` and the smoke is
+//!      invoked with `--expect-trace`; otherwise the `ERR` is accepted)
 //!
 //! The socket carries a 10 s I/O timeout so a wedged server fails the
 //! smoke instead of hanging it.
 //!
 //! ```bash
-//! magbdp serve --listen 127.0.0.1:7711 &
-//! cargo run --release --example serve_client -- 127.0.0.1:7711
+//! magbdp serve --listen 127.0.0.1:7711 --trace &
+//! cargo run --release --example serve_client -- 127.0.0.1:7711 --expect-trace
 //! ```
 
 use magbdp::coordinator::{Client, Event};
 
 fn main() {
-    let addr = std::env::args()
-        .nth(1)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
         .unwrap_or_else(|| "127.0.0.1:7711".to_string());
-    if let Err(e) = run(&addr) {
+    let expect_trace = args.iter().any(|a| a == "--expect-trace");
+    if let Err(e) = run(&addr, expect_trace) {
         eprintln!("serve_client: {e}");
         std::process::exit(1);
     }
     println!("serve_client: all checks passed against {addr}");
 }
 
-fn run(addr: &str) -> Result<(), String> {
+fn run(addr: &str, expect_trace: bool) -> Result<(), String> {
     let mut client = Client::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
     client
         .set_io_timeout(Some(std::time::Duration::from_secs(10)))
@@ -167,6 +177,83 @@ fn run(addr: &str) -> Result<(), String> {
             "counters too low for this session (jobs={jobs}, errors={errors}, \
              parallel={parallel})"
         ));
+    }
+    // The trace roll-up histogram families are registered eagerly at
+    // server startup, so the scrape must show every `_count` series even
+    // before (or without) any traced job.
+    for family in [
+        "job_queue_wait_ns_count",
+        "sampler_propose_ns_count",
+        "sampler_accept_ns_count",
+        "sampler_prune_abort_depth_count",
+        "seq_park_ns_count",
+        "sink_write_ns_count",
+    ] {
+        metric(family)?;
+    }
+    let queue_waits = metric("job_queue_wait_ns_count")?;
+    if queue_waits < 4.0 {
+        return Err(format!(
+            "job_queue_wait_ns must move on every executed job (count {queue_waits})"
+        ));
+    }
+    println!("scrape: all trace histogram families present, queue_wait count={queue_waits}");
+    if expect_trace {
+        let propose = metric("sampler_propose_ns_count")?;
+        if propose < 1.0 {
+            return Err("--expect-trace: sampler_propose_ns never moved".to_string());
+        }
+    }
+
+    // 8. Span tree of the threads=4 streaming job. The worker flushes
+    // its spans right after writing END, so retry briefly in case this
+    // request outruns that flush.
+    let mut tree = None;
+    for attempt in 0..10 {
+        send(&mut client, "TRACE id=6")?;
+        match client.next_event().map_err(|e| e.to_string())? {
+            Event::Trace { id: 6, body } => {
+                let complete = ["job.queue_wait", "job.run", "shard.worker", "sampler.propose"]
+                    .iter()
+                    .all(|name| body.contains(name));
+                if complete {
+                    tree = Some(body);
+                    break;
+                }
+                tree = Some(body); // keep the best-so-far for the error message
+            }
+            Event::Err { msg, .. } if !expect_trace => {
+                println!("TRACE id=6 unavailable (server not tracing): {msg}");
+                send(&mut client, "QUIT")?;
+                return Ok(());
+            }
+            other => return Err(format!("expected TRACE id=6, got {other:?}")),
+        }
+        if attempt < 9 {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+    match tree {
+        Some(body)
+            if ["job.queue_wait", "job.run", "shard.worker", "sampler.propose"]
+                .iter()
+                .all(|name| body.contains(name)) =>
+        {
+            println!(
+                "TRACE id=6: span tree covers intake wait, job.run, shard workers \
+                 and sampler loops ({} bytes)",
+                body.len()
+            );
+        }
+        Some(body) => {
+            return Err(format!(
+                "TRACE id=6 span tree incomplete after retries:\n{body}"
+            ))
+        }
+        None if expect_trace => {
+            return Err("--expect-trace: TRACE id=6 never returned a tree".to_string())
+        }
+        None => {}
     }
 
     send(&mut client, "QUIT")?;

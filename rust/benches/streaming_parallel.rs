@@ -122,6 +122,64 @@ fn main() {
         results.push(classic);
     }
 
+    // Tracing cost comparison: the same sequenced drain with span
+    // recording off (the default: instrumented sites pay one relaxed
+    // atomic load) and on (per-quota aggregation + ring flushes). Both
+    // are published; the assertion is deliberately lenient — it exists
+    // to catch the disabled path accidentally doing real work, not to
+    // pin down noise-floor percentages.
+    {
+        use magbdp::util::trace;
+        let n = 1u64 << 12;
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, mu, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let assignment = params.sample_attributes(&mut rng);
+        let sampler = MagmBdpSampler::new(&params, &assignment);
+        let expected = sampler.expected_proposals();
+
+        trace::set_enabled(false);
+        let off = bench.run_with_units(
+            &format!("trace off (d={d} n=2^12 mu={mu}, ~{expected:.0} balls)"),
+            expected,
+            |i| {
+                let mut sink = OrderedCount::default();
+                sampler.sample_parallel_into(300 + i as u64, threads, &mut sink);
+                sink.edges
+            },
+        );
+        println!("{off}");
+
+        trace::set_enabled(true);
+        trace::set_current(trace::next_id());
+        let on = bench.run_with_units(
+            &format!("trace on (d={d} n=2^12 mu={mu}, ~{expected:.0} balls)"),
+            expected,
+            |i| {
+                let mut sink = OrderedCount::default();
+                sampler.sample_parallel_into(300 + i as u64, threads, &mut sink);
+                sink.edges
+            },
+        );
+        trace::set_enabled(false);
+        trace::set_current(0);
+        trace::clear();
+        println!("{on}");
+        println!(
+            "tracing on/off median ratio: {:.3} (recording cost per proposed ball)",
+            on.median / off.median
+        );
+        assert!(
+            off.median <= on.median * 1.25,
+            "disabled tracing must not cost more than enabled tracing \
+             (off {:.3} ns/unit vs on {:.3} ns/unit) — the disabled hot \
+             path is supposed to be a single atomic check",
+            off.median,
+            on.median
+        );
+        results.push(off);
+        results.push(on);
+    }
+
     println!();
     for (exp, s) in &speedups {
         println!("speedup at n=2^{exp} ({threads} workers vs 1): {s:.2}×");

@@ -47,14 +47,22 @@
 //!   draining`, lets queued and in-flight jobs finish within the drain
 //!   deadline ([`ServerConfig::drain_timeout_ms`]), then cancels the
 //!   stragglers. Replies `DRAINING queued=<n>` immediately.
+//! * `TRACE id=<u64>` — fetch the recorded span tree of a recently
+//!   traced job (requires the server to run with tracing on, e.g.
+//!   `magbdp serve --trace`). Replies a sized `TRACE` payload frame, or
+//!   `ERR` when the job was never traced or has aged out of the
+//!   bounded index ([`RECENT_TRACES`] entries).
 //! * Blank lines and `#` comments are ignored, so an existing job-trace
 //!   file can be piped to the socket verbatim.
 //!
 //! ## Responses (server → client)
 //!
 //! * `OK id=<id> algo=<a> nodes=<n> edges=<e> edges_simple=<s>
-//!   proposed=<p> bytes=<b> threads=<t> wall_ms=<ms> eps=<rate>` — job
-//!   finished, no payload. For streaming (`output=`) jobs the
+//!   proposed=<p> bytes=<b> threads=<t> wall_ms=<ms> eps=<rate>
+//!   queue_ns=<q> run_ns=<r> drain_ns=<d>` — job finished, no payload.
+//!   The trailing `*_ns` fields break the job's life down: dispatch →
+//!   pool-pickup queue wait, sampling (including the sequencer drain),
+//!   and the terminal output flush. For streaming (`output=`) jobs the
 //!   distinct-edge field reads `edges_simple≈<s>`: a HyperLogLog
 //!   estimate (streaming never holds the edge set), visibly marked so
 //!   nothing mistakes it for the exact in-memory count.
@@ -73,6 +81,9 @@
 //!   cut short and must be discarded.
 //! * `DRAINING queued=<n>` — acknowledgement of `DRAIN`.
 //! * `METRICS bytes=<k>` + `k` bytes + `\n` — the scrape response.
+//! * `TRACE id=<id> bytes=<k>` + `k` bytes + `\n` — the requested span
+//!   tree ([`render_tree`] text: spans grouped per recorder thread,
+//!   ordered by start time, indented by nesting depth).
 //! * `PONG` — answer to `PING`.
 //!
 //! ## Retry / backoff contract
@@ -113,19 +124,79 @@
 //! `ERR ... intake queue full` (`service.rejected` counter) instead of
 //! buffering without limit — backpressure by rejection, never OOM.
 //!
-//! Intake metrics (on top of the per-job `service.*` set): counters
-//! `service.requests` (job lines received), `service.parse_errors`,
-//! `service.rejected` (queue full or draining), `service.conn_rejected`
-//! (connection cap), `service.net_write_errors`, the
-//! `service.intake_depth` gauge, and the `service.draining` 0/1 gauge.
-//! `service.jobs` keeps counting *executed* jobs only; cancelled and
-//! deadline-expired executions also bump `service.cancelled` /
-//! `service.deadline_exceeded` (see [`super::service`]).
+//! # Observability: the metric inventory
+//!
+//! Everything below is scraped via `METRICS` (Prometheus text
+//! exposition). Counters are monotonic, gauges instantaneous,
+//! histograms power-of-two bucketed with an exact `_sum`.
+//!
+//! Counters (unit: events unless noted):
+//! * `service.requests` — job lines received; bumps at intake, before
+//!   parsing (control lines don't count).
+//! * `service.parse_errors` — malformed intake keys or spec lines.
+//! * `service.errors` — failed jobs of any class (parse, sampler
+//!   error, panic, deadline, cancellation, intake rejection).
+//! * `service.rejected` — intake rejections: queue full or draining.
+//! * `service.conn_rejected` — connections refused at the cap.
+//! * `service.net_write_errors` — response writes that hit a dead or
+//!   wedged socket.
+//! * `service.jobs` — *executed* jobs (dispatched and run, ok or not).
+//! * `service.parallel_jobs` — executed jobs that ran a multi-thread
+//!   grant through the chunk-sequenced parallel sampler.
+//! * `service.cancelled` / `service.deadline_exceeded` — executions
+//!   aborted by token cancellation / deadline expiry.
+//! * `service.panics` — sampler panics caught at the job boundary.
+//! * `service.busy_ns` — worker time spent executing jobs (unit: ns).
+//! * `service.edges` / `service.bytes_written` — edges emitted /
+//!   payload bytes produced across all jobs (units: edges, bytes).
+//! * `service.xla_dispatches` — accelerator batches dispatched
+//!   (`xla-runtime` builds only).
+//!
+//! Gauges:
+//! * `service.intake_depth` — jobs queued-plus-running right now.
+//! * `service.draining` — 0/1, held at 1 while a drain is in progress.
+//! * `service.edges_per_sec` — throughput of the most recent job.
+//!
+//! Histograms:
+//! * `service.job_latency_ns` — wall time per executed job (ns);
+//!   moves on every job.
+//! * `job.queue_wait_ns` — dispatch → pool-pickup wait (ns); observed
+//!   for **every** job at pickup, traced or not — it is a server-load
+//!   signal, not a sampler one.
+//! * `sampler.propose_ns` / `sampler.accept_ns` — per-quota
+//!   ball-dropping descent / acceptance-thinning time (ns); traced
+//!   jobs only, rolled up from spans at the job boundary.
+//! * `sampler.prune_abort_depth` — bit-matrix depth each proposed ball
+//!   reached before its prune aborted, or the full depth for survivors
+//!   (unit: levels); traced jobs only.
+//! * `seq.park_ns` — producer wait for a sequencer reorder-window slot
+//!   (ns); traced jobs only, moves under sequencing backpressure.
+//! * `sink.write_ns` — terminal sink write time (ns); traced jobs only.
+//!
+//! The six `job.*`/`sampler.*`/`seq.*`/`sink.*` families
+//! ([`trace::ROLLUP_HISTOGRAMS`]) are registered eagerly at
+//! [`JobServer::bind`], so a scrape shows them (count 0) before the
+//! first traced job completes.
+//!
+//! # Tracing
+//!
+//! With tracing on (`magbdp serve --trace`, or
+//! [`trace::set_enabled`]), every dispatched job is assigned a fresh
+//! trace id, pinned to the pool worker's thread-local and propagated
+//! into the shard workers and sequencer drain it spawns. `TRACE
+//! id=<job id>` returns the recorded span tree for any of the last
+//! [`RECENT_TRACES`] jobs. Recording is bounded
+//! ([`trace::RING_CAPACITY`] spans process-wide, oldest evicted) and
+//! the disabled hot path costs a single relaxed atomic load.
 //!
 //! [`run_job`]: super::service::run_job
 //! [`CancelToken`]: crate::util::cancel::CancelToken
+//! [`render_tree`]: crate::util::trace::render_tree
+//! [`trace::set_enabled`]: crate::util::trace::set_enabled
+//! [`trace::RING_CAPACITY`]: crate::util::trace::RING_CAPACITY
+//! [`trace::ROLLUP_HISTOGRAMS`]: crate::util::trace::ROLLUP_HISTOGRAMS
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -140,6 +211,7 @@ use crate::util::error::JobError;
 use crate::util::metrics::Registry;
 use crate::util::rng::{Rng, SeedableRng, SplitMix64};
 use crate::util::threadpool::{default_parallelism, grant_threads};
+use crate::util::trace;
 use crate::{log_debug, log_info, log_warn};
 
 /// Default [`ServerConfig::queue_capacity`].
@@ -177,6 +249,10 @@ pub struct ServerConfig {
     /// How long a `DRAIN` waits for queued and in-flight jobs before
     /// cancelling the stragglers, in milliseconds (0 = cancel at once).
     pub drain_timeout_ms: u64,
+    /// Record spans for every job ([`crate::util::trace`]) and serve
+    /// the `TRACE id=` control line. Off by default: the disabled
+    /// instrumentation costs one atomic load per site.
+    pub trace: bool,
 }
 
 impl ServerConfig {
@@ -189,6 +265,7 @@ impl ServerConfig {
             io_timeout_ms: DEFAULT_IO_TIMEOUT_MS,
             job_timeout_ms: DEFAULT_JOB_TIMEOUT_MS,
             drain_timeout_ms: DEFAULT_DRAIN_TIMEOUT_MS,
+            trace: false,
         }
     }
 }
@@ -339,6 +416,49 @@ impl<W: Write> Write for FrameWriter<W> {
     }
 }
 
+// ------------------------------------------------------------ trace index
+
+/// How many recently traced jobs the server remembers for `TRACE id=`.
+pub const RECENT_TRACES: usize = 64;
+
+/// Bounded job-id → trace-id memory behind the `TRACE id=` control
+/// line. Span data itself lives in the global trace ring
+/// ([`trace::spans_for`]); this index only remembers which trace id a
+/// job was assigned. Newest entry wins on job-id reuse; the oldest
+/// entry ages out past [`RECENT_TRACES`].
+struct TraceIndex {
+    entries: Mutex<VecDeque<(u64, u64)>>,
+}
+
+impl TraceIndex {
+    fn new() -> Self {
+        TraceIndex {
+            entries: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Remember `job_id → trace_id`, dropping any stale mapping for a
+    /// reused job id and evicting the oldest entry to stay bounded.
+    fn record(&self, job_id: u64, trace_id: u64) {
+        let mut entries = self.entries.lock().unwrap();
+        entries.retain(|&(j, _)| j != job_id);
+        if entries.len() >= RECENT_TRACES {
+            entries.pop_front();
+        }
+        entries.push_back((job_id, trace_id));
+    }
+
+    /// The trace id assigned to `job_id`, if still remembered.
+    fn lookup(&self, job_id: u64) -> Option<u64> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|&&(j, _)| j == job_id)
+            .map(|&(_, t)| t)
+    }
+}
+
 // ------------------------------------------------------------- job server
 
 /// The TCP front end over a [`GenerationService`].
@@ -351,6 +471,7 @@ pub struct JobServer {
     root: CancelToken,
     active_conns: Arc<AtomicUsize>,
     next_id: Arc<AtomicU64>,
+    traces: Arc<TraceIndex>,
     max_connections: usize,
     io_timeout: Option<Duration>,
     job_cap: Option<Duration>,
@@ -370,6 +491,14 @@ impl JobServer {
         };
         let svc = Arc::new(GenerationService::new(threads));
         svc.metrics().gauge("service.draining").set_bool(false);
+        if config.trace {
+            trace::set_enabled(true);
+        }
+        // Pre-register the trace roll-up families so a `METRICS` scrape
+        // shows them (count 0) before the first traced job completes.
+        for name in trace::ROLLUP_HISTOGRAMS {
+            svc.metrics().histogram(name);
+        }
         let nonzero = |ms: u64| (ms > 0).then(|| Duration::from_millis(ms));
         Ok(JobServer {
             listener,
@@ -380,6 +509,7 @@ impl JobServer {
             root: CancelToken::new(),
             active_conns: Arc::new(AtomicUsize::new(0)),
             next_id: Arc::new(AtomicU64::new(0)),
+            traces: Arc::new(TraceIndex::new()),
             max_connections: config.max_connections.max(1),
             io_timeout: nonzero(config.io_timeout_ms),
             job_cap: nonzero(config.job_timeout_ms),
@@ -442,6 +572,7 @@ impl JobServer {
                 svc: Arc::clone(&self.svc),
                 intake: Arc::clone(&self.intake),
                 next_id: Arc::clone(&self.next_id),
+                traces: Arc::clone(&self.traces),
                 active_conns: Arc::clone(&self.active_conns),
                 shutdown: Arc::clone(&self.shutdown),
                 draining: Arc::clone(&self.draining),
@@ -578,6 +709,8 @@ struct ConnCtx {
     svc: Arc<GenerationService>,
     intake: Arc<IntakeQueue>,
     next_id: Arc<AtomicU64>,
+    /// Job-id → trace-id memory for the `TRACE id=` control line.
+    traces: Arc<TraceIndex>,
     active_conns: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
     draining: Arc<AtomicBool>,
@@ -597,6 +730,9 @@ enum Request {
     Quit,
     Metrics,
     Drain,
+    Trace {
+        id: u64,
+    },
     Job {
         id: Option<u64>,
         respond: Option<OutputFormat>,
@@ -617,6 +753,15 @@ fn parse_request(line: &str) -> Result<Option<Request>, (u64, String)> {
         "METRICS" => return Ok(Some(Request::Metrics)),
         "DRAIN" => return Ok(Some(Request::Drain)),
         _ => {}
+    }
+    if let Some(rest) = line.strip_prefix("TRACE") {
+        // Only the exact control word: `TRACEFOO=1 d=6` is a job line.
+        if rest.is_empty() || rest.starts_with(char::is_whitespace) {
+            return match rest.trim().strip_prefix("id=").and_then(|v| v.parse::<u64>().ok()) {
+                Some(id) => Ok(Some(Request::Trace { id })),
+                None => Err((0, "TRACE needs id=<u64>".to_string())),
+            };
+        }
     }
     let mut id: Option<u64> = None;
     let mut respond: Option<OutputFormat> = None;
@@ -716,7 +861,7 @@ fn ok_line(r: &JobResult) -> String {
         format!("edges_simple={}", r.edges_simple)
     };
     format!(
-        "OK id={} algo={} nodes={} edges={} {simple} proposed={} bytes={} threads={} wall_ms={:.3} eps={:.1}",
+        "OK id={} algo={} nodes={} edges={} {simple} proposed={} bytes={} threads={} wall_ms={:.3} eps={:.1} queue_ns={} run_ns={} drain_ns={}",
         r.id,
         r.algo,
         r.nodes,
@@ -726,6 +871,9 @@ fn ok_line(r: &JobResult) -> String {
         r.threads,
         r.wall.as_secs_f64() * 1e3,
         r.edges_per_sec,
+        r.queue_ns,
+        r.run_ns,
+        r.drain_ns,
     )
 }
 
@@ -752,23 +900,51 @@ fn execute_and_respond<W: Write + Send>(
     token: &CancelToken,
     writer: &Arc<Mutex<W>>,
     metrics: &Registry,
+    queue_ns: u64,
 ) {
     match respond {
         None => {
-            let r = run_job_guarded_ctl(&spec, metrics, None, token);
+            let mut r = run_job_guarded_ctl(&spec, metrics, None, token);
+            r.queue_ns = queue_ns;
+            let _respond = trace::span("job.respond");
             match &r.error {
-                Some(e) => send_line(writer, metrics, &err_line(r.id, e)),
-                None => send_line(writer, metrics, &ok_line(&r)),
+                Some(e) => {
+                    log_info!("job {}: error: {}", r.id, escape_msg(&e.to_string()));
+                    send_line(writer, metrics, &err_line(r.id, e));
+                }
+                None => {
+                    log_info!(
+                        "job {}: ok edges={} wall_ms={:.3} queue_ns={queue_ns}",
+                        r.id,
+                        r.edges,
+                        r.wall.as_secs_f64() * 1e3
+                    );
+                    send_line(writer, metrics, &ok_line(&r));
+                }
             }
         }
         Some(format) => {
             let mut frames = FrameWriter::new(spec.id, Arc::clone(writer));
-            let r = run_job_guarded_ctl(&spec, metrics, Some((&mut frames, format)), token);
+            let mut r = run_job_guarded_ctl(&spec, metrics, Some((&mut frames, format)), token);
+            r.queue_ns = queue_ns;
+            let _respond = trace::span("job.respond");
             match &r.error {
                 // An ERR after CHUNKs tells the client to discard the
                 // partial payload.
-                Some(e) => send_line(writer, metrics, &err_line(r.id, e)),
-                None => send_line(writer, metrics, &end_line(&r, format)),
+                Some(e) => {
+                    log_info!("job {}: error: {}", r.id, escape_msg(&e.to_string()));
+                    send_line(writer, metrics, &err_line(r.id, e));
+                }
+                None => {
+                    log_info!(
+                        "job {}: ok format={} edges={} wall_ms={:.3}",
+                        r.id,
+                        format.label(),
+                        r.edges,
+                        r.wall.as_secs_f64() * 1e3
+                    );
+                    send_line(writer, metrics, &end_line(&r, format));
+                }
             }
         }
     }
@@ -867,6 +1043,22 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
                 let body = ctx.metrics.render_prometheus();
                 send_payload(&writer, &ctx.metrics, "METRICS", body.as_bytes());
             }
+            Request::Trace { id } => {
+                let Some(tid) = ctx.traces.lookup(id) else {
+                    let e = JobError::Parse(format!(
+                        "no trace recorded for job id {id} (server not tracing, or entry aged out)"
+                    ));
+                    send_line(&writer, &ctx.metrics, &err_line(id, &e));
+                    continue;
+                };
+                let body = trace::render_tree(&trace::spans_for(tid));
+                send_payload(
+                    &writer,
+                    &ctx.metrics,
+                    &format!("TRACE id={id}"),
+                    body.as_bytes(),
+                );
+            }
             Request::Drain => {
                 if !ctx.draining.swap(true, Ordering::SeqCst) {
                     log_info!("{peer}: DRAIN requested");
@@ -927,12 +1119,44 @@ fn handle_connection(ctx: ConnCtx, stream: TcpStream) {
                     (a, b) => a.or(b),
                 };
                 let token = conn_token.child_with_timeout(job_timeout);
+                // Assign a trace id while tracing is on and remember it
+                // so `TRACE id=` can pull this job's spans back out.
+                let trace_id = if trace::enabled() {
+                    let t = trace::next_id();
+                    ctx.traces.record(id, t);
+                    t
+                } else {
+                    0
+                };
+                log_info!(
+                    "job {id}: dispatched (threads={} depth={})",
+                    spec.threads.unwrap_or(1),
+                    ctx.intake.depth()
+                );
+                let enqueued = Instant::now();
+                let enqueued_ns = if trace_id != 0 { trace::now_ns() } else { 0 };
                 let writer = Arc::clone(&writer);
                 let metrics = ctx.metrics.clone();
                 let in_flight = Arc::clone(&in_flight);
                 in_flight.fetch_add(1, Ordering::SeqCst);
                 ctx.svc.pool().execute(move || {
-                    execute_and_respond(spec, respond, &token, &writer, &metrics);
+                    let queue_ns = enqueued.elapsed().as_nanos() as u64;
+                    // Observed for every job, traced or not: queue wait
+                    // is a server-load signal, not a sampler one.
+                    metrics
+                        .histogram("job.queue_wait_ns")
+                        .observe(queue_ns as f64);
+                    if trace_id != 0 {
+                        trace::set_current(trace_id);
+                        trace::record("job.queue_wait", enqueued_ns, queue_ns, 1);
+                    }
+                    execute_and_respond(spec, respond, &token, &writer, &metrics, queue_ns);
+                    if trace_id != 0 {
+                        // Deliver this worker's tail spans and unpin the
+                        // id before the pool thread takes its next job.
+                        trace::flush();
+                        trace::set_current(0);
+                    }
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                     drop(permit);
                 });
@@ -975,6 +1199,8 @@ pub enum Event {
     Draining { queued: u64 },
     /// Metrics scrape body.
     Metrics(String),
+    /// Span-tree payload answering `TRACE id=`.
+    Trace { id: u64, body: String },
     /// Answer to `PING`.
     Pong,
 }
@@ -1068,6 +1294,15 @@ impl Client {
             let fields = kv_fields(rest);
             let body = self.read_sized(field_u64(&fields, "bytes")? as usize)?;
             return Ok(Event::Metrics(String::from_utf8_lossy(&body).into_owned()));
+        }
+        if let Some(rest) = line.strip_prefix("TRACE ") {
+            let fields = kv_fields(rest);
+            let id = field_u64(&fields, "id")?;
+            let body = self.read_sized(field_u64(&fields, "bytes")? as usize)?;
+            return Ok(Event::Trace {
+                id,
+                body: String::from_utf8_lossy(&body).into_owned(),
+            });
         }
         Err(std::io::Error::other(format!(
             "unrecognised response line: {line:?}"
@@ -1238,6 +1473,72 @@ mod tests {
         assert_eq!(parse_request("DRAIN").unwrap(), Some(Request::Drain));
         assert_eq!(parse_request("").unwrap(), None);
         assert_eq!(parse_request("  # comment").unwrap(), None);
+    }
+
+    #[test]
+    fn parse_request_classifies_trace_lines() {
+        assert_eq!(
+            parse_request("TRACE id=7").unwrap(),
+            Some(Request::Trace { id: 7 })
+        );
+        assert_eq!(
+            parse_request("  TRACE   id=0  ").unwrap(),
+            Some(Request::Trace { id: 0 })
+        );
+        assert!(parse_request("TRACE").is_err(), "missing id= must error");
+        assert!(parse_request("TRACE id=x").is_err(), "bad id must error");
+        // Only the exact control word is special: a job line whose
+        // first token merely *starts* with TRACE still parses as a job.
+        match parse_request("TRACER=1 d=6").unwrap().unwrap() {
+            Request::Job { spec_line, .. } => assert_eq!(spec_line, "TRACER=1 d=6"),
+            other => panic!("not a job: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_index_is_bounded_and_newest_wins() {
+        let idx = TraceIndex::new();
+        let n = RECENT_TRACES as u64;
+        for job in 0..n + 8 {
+            idx.record(job, job + 100);
+        }
+        assert_eq!(idx.lookup(n + 7), Some(n + 107));
+        assert_eq!(idx.lookup(0), None, "oldest entries age out");
+        idx.record(n, 999);
+        assert_eq!(
+            idx.lookup(n),
+            Some(999),
+            "re-recording a job id replaces the stale mapping"
+        );
+    }
+
+    #[test]
+    fn ok_line_carries_the_time_breakdown() {
+        let r = JobResult {
+            id: 3,
+            algo: "magm-bdp",
+            nodes: 8,
+            edges: 4,
+            edges_simple: 4,
+            simple_approx: false,
+            threads: 1,
+            proposed: 6,
+            wall: Duration::from_millis(2),
+            edges_list: None,
+            output: None,
+            bytes_written: 0,
+            edges_per_sec: 2000.0,
+            error: None,
+            queue_ns: 1_000,
+            run_ns: 2_000,
+            drain_ns: 500,
+        };
+        let line = ok_line(&r);
+        assert!(
+            line.ends_with("queue_ns=1000 run_ns=2000 drain_ns=500"),
+            "{line}"
+        );
+        assert!(line.starts_with("OK id=3 algo=magm-bdp "), "{line}");
     }
 
     #[test]

@@ -379,6 +379,15 @@ pub struct JobResult {
     /// Typed failure, `None` on success. `Display` gives the wire/user
     /// message; [`JobError::retryable`] drives client backoff.
     pub error: Option<JobError>,
+    /// Time the job spent queued before a pool worker picked it up
+    /// (filled by the network server; 0 for directly-run jobs).
+    pub queue_ns: u64,
+    /// Sampling wall time: attribute draw + propose/accept streaming,
+    /// including the sequencer drain on parallel jobs.
+    pub run_ns: u64,
+    /// Terminal flush time: the final sink `try_finish` (file/socket
+    /// buffer flush). 0 for in-memory jobs.
+    pub drain_ns: u64,
 }
 
 /// The service: a fixed worker pool + metrics registry.
@@ -559,6 +568,10 @@ struct JobOutcome {
     simple_approx: bool,
     edges_list: Option<crate::graph::EdgeList>,
     bytes_written: u64,
+    /// Sampling wall time (see [`JobResult::run_ns`]).
+    run_ns: u64,
+    /// Terminal flush wall time (see [`JobResult::drain_ns`]).
+    drain_ns: u64,
 }
 
 /// Stream a job's edges into an arbitrary writer in `format`, exactly
@@ -578,7 +591,8 @@ fn stream_job<W: std::io::Write + Send>(
     label: &str,
     token: &CancelToken,
 ) -> Result<JobOutcome, JobError> {
-    let (counts, bytes, simple) = match format {
+    let run_t = std::time::Instant::now();
+    let (counts, bytes, simple, run_ns, drain_ns) = match format {
         OutputFormat::Tsv => {
             let mut sink = TsvSink::new(writer);
             let (counts, simple) = {
@@ -590,9 +604,12 @@ fn stream_job<W: std::io::Write + Send>(
                 };
                 (counts, est.sketch.estimate())
             };
+            let run_ns = run_t.elapsed().as_nanos() as u64;
+            let drain_t = std::time::Instant::now();
             sink.try_finish()
                 .map_err(|e| JobError::Io(format!("write {label}: {e}")))?;
-            (counts, sink.bytes, simple)
+            let drain_ns = drain_t.elapsed().as_nanos() as u64;
+            (counts, sink.bytes, simple, run_ns, drain_ns)
         }
         OutputFormat::Binary => {
             let mut sink = crate::graph::io::BinaryEdgeSink::new(writer, params.n());
@@ -605,9 +622,12 @@ fn stream_job<W: std::io::Write + Send>(
                 };
                 (counts, est.sketch.estimate())
             };
+            let run_ns = run_t.elapsed().as_nanos() as u64;
+            let drain_t = std::time::Instant::now();
             sink.try_finish()
                 .map_err(|e| JobError::Io(format!("write {label}: {e}")))?;
-            (counts, sink.bytes, simple)
+            let drain_ns = drain_t.elapsed().as_nanos() as u64;
+            (counts, sink.bytes, simple, run_ns, drain_ns)
         }
     };
     Ok(JobOutcome {
@@ -617,6 +637,8 @@ fn stream_job<W: std::io::Write + Send>(
         simple_approx: true,
         edges_list: None,
         bytes_written: bytes,
+        run_ns,
+        drain_ns,
     })
 }
 
@@ -652,6 +674,10 @@ pub fn run_job_ctl(
 ) -> JobResult {
     let t = std::time::Instant::now();
     let params = spec.params();
+    // `job.run` covers this whole execution; shard workers re-pin the
+    // thread-current trace id themselves, so one traced job's spans
+    // stay collectable across every thread that worked on it.
+    let run_span = crate::util::trace::span("job.run");
 
     let outcome: Result<JobOutcome, JobError> = match token.check() {
         // Queue wait already burned the budget: fail before any work.
@@ -681,6 +707,7 @@ pub fn run_job_ctl(
             match &spec.output {
                 None => {
                     // In-memory mode: collect, then derive the simple graph.
+                    let run_t = std::time::Instant::now();
                     let mut sink = CollectSink::new(params.n());
                     let (proposed, edges) = {
                         let mut guarded = GuardedSink::new(&mut sink, token.clone());
@@ -689,6 +716,7 @@ pub fn run_job_ctl(
                         )
                         .map_err(JobError::Other)?
                     };
+                    let run_ns = run_t.elapsed().as_nanos() as u64;
                     let simple = sink.graph.into_simple();
                     Ok(JobOutcome {
                         proposed,
@@ -697,6 +725,8 @@ pub fn run_job_ctl(
                         simple_approx: false,
                         edges_list: spec.collect_graph.then_some(simple),
                         bytes_written: 0,
+                        run_ns,
+                        drain_ns: 0,
                     })
                 }
                 Some(path) => {
@@ -722,6 +752,20 @@ pub fn run_job_ctl(
     };
 
     let wall = t.elapsed();
+    drop(run_span);
+    // Roll this job's completed spans up into the registry histograms
+    // (`sampler.propose_ns`, …). Only the traced path pays this; the
+    // spans stay in the ring afterwards for `TRACE id=` / export.
+    if crate::util::trace::enabled() {
+        let trace_id = crate::util::trace::current();
+        if trace_id != 0 {
+            // Shard workers flushed when their scope joined; this
+            // thread's spans (job.run, the caller-side drain) are still
+            // local — flush so the roll-up sees the whole job.
+            crate::util::trace::flush();
+            crate::util::trace::rollup_into(metrics, &crate::util::trace::spans_for(trace_id));
+        }
+    }
     metrics.counter("service.jobs").inc();
     if spec.threads.is_some() {
         metrics.counter("service.parallel_jobs").inc();
@@ -752,6 +796,9 @@ pub fn run_job_ctl(
                 bytes_written: out.bytes_written,
                 edges_per_sec: out.edges as f64 / wall.as_secs_f64().max(1e-9),
                 error: None,
+                queue_ns: 0,
+                run_ns: out.run_ns,
+                drain_ns: out.drain_ns,
             }
         }
         Err(e) => {
@@ -797,6 +844,9 @@ fn error_result(spec: &JobSpec, wall: std::time::Duration, error: JobError) -> J
         bytes_written: 0,
         edges_per_sec: 0.0,
         error: Some(error),
+        queue_ns: 0,
+        run_ns: 0,
+        drain_ns: 0,
     }
 }
 

@@ -278,6 +278,32 @@ fn cmd_sample_stream(
     Ok(())
 }
 
+const SAMPLE_HELP: &str = "\
+observability:
+  --trace-out FILE   record spans for this run (sampler propose/accept
+                     timing, prune-abort depths, sequencer park/drain,
+                     sink writes) and write them as Chrome trace-event
+                     JSON — load in chrome://tracing or Perfetto.
+                     Tracing never changes the output: the edge stream
+                     is byte-identical with tracing on or off.
+  MAGBDP_LOG=level   stderr log verbosity: error|warn|info|debug|trace
+                     (default: warn). Applies to every subcommand.
+";
+
+/// Write the spans recorded under `trace_id` as Chrome trace-event JSON.
+fn write_trace(path: &str, trace_id: u64) -> Result<(), String> {
+    use magbdp::util::trace;
+    // The shard workers flushed on exit; this thread's own spans
+    // (job.run, terminal drains) are still in its local buffer.
+    trace::flush();
+    trace::set_current(0);
+    let spans = trace::spans_for(trace_id);
+    std::fs::write(path, trace::export_chrome(&spans))
+        .map_err(|e| format!("write {path}: {e}"))?;
+    println!("wrote {path} ({} spans)", spans.len());
+    Ok(())
+}
+
 fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let cmd = Command::new("sample", "sample one graph from a MAGM")
         .opt("config", "model config file (overrides theta/d/mu/n)", None)
@@ -298,7 +324,13 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
             "abort sampling after this many milliseconds",
             None,
         )
-        .flag("degrees", "print the out-degree histogram head (collects in memory)");
+        .opt(
+            "trace-out",
+            "record spans and write Chrome trace-event JSON here",
+            None,
+        )
+        .flag("degrees", "print the out-degree histogram head (collects in memory)")
+        .after_help(SAMPLE_HELP);
     let Some(args) = parse_or_help(&cmd, tokens)? else {
         return Ok(());
     };
@@ -335,12 +367,30 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let assignment = params.sample_attributes(&mut rng);
     let out = args.get("out").map(str::to_string);
     let degrees = args.flag("degrees");
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let trace_id = match &trace_out {
+        Some(_) => {
+            let id = magbdp::util::trace::next_id();
+            magbdp::util::trace::set_current(id);
+            magbdp::util::trace::set_enabled(true);
+            id
+        }
+        None => 0,
+    };
 
     // Pure streaming mode: never materialise the graph.
     if let (Some(path), false) = (&out, degrees) {
-        return cmd_sample_stream(
+        let run_span = magbdp::util::trace::span("job.run");
+        let result = cmd_sample_stream(
             &params, &assignment, &mut rng, seed, threads, &algo, path, timeout,
         );
+        drop(run_span);
+        if let Some(trace_path) = &trace_out {
+            if result.is_ok() {
+                write_trace(trace_path, trace_id)?;
+            }
+        }
+        return result;
     }
 
     // Collect mode runs through the same streaming dispatch with a
@@ -348,6 +398,7 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     // identically whether or not the graph is materialised.
     let t = std::time::Instant::now();
     let mut collect = magbdp::sampler::CollectSink::new(params.n());
+    let run_span = magbdp::util::trace::span("job.run");
     let (name, proposed, _accepted) = run_stream_algo_deadline(
         &params,
         &assignment,
@@ -358,6 +409,7 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
         &mut collect,
         timeout,
     )?;
+    drop(run_span);
     let graph = collect.graph;
     let wall = t.elapsed();
 
@@ -397,6 +449,9 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
         for (k, &count) in stats.hist.iter().take(16).enumerate() {
             println!("  deg {k:>3}: {count}");
         }
+    }
+    if let Some(trace_path) = &trace_out {
+        write_trace(trace_path, trace_id)?;
     }
     Ok(())
 }
@@ -596,15 +651,38 @@ wire protocol (--listen):
              algo=, timeout_ms=, threads=, ...) plus `id=<u64>`
              (correlation id) and `respond=none|tsv|bin` (stream edges
              back instead of `OK`); control lines PING, METRICS, QUIT,
-             DRAIN; `#` comments ignored.
-  responses: `OK id=.. edges=..` | `ERR id=.. retry=<bool> msg=..` |
+             DRAIN, and TRACE id=<job id> (span tree of a recent job;
+             needs --trace); `#` comments ignored.
+  responses: `OK id=.. edges=.. queue_ns=.. run_ns=.. drain_ns=..`
+             (the *_ns fields split the job into queue wait, sampling
+             incl. the sequencer drain, and the terminal flush) |
+             `ERR id=.. retry=<bool> msg=..` |
              `CHUNK id=.. bytes=<k>` + k raw bytes + newline, ending in
              `END id=.. format=.. bytes=..` | `DRAINING queued=<n>` |
              `METRICS bytes=<k>` + body (Prometheus text exposition) |
-             `PONG`.
+             `TRACE id=.. bytes=<k>` + span tree | `PONG`.
   A full queue rejects jobs with `ERR ... intake queue full` instead of
   buffering unboundedly; parse errors and sampler panics fail only their
   own job — the pool and the connection always survive.
+
+observability:
+  METRICS counters: service.requests, service.parse_errors,
+  service.errors, service.rejected, service.conn_rejected,
+  service.net_write_errors, service.jobs, service.parallel_jobs,
+  service.cancelled, service.deadline_exceeded, service.panics,
+  service.busy_ns (ns), service.edges, service.bytes_written,
+  service.xla_dispatches. Gauges: service.intake_depth,
+  service.draining (0/1), service.edges_per_sec. Histograms:
+  service.job_latency_ns and job.queue_wait_ns (ns; move on every job),
+  plus — traced jobs only — sampler.propose_ns, sampler.accept_ns (ns),
+  sampler.prune_abort_depth (descent levels), seq.park_ns, sink.write_ns
+  (ns). All families are pre-registered at startup, so a scrape shows
+  them (count 0) before the first job.
+  --trace records spans for every job (one atomic check per site when
+  off) and serves TRACE id=; OK lines carry the queue_ns=/run_ns=/
+  drain_ns= breakdown either way. MAGBDP_LOG=error|warn|info|debug|trace
+  sets stderr log verbosity; dispatch/finish/error lines carry the job
+  id at info.
 
 multi-core jobs:
   `threads=<1..=256>` (algo=magm-bdp|hybrid) fans one job's edge stream
@@ -630,6 +708,7 @@ examples:
   magbdp serve --jobs trace.txt --stats
   magbdp serve --listen 127.0.0.1:7711 --queue 256 --max-conns 64
   magbdp serve --listen 127.0.0.1:7711 --job-timeout 60000 --drain-timeout 2000
+  magbdp serve --listen 127.0.0.1:7711 --trace
   printf 'id=1 d=10 mu=0.4 seed=7 timeout_ms=5000 respond=bin\\n' | nc 127.0.0.1 7711
 ";
 
@@ -652,6 +731,7 @@ fn cmd_serve(tokens: &[String]) -> Result<(), String> {
             Some("5000"),
         )
         .flag("stats", "print the metrics registry after the run (--jobs mode)")
+        .flag("trace", "record per-job spans and serve the TRACE id= control line")
         .after_help(SERVE_HELP);
     let Some(args) = parse_or_help(&cmd, tokens)? else {
         return Ok(());
@@ -670,6 +750,7 @@ fn cmd_serve(tokens: &[String]) -> Result<(), String> {
                 io_timeout_ms: args.u64("io-timeout").map_err(|e| e.to_string())?,
                 job_timeout_ms: args.u64("job-timeout").map_err(|e| e.to_string())?,
                 drain_timeout_ms: args.u64("drain-timeout").map_err(|e| e.to_string())?,
+                trace: args.flag("trace"),
             };
             let server = magbdp::coordinator::JobServer::bind(&config)?;
             println!("listening on {}", server.local_addr()?);

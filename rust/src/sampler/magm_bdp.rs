@@ -33,6 +33,7 @@ use crate::model::colors::ColorIndex;
 use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::util::rng::dist::binomial;
 use crate::util::rng::{split_streams, Rng, SeedableRng, Xoshiro256pp};
+use crate::util::trace;
 
 /// Fixed logical-shard count for the parallel decomposition. Quotas and
 /// RNG streams are per *logical shard* — never per worker thread — so
@@ -47,6 +48,45 @@ pub const LOGICAL_SHARDS: usize = 64;
 /// sequenced parallel drain: deep enough to absorb shard-size jitter,
 /// shallow enough that peak buffering stays a few chunks per thread.
 pub const SEQ_WINDOW: usize = 4;
+
+/// Per-call aggregation buffer for the traced propose/accept loop:
+/// wall time and prune-depth tallies accumulate here (plain locals, no
+/// shared state) and become at most a handful of spans per emit — the
+/// hot loop never records per ball.
+struct QuotaTrace {
+    start_ns: u64,
+    propose_ns: u64,
+    accept_ns: u64,
+    balls: u64,
+    hits: u64,
+    depths: [u64; 64],
+}
+
+impl QuotaTrace {
+    fn new() -> Self {
+        QuotaTrace {
+            start_ns: trace::now_ns(),
+            propose_ns: 0,
+            accept_ns: 0,
+            balls: 0,
+            hits: 0,
+            depths: [0; 64],
+        }
+    }
+
+    /// Emit the aggregate as spans: one `sampler.propose`, one
+    /// `sampler.accept`, and one `sampler.prune_abort_depth` stat span
+    /// per distinct descent depth paid.
+    fn emit(&self) {
+        trace::record("sampler.propose", self.start_ns, self.propose_ns, self.balls);
+        trace::record("sampler.accept", self.start_ns, self.accept_ns, self.hits);
+        for (depth, &n) in self.depths.iter().enumerate() {
+            if n > 0 {
+                trace::record_value("sampler.prune_abort_depth", depth as u64, n);
+            }
+        }
+    }
+}
 
 /// Batched evaluation of acceptance probabilities (step 2 above).
 pub trait AcceptBackend {
@@ -170,6 +210,42 @@ impl<'a> MagmBdpSampler<'a> {
         }
     }
 
+    /// Traced twin of the streaming propose/accept inner loop for one
+    /// component quota. The RNG schedule is **identical** to the
+    /// untraced loop: `drop_ball_pruned_depth` consumes exactly the
+    /// draws `drop_ball_pruned` does (asserted in `bdp`'s tests) and
+    /// all clock reads sit outside the RNG sequence, so edge streams
+    /// stay byte-identical with tracing on or off.
+    fn run_quota_traced<R: Rng + ?Sized>(
+        &self,
+        comp: Component,
+        balls: u64,
+        rng: &mut R,
+        sink: &mut dyn EdgeSink,
+        agg: &mut QuotaTrace,
+    ) -> u64 {
+        use std::time::Instant;
+        let bdp = self.proposal.bdp(comp);
+        let (rowf, colf) = self.proposal.filters(comp);
+        let mut accepted = 0u64;
+        agg.balls += balls;
+        for _ in 0..balls {
+            let t0 = Instant::now();
+            let (hit, paid) = bdp.drop_ball_pruned_depth(rowf, colf, rng);
+            agg.propose_ns += t0.elapsed().as_nanos() as u64;
+            agg.depths[paid.min(63)] += 1;
+            let Some((c, cp)) = hit else {
+                continue; // sure-rejection, descent aborted early
+            };
+            let t1 = Instant::now();
+            let p = self.proposal.accept_prob(comp, c, cp);
+            accepted += self.accept_one(c, cp, p, rng, sink);
+            agg.accept_ns += t1.elapsed().as_nanos() as u64;
+            agg.hits += 1;
+        }
+        accepted
+    }
+
     /// Vector form of [`accept_one`](Self::accept_one): thin each ball in
     /// `balls` by its probability in `probs`, pushing accepted edges into
     /// `sink`. Returns the number accepted.
@@ -270,13 +346,22 @@ impl<'a> MagmBdpSampler<'a> {
     /// The streaming body shared by the inherent generic entry point and
     /// the `Sampler` trait's object-safe one.
     fn stream_into<R: Rng + ?Sized>(&self, rng: &mut R, sink: &mut dyn EdgeSink) -> (u64, u64) {
+        // One atomic load decides the whole run: the untraced branch
+        // below is the exact pre-instrumentation loop.
+        let traced = trace::enabled();
         let mut proposed = 0u64;
         let mut accepted = 0u64;
         for comp in Component::ALL {
             let bdp = self.proposal.bdp(comp);
-            let (rowf, colf) = self.proposal.filters(comp);
             let balls = bdp.draw_ball_count(rng);
             proposed += balls;
+            if traced {
+                let mut agg = QuotaTrace::new();
+                accepted += self.run_quota_traced(comp, balls, rng, sink, &mut agg);
+                agg.emit();
+                continue;
+            }
+            let (rowf, colf) = self.proposal.filters(comp);
             for _ in 0..balls {
                 let Some((c, cp)) = bdp.drop_ball_pruned(rowf, colf, rng) else {
                     continue; // sure-rejection, descent aborted early
@@ -364,14 +449,33 @@ impl<'a> MagmBdpSampler<'a> {
         let shard_rngs: Vec<Xoshiro256pp> =
             split_streams(seed ^ 0x9E3779B97F4A7C15, LOGICAL_SHARDS);
         let seq = ShardedSink::sequenced(terminal, threads, LOGICAL_SHARDS, window);
+        // Tracing context: checked once out here; shard workers are
+        // fresh scoped threads, so the job's trace id is re-pinned on
+        // each. Aggregation is per worker (one propose/accept span pair
+        // per worker, not per ball), and buffers flush before the
+        // worker thread exits.
+        let traced = trace::enabled();
+        let parent_trace = trace::current();
         let per_worker = crate::util::threadpool::scoped_chunks(threads, threads, |w, _| {
+            let mut worker_trace = if traced {
+                trace::set_current(parent_trace);
+                Some((trace::span("shard.worker"), QuotaTrace::new()))
+            } else {
+                None
+            };
             let mut accepted = 0u64;
+            let mut shards_run = 0u64;
             let mut shard = w;
             while shard < LOGICAL_SHARDS {
                 let mut rng = shard_rngs[shard].clone();
                 let rng = &mut rng;
                 let mut handle = seq.handle(w, shard);
                 for (ci, &comp) in Component::ALL.iter().enumerate() {
+                    if let Some((_, agg)) = worker_trace.as_mut() {
+                        accepted +=
+                            self.run_quota_traced(comp, quotas[shard][ci], rng, &mut handle, agg);
+                        continue;
+                    }
                     let bdp = self.proposal.bdp(comp);
                     let (rowf, colf) = self.proposal.filters(comp);
                     for _ in 0..quotas[shard][ci] {
@@ -383,7 +487,15 @@ impl<'a> MagmBdpSampler<'a> {
                     }
                 }
                 handle.complete();
+                shards_run += 1;
                 shard += threads;
+            }
+            if let Some((span, agg)) = worker_trace.take() {
+                agg.emit();
+                if let Some(mut span) = span {
+                    span.set_count(shards_run);
+                }
+                trace::flush();
             }
             accepted
         });
@@ -546,6 +658,56 @@ mod tests {
             / reps as f64;
         let se = (one.max(1.0) / reps as f64).sqrt();
         assert!((one - eight).abs() < 8.0 * se, "t=1 {one} vs t=8 {eight}");
+    }
+
+    #[test]
+    fn tracing_does_not_change_the_edge_stream() {
+        // The traced loops must be pure observation: same seed ⇒ same
+        // edges, sequential and parallel, with tracing on or off.
+        let _g = trace::test_lock();
+        let (params, a) = setup(6, 0.5, 300, 9);
+        let s = MagmBdpSampler::new(&params, &a);
+        trace::set_enabled(false);
+        let par_off = s.sample_parallel(123, 4);
+        let mut off = CollectSink::new(params.n());
+        let counts_off = s.sample_into(&mut Xoshiro256pp::seed_from_u64(13), &mut off);
+
+        trace::set_enabled(true);
+        let id = trace::next_id();
+        trace::set_current(id);
+        let par_on = s.sample_parallel(123, 4);
+        let mut on = CollectSink::new(params.n());
+        let counts_on = s.sample_into(&mut Xoshiro256pp::seed_from_u64(13), &mut on);
+        trace::set_enabled(false);
+        let spans = trace::spans_for(id);
+        trace::set_current(0);
+
+        assert_eq!(par_off.edges(), par_on.edges());
+        assert_eq!(off.graph.edges(), on.graph.edges());
+        assert_eq!(counts_off, counts_on);
+        // The traced run left a span record for every pipeline stage.
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        for want in ["shard.worker", "sampler.propose", "sampler.accept"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        // Span ball counts account for every proposal of both traced
+        // runs (the parallel proposals are a function of the seed, so
+        // an untraced re-run reproduces that total).
+        let mut sink = CollectSink::new(params.n());
+        let (par_proposed, _) = s.sample_parallel_into(123, 4, &mut sink);
+        let proposed: u64 = spans
+            .iter()
+            .filter(|s| s.name == "sampler.propose")
+            .map(|s| s.count)
+            .sum();
+        assert_eq!(proposed, counts_on.0 + par_proposed);
+        // Every proposed ball paid a recorded prune depth.
+        let depth_count: u64 = spans
+            .iter()
+            .filter(|s| s.name == "sampler.prune_abort_depth")
+            .map(|s| s.count)
+            .sum();
+        assert_eq!(depth_count, proposed);
     }
 
     #[test]

@@ -82,10 +82,11 @@
 use std::collections::VecDeque;
 use std::io::Write;
 use std::sync::{Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::graph::MultiEdgeList;
 use crate::util::cancel::{cancel_unwind, CancelToken};
+use crate::util::trace;
 
 /// Receives accepted edges as they are produced.
 pub trait EdgeSink {
@@ -705,6 +706,10 @@ impl<'a> SequencedSink<'a> {
             return;
         }
         let mut st = self.lock_state();
+        // Backpressure accounting: from the first pass that finds the
+        // window full until admission, including any drain-helping done
+        // while parked (also covered by its own `seq.drain` span).
+        let mut park: Option<(u64, Instant)> = None;
         loop {
             // Token before failure flag: a cancelled job must abort via
             // `cancel_unwind` (the retryable verdict), not a bare panic.
@@ -721,6 +726,9 @@ impl<'a> SequencedSink<'a> {
             if st.outstanding[worker] < self.window {
                 break;
             }
+            if park.is_none() && trace::enabled() {
+                park = Some((trace::now_ns(), Instant::now()));
+            }
             if !st.draining && Self::deliverable(&st) {
                 st.draining = true;
                 st = self.drain_locked(st);
@@ -731,6 +739,9 @@ impl<'a> SequencedSink<'a> {
                 .wait_timeout(st, SEQ_WAIT_TICK)
                 .unwrap_or_else(|p| p.into_inner())
                 .0;
+        }
+        if let Some((start_ns, t0)) = park {
+            trace::record("seq.park", start_ns, t0.elapsed().as_nanos() as u64, 1);
         }
         st.queues[shard].push_back((worker, chunk));
         st.outstanding[worker] += 1;
@@ -749,6 +760,8 @@ impl<'a> SequencedSink<'a> {
     /// the terminal lock is only taken with the state lock released.
     fn drain_locked<'g>(&self, mut st: MutexGuard<'g, SeqState>) -> MutexGuard<'g, SeqState> {
         let guard = DrainGuard { owner: self };
+        let mut drain_span = trace::span("seq.drain");
+        let mut delivered = 0u64;
         loop {
             let mut batch: Vec<SeqChunk> = Vec::new();
             while st.cursor < st.queues.len() {
@@ -764,13 +777,23 @@ impl<'a> SequencedSink<'a> {
             if batch.is_empty() {
                 break;
             }
+            delivered += batch.len() as u64;
             drop(st);
             {
+                // `sink.write` covers the terminal delivery of this
+                // batch, including the wait for the terminal lock.
+                let write_t = trace::enabled().then(|| (trace::now_ns(), Instant::now()));
+                let mut edges = 0u64;
                 let mut terminal = self.terminal.lock().unwrap();
                 for (_, chunk) in &batch {
+                    edges += chunk.len() as u64;
                     for &(s, d) in chunk {
                         terminal.push(s, d);
                     }
+                }
+                drop(terminal);
+                if let Some((start_ns, t0)) = write_t {
+                    trace::record("sink.write", start_ns, t0.elapsed().as_nanos() as u64, edges);
                 }
             }
             st = self.lock_state();
@@ -785,6 +808,10 @@ impl<'a> SequencedSink<'a> {
         st.draining = false;
         self.cv.notify_all();
         std::mem::forget(guard);
+        if let Some(span) = drain_span.as_mut() {
+            span.set_count(delivered);
+        }
+        drop(drain_span);
         st
     }
 
@@ -817,9 +844,14 @@ impl<'a> SequencedSink<'a> {
             .into_inner()
             .unwrap_or_else(|p| p.into_inner());
         assert!(!st.failed, "sequenced drain failed; see the original worker error");
+        // Residual window delivery + terminal flush, timed as the final
+        // `sink.write` of the job (recorded on the finishing thread).
+        let write_t = trace::enabled().then(|| (trace::now_ns(), Instant::now()));
+        let mut edges = 0u64;
         while st.cursor < st.queues.len() {
             let c = st.cursor;
             if let Some((_, chunk)) = st.queues[c].pop_front() {
+                edges += chunk.len() as u64;
                 for &(s, d) in &chunk {
                     terminal.push(s, d);
                 }
@@ -829,6 +861,9 @@ impl<'a> SequencedSink<'a> {
             }
         }
         terminal.finish();
+        if let Some((start_ns, t0)) = write_t {
+            trace::record("sink.write", start_ns, t0.elapsed().as_nanos() as u64, edges);
+        }
         SequencerStats {
             peak_buffered_chunks: st.peak_buffered,
         }

@@ -61,7 +61,10 @@ impl Gauge {
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
-    sum_micros: AtomicU64, // sum scaled by 1e-3 when observing ns; generic "milli-units"
+    // Exact sum in fixed-point milli-units (observation × 1000, rounded).
+    // Integral ns observations are represented exactly; headroom is
+    // ~1.8e16 summed units (≈ 208 days of summed nanoseconds).
+    sum_milli: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -69,23 +72,38 @@ impl Default for Histogram {
         Self {
             buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
-            sum_micros: AtomicU64::new(0),
+            sum_milli: AtomicU64::new(0),
         }
     }
 }
 
 impl Histogram {
     pub fn observe(&self, v: f64) {
+        self.observe_n(v, 1);
+    }
+
+    /// Record `n` observations of the same value with one set of atomic
+    /// ops — used by trace roll-ups that pre-aggregate per-ball values
+    /// (e.g. prune abort depths) before touching shared state.
+    pub fn observe_n(&self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let v = v.max(0.0);
         let idx = (v.max(1.0) as u64).ilog2().min(63) as usize;
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_micros
-            .fetch_add((v / 1000.0) as u64, Ordering::Relaxed);
+        self.buckets[idx].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum_milli
+            .fetch_add(n.saturating_mul((v * 1000.0).round() as u64), Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of observed values (same unit as `observe`).
+    pub fn sum(&self) -> f64 {
+        self.sum_milli.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
     /// Mean of observed values (same unit as `observe`).
@@ -94,7 +112,7 @@ impl Histogram {
         if c == 0 {
             0.0
         } else {
-            self.sum_micros.load(Ordering::Relaxed) as f64 * 1000.0 / c as f64
+            self.sum() / c as f64
         }
     }
 
@@ -106,7 +124,10 @@ impl Histogram {
             .collect()
     }
 
-    /// Approximate quantile from the log buckets (returns bucket lower edge).
+    /// Approximate quantile from the log buckets. Returns the bucket
+    /// *upper* edge — the same `2^(i+1)` edge the Prometheus exposition
+    /// labels `_bucket{le="..."}` — so `quantile(q)` is an inclusive
+    /// "q of observations are ≤ this" bound, consistent with scrapes.
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -117,10 +138,10 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return (1u64 << i) as f64;
+                return (1u128 << (i + 1)) as f64;
             }
         }
-        (1u64 << 63) as f64
+        (1u128 << 64) as f64
     }
 }
 
@@ -237,7 +258,7 @@ impl Registry {
             }
             let count = h.count();
             out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {count}\n"));
-            out.push_str(&format!("{name}_sum {}\n", h.mean() * count as f64));
+            out.push_str(&format!("{name}_sum {}\n", h.sum()));
             out.push_str(&format!("{name}_count {count}\n"));
         }
         out
@@ -330,6 +351,166 @@ mod tests {
         assert!(text.contains("empty_bucket{le=\"+Inf\"} 0\n"));
         assert!(text.contains("empty_count 0\n"));
         assert!(!text.contains("le=\"2\""), "{text}");
+    }
+
+    #[test]
+    fn histogram_sum_is_exact_for_small_observations() {
+        // The old accumulator truncated each observation to the nearest
+        // 1000 units, so sub-1000 observations vanished from the sum.
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.observe(3.0);
+        }
+        assert_eq!(h.sum(), 300.0);
+        assert_eq!(h.mean(), 3.0);
+        // And the exposition emits the stored sum, not mean()*count.
+        let r = Registry::new();
+        r.histogram("tiny").observe(7.0);
+        assert!(r.render_prometheus().contains("tiny_sum 7\n"));
+    }
+
+    #[test]
+    fn histogram_observe_n_matches_repeated_observe() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for _ in 0..5 {
+            a.observe(12.0);
+        }
+        b.observe_n(12.0, 5);
+        b.observe_n(99.0, 0); // no-op
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.sum(), b.sum());
+        assert_eq!(a.bucket_counts(), b.bucket_counts());
+    }
+
+    #[test]
+    fn quantile_returns_bucket_upper_edge() {
+        let h = Histogram::default();
+        h.observe(3.0); // bucket 1: [2, 4) → upper edge 4
+        assert_eq!(h.quantile(0.5), 4.0);
+        assert_eq!(h.quantile(1.0), 4.0);
+        h.observe(5.0); // bucket 2: [4, 8) → upper edge 8
+        assert_eq!(h.quantile(1.0), 8.0);
+        // The quantile edge is exactly a rendered le="..." edge.
+        let r = Registry::new();
+        let rh = r.histogram("q");
+        rh.observe(3.0);
+        rh.observe(5.0);
+        let text = r.render_prometheus();
+        assert!(text.contains(&format!("q_bucket{{le=\"{}\"}}", rh.quantile(1.0))), "{text}");
+        // Saturated top bucket reports the 2^64 upper edge.
+        let top = Histogram::default();
+        top.observe(f64::MAX);
+        assert_eq!(top.quantile(1.0), (1u128 << 64) as f64);
+    }
+
+    /// Minimal exposition-format lint: every non-comment line is
+    /// `name{labels} value` with a finite value, every family name is
+    /// preceded by its `# TYPE` header, and cumulative histogram buckets
+    /// are monotone non-decreasing ending at `_count`.
+    fn lint_exposition(text: &str) {
+        use std::collections::HashSet;
+        let mut typed: HashSet<String> = HashSet::new();
+        let mut bucket_acc: Option<(String, u64)> = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let fam = it.next().expect("family name");
+                let kind = it.next().expect("family kind");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "bad kind in {line:?}"
+                );
+                assert!(it.next().is_none(), "trailing tokens in {line:?}");
+                typed.insert(fam.to_string());
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unknown comment {line:?}");
+            let (series, value) = line.rsplit_once(' ').expect("name value");
+            let v: f64 = value.parse().expect("numeric value");
+            assert!(!v.is_nan(), "NaN value in {line:?}");
+            let name = series.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad name char in {line:?}"
+            );
+            if let Some(rest) = series.strip_prefix(name) {
+                if !rest.is_empty() {
+                    // `{label="value",...}` — balanced braces, quoted values.
+                    assert!(rest.starts_with('{') && rest.ends_with('}'), "{line:?}");
+                    for pair in rest[1..rest.len() - 1].split(',') {
+                        let (k, qv) = pair.split_once('=').expect("label k=v");
+                        assert!(!k.is_empty() && qv.starts_with('"') && qv.ends_with('"'));
+                    }
+                }
+            }
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .filter(|f| typed.contains(*f))
+                .unwrap_or(name);
+            assert!(typed.contains(family), "no # TYPE before {line:?}");
+            // Cumulative bucket monotonicity per family.
+            if name.ends_with("_bucket") && typed.contains(name.trim_end_matches("_bucket")) {
+                let fam = name.trim_end_matches("_bucket").to_string();
+                let c = v as u64;
+                match &mut bucket_acc {
+                    Some((prev_fam, prev)) if *prev_fam == fam => {
+                        assert!(c >= *prev, "non-monotone buckets at {line:?}");
+                        *prev = c;
+                    }
+                    _ => bucket_acc = Some((fam, c)),
+                }
+            } else {
+                bucket_acc = None;
+            }
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_lints_clean() {
+        let r = Registry::new();
+        r.counter("service.jobs").add(3);
+        r.gauge("service.edges_per_sec").set(12.5);
+        let h = r.histogram("service.job_latency_ns");
+        for v in [3.0, 5.0, 5.0, 900.0, 1.0e12] {
+            h.observe(v);
+        }
+        r.histogram("empty.family");
+        lint_exposition(&r.render_prometheus());
+    }
+
+    #[test]
+    fn prometheus_render_is_consistent_under_concurrent_writers() {
+        let r = Registry::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for i in 0..2000u64 {
+                        r.counter("w.ops").inc();
+                        r.histogram("w.lat_ns").observe(((t * 7 + i) % 513) as f64);
+                    }
+                });
+            }
+            // Scrape while the writers are running: every snapshot must
+            // still lint clean and stay internally consistent.
+            let r = r.clone();
+            s.spawn(move || {
+                for _ in 0..50 {
+                    lint_exposition(&r.render_prometheus());
+                }
+            });
+        });
+        // Quiescent state is exact.
+        assert_eq!(r.counter("w.ops").get(), 8000);
+        let h = r.histogram("w.lat_ns");
+        assert_eq!(h.count(), 8000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        let text = r.render_prometheus();
+        lint_exposition(&text);
+        assert!(text.contains("w_lat_ns_count 8000\n"), "{text}");
     }
 
     #[test]

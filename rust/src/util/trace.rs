@@ -1,0 +1,614 @@
+//! End-to-end job tracing: lock-free per-thread span recorders feeding
+//! a bounded global ring buffer.
+//!
+//! Every span carries a **job-scoped trace id** allocated at server
+//! intake (or by the CLI for `sample --trace-out`) and propagated as a
+//! thread-local through the pool worker running the job, the scoped
+//! shard workers of `sample_parallel_into`, and the `SequencedSink`
+//! drain — so one job's spans can be pulled back out of the shared ring
+//! with [`spans_for`] whatever threads they were recorded on.
+//!
+//! Cost model: recording is **off by default** and every entry point
+//! ([`span`], [`record`], [`record_value`]) starts with a single
+//! `Relaxed` atomic load — the disabled hot path pays exactly that one
+//! check and nothing else (asserted by a comparison in
+//! `cargo bench --bench streaming_parallel`). When enabled, spans go to
+//! a plain thread-local `Vec` (no locks, no allocation after warm-up)
+//! and are batch-flushed into the ring mutex at coarse granularity:
+//! every [`FLUSH_AT`] spans, on explicit [`flush`], and when a recorder
+//! thread exits. The ring holds the most recent [`RING_CAPACITY`] spans
+//! process-wide; old jobs age out instead of growing memory.
+//!
+//! Consumers:
+//! - [`rollup_into`] folds one job's completed spans into registry
+//!   histograms (`sampler.propose_ns`, `sampler.accept_ns`,
+//!   `sampler.prune_abort_depth`, `seq.park_ns`, `sink.write_ns`) —
+//!   called at the job boundary by the service.
+//! - [`export_chrome`] renders spans as Chrome trace-event JSON
+//!   (load in `chrome://tracing` / Perfetto) for `--trace-out`.
+//! - [`render_tree`] renders a per-thread indented span tree — the
+//!   payload of the server's `TRACE id=` control line.
+//!
+//! Determinism invariant: instrumentation only *observes*. It must not
+//! consume RNG draws or reorder edge emission — the traced sampler
+//! paths use `drop_ball_pruned_depth`, whose RNG schedule is proven
+//! identical to `drop_ball_pruned`, and all timing reads are outside
+//! the RNG sequence, so edge streams stay byte-identical per
+//! `(spec, seed, threads)` with tracing on or off.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::metrics::Registry;
+
+/// Bounded capacity of the global span ring (most recent spans win).
+pub const RING_CAPACITY: usize = 1 << 14;
+
+/// Per-thread recorder batch size before a flush into the ring.
+const FLUSH_AT: usize = 256;
+
+/// One completed span. `start_ns` is monotonic, relative to the first
+/// trace-clock read in this process ([`now_ns`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Job-scoped trace id ([`next_id`]); 0 = recorded outside any job.
+    pub trace_id: u64,
+    /// Small dense per-thread recorder id (not the OS tid).
+    pub tid: u64,
+    /// Nesting depth of *guard* spans on the recording thread.
+    pub depth: u16,
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Operations the span covers (balls proposed, edges written, …).
+    pub count: u64,
+    /// Auxiliary value for stat spans (e.g. prune abort depth); 0 for
+    /// pure timing spans.
+    pub value: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Is span recording on? One `Relaxed` load — this is the only cost
+/// instrumented hot paths pay when tracing is disabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Allocate a fresh process-unique trace id (never 0).
+pub fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Monotonic nanoseconds since the process' trace epoch.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+struct LocalBuf {
+    spans: Vec<Span>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        // Thread exit: hand whatever is left to the ring so short-lived
+        // scoped shard workers never lose their tail spans.
+        flush_vec(&mut self.spans);
+    }
+}
+
+thread_local! {
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    static DEPTH: Cell<u16> = const { Cell::new(0) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static LOCAL: RefCell<LocalBuf> = const { RefCell::new(LocalBuf { spans: Vec::new() }) };
+}
+
+/// Set the calling thread's current trace id. Workers spawned on behalf
+/// of a job must call this with the job's id before recording.
+pub fn set_current(trace_id: u64) {
+    CURRENT.with(|c| c.set(trace_id));
+}
+
+/// The calling thread's current trace id (0 = none).
+pub fn current() -> u64 {
+    CURRENT.with(Cell::get)
+}
+
+fn local_tid() -> u64 {
+    TID.with(|t| {
+        let mut id = t.get();
+        if id == 0 {
+            id = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(id);
+        }
+        id
+    })
+}
+
+/// Bounded overwrite-oldest ring. `buf` grows once up to capacity, then
+/// `cursor` wraps.
+struct Ring {
+    buf: Vec<Span>,
+    cursor: usize,
+}
+
+impl Ring {
+    const fn new() -> Self {
+        Ring {
+            buf: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    fn push(&mut self, s: Span) {
+        if self.buf.len() < RING_CAPACITY {
+            self.buf.push(s);
+        } else {
+            self.buf[self.cursor] = s;
+            self.cursor = (self.cursor + 1) % RING_CAPACITY;
+        }
+    }
+
+    /// Oldest → newest copy of the contents.
+    fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.cursor..]);
+        out.extend_from_slice(&self.buf[..self.cursor]);
+        out
+    }
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring::new());
+
+fn ring() -> std::sync::MutexGuard<'static, Ring> {
+    RING.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn flush_vec(spans: &mut Vec<Span>) {
+    if spans.is_empty() {
+        return;
+    }
+    let mut ring = ring();
+    for s in spans.drain(..) {
+        ring.push(s);
+    }
+}
+
+/// Move the calling thread's recorder buffer into the global ring.
+/// Call at job / worker boundaries before reading [`spans_for`].
+pub fn flush() {
+    LOCAL.with(|l| flush_vec(&mut l.borrow_mut().spans));
+}
+
+fn push_local(s: Span) {
+    LOCAL.with(|l| {
+        let mut buf = l.borrow_mut();
+        buf.spans.push(s);
+        if buf.spans.len() >= FLUSH_AT {
+            flush_vec(&mut buf.spans);
+        }
+    });
+}
+
+/// Record a completed timing span measured by the caller.
+#[inline]
+pub fn record(name: &'static str, start_ns: u64, dur_ns: u64, count: u64) {
+    if !enabled() {
+        return;
+    }
+    push_local(Span {
+        trace_id: current(),
+        tid: local_tid(),
+        depth: DEPTH.with(Cell::get),
+        name,
+        start_ns,
+        dur_ns,
+        count,
+        value: 0,
+    });
+}
+
+/// Record a zero-duration stat span (`value` pre-aggregated over
+/// `count` operations — e.g. a prune abort depth seen `count` times).
+#[inline]
+pub fn record_value(name: &'static str, value: u64, count: u64) {
+    if !enabled() {
+        return;
+    }
+    push_local(Span {
+        trace_id: current(),
+        tid: local_tid(),
+        depth: DEPTH.with(Cell::get),
+        name,
+        start_ns: now_ns(),
+        dur_ns: 0,
+        count,
+        value,
+    });
+}
+
+/// RAII guard: records a span from construction to drop and tracks
+/// nesting depth for tree rendering.
+pub struct SpanGuard {
+    name: &'static str,
+    start_ns: u64,
+    depth: u16,
+    count: u64,
+}
+
+impl SpanGuard {
+    /// Attribute `n` covered operations to this span.
+    pub fn set_count(&mut self, n: u64) {
+        self.count = n;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = now_ns();
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        push_local(Span {
+            trace_id: current(),
+            tid: local_tid(),
+            depth: self.depth,
+            name: self.name,
+            start_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+            count: self.count,
+            value: 0,
+        });
+    }
+}
+
+/// Open a guard span, or `None` when tracing is disabled (one atomic
+/// check). Typical use: `let _s = trace::span("job.run");`.
+#[inline]
+pub fn span(name: &'static str) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v.saturating_add(1));
+        v
+    });
+    Some(SpanGuard {
+        name,
+        start_ns: now_ns(),
+        depth,
+        count: 0,
+    })
+}
+
+/// Oldest → newest copy of the whole ring (flushes this thread first).
+pub fn snapshot() -> Vec<Span> {
+    flush();
+    ring().snapshot()
+}
+
+/// All ring spans belonging to one trace id, oldest → newest.
+pub fn spans_for(trace_id: u64) -> Vec<Span> {
+    flush();
+    ring()
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.trace_id == trace_id)
+        .collect()
+}
+
+/// Drop every recorded span (tests and CLI runs that export per-job).
+pub fn clear() {
+    flush();
+    let mut r = ring();
+    r.buf.clear();
+    r.cursor = 0;
+}
+
+/// Fold one job's completed spans into registry histograms. Units:
+/// `*_ns` families observe span durations in nanoseconds;
+/// `sampler.prune_abort_depth` observes the descent level each
+/// proposed ball paid before the prune aborted (or the full depth for
+/// survivors). `job.queue_wait_ns` is observed directly at dispatch by
+/// the server (it exists whether or not the job was traced), so it is
+/// deliberately not re-observed here.
+pub fn rollup_into(registry: &Registry, spans: &[Span]) {
+    for s in spans {
+        match s.name {
+            "sampler.propose" => registry
+                .histogram("sampler.propose_ns")
+                .observe(s.dur_ns as f64),
+            "sampler.accept" => registry
+                .histogram("sampler.accept_ns")
+                .observe(s.dur_ns as f64),
+            "sampler.prune_abort_depth" => registry
+                .histogram("sampler.prune_abort_depth")
+                .observe_n(s.value as f64, s.count),
+            "seq.park" => registry.histogram("seq.park_ns").observe(s.dur_ns as f64),
+            "sink.write" => registry.histogram("sink.write_ns").observe(s.dur_ns as f64),
+            _ => {}
+        }
+    }
+}
+
+/// The histogram families [`rollup_into`] (and the server's direct
+/// queue-wait observation) feed. Registered eagerly at server startup
+/// so a `METRICS` scrape shows the families before any traced job runs.
+pub const ROLLUP_HISTOGRAMS: [&str; 6] = [
+    "job.queue_wait_ns",
+    "sampler.propose_ns",
+    "sampler.accept_ns",
+    "sampler.prune_abort_depth",
+    "seq.park_ns",
+    "sink.write_ns",
+];
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render spans as Chrome trace-event JSON (the "JSON array format"):
+/// one complete event (`"ph":"X"`) per span, timestamps in
+/// microseconds, `pid` = trace id so concurrent jobs separate into
+/// process lanes in the viewer.
+pub fn export_chrome(spans: &[Span]) -> String {
+    let mut out = String::from("[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n{\"name\":\"");
+        escape_json(s.name, &mut out);
+        out.push_str(&format!(
+            "\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{\"count\":{},\"value\":{},\"depth\":{}}}}}",
+            s.start_ns as f64 / 1000.0,
+            s.dur_ns as f64 / 1000.0,
+            s.trace_id,
+            s.tid,
+            s.count,
+            s.value,
+            s.depth
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Render a human-readable span tree: spans grouped per recorder
+/// thread, ordered by start time, indented by guard nesting depth.
+/// This is the payload of the server's `TRACE id=` reply.
+pub fn render_tree(spans: &[Span]) -> String {
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let mut out = String::new();
+    out.push_str(&format!("spans={}\n", spans.len()));
+    for tid in tids {
+        out.push_str(&format!("thread {tid}\n"));
+        let mut rows: Vec<&Span> = spans.iter().filter(|s| s.tid == tid).collect();
+        rows.sort_by_key(|s| (s.start_ns, s.depth));
+        for s in rows {
+            for _ in 0..=s.depth {
+                out.push_str("  ");
+            }
+            out.push_str(&format!(
+                "{} start_us={:.1} dur_us={:.1} count={} value={}\n",
+                s.name,
+                s.start_ns as f64 / 1000.0,
+                s.dur_ns as f64 / 1000.0,
+                s.count,
+                s.value
+            ));
+        }
+    }
+    out
+}
+
+/// Serialises tests (across modules) that toggle the global
+/// [`set_enabled`] switch, so concurrent lib tests can't observe each
+/// other's tracing state.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_and_costs_one_check() {
+        let _g = test_lock();
+        set_enabled(false);
+        let id = next_id();
+        set_current(id);
+        assert!(span("noop").is_none());
+        record("noop", 0, 5, 1);
+        record_value("noop", 3, 1);
+        flush();
+        assert!(spans_for(id).is_empty());
+        set_current(0);
+    }
+
+    #[test]
+    fn spans_carry_trace_id_across_threads() {
+        let _g = test_lock();
+        set_enabled(true);
+        let id = next_id();
+        set_current(id);
+        {
+            let mut s = span("job.run").expect("enabled");
+            s.set_count(2);
+            let inner = span("sampler.propose");
+            drop(inner);
+        }
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                set_current(id);
+                record("shard.worker", now_ns(), 1234, 7);
+                // No explicit flush: the thread-exit drop must deliver it.
+            });
+        });
+        set_enabled(false);
+        let spans = spans_for(id);
+        set_current(0);
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert!(names.contains(&"job.run"), "{names:?}");
+        assert!(names.contains(&"sampler.propose"), "{names:?}");
+        assert!(names.contains(&"shard.worker"), "{names:?}");
+        let run = spans.iter().find(|s| s.name == "job.run").unwrap();
+        let inner = spans.iter().find(|s| s.name == "sampler.propose").unwrap();
+        assert_eq!(run.count, 2);
+        assert_eq!(run.depth, 0);
+        assert_eq!(inner.depth, 1, "nested guard span sits one level deeper");
+        let worker = spans.iter().find(|s| s.name == "shard.worker").unwrap();
+        assert_ne!(worker.tid, run.tid, "recorded on a different thread");
+        assert_eq!(worker.trace_id, id);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest() {
+        let _g = test_lock();
+        set_enabled(true);
+        let id = next_id();
+        set_current(id);
+        for i in 0..(RING_CAPACITY + 10) as u64 {
+            record("spam", i, 1, 1);
+        }
+        set_enabled(false);
+        let all = snapshot();
+        set_current(0);
+        assert!(all.len() <= RING_CAPACITY);
+        // The newest record survived; the oldest were overwritten.
+        let spam_starts: Vec<u64> = all
+            .iter()
+            .filter(|s| s.trace_id == id)
+            .map(|s| s.start_ns)
+            .collect();
+        assert_eq!(
+            spam_starts.last().copied(),
+            Some((RING_CAPACITY + 9) as u64)
+        );
+        assert!(!spam_starts.contains(&0), "oldest span must be evicted");
+    }
+
+    #[test]
+    fn rollup_observes_the_expected_families() {
+        let r = Registry::new();
+        let spans = [
+            Span {
+                trace_id: 1,
+                tid: 1,
+                depth: 0,
+                name: "sampler.propose",
+                start_ns: 0,
+                dur_ns: 1500,
+                count: 10,
+                value: 0,
+            },
+            Span {
+                trace_id: 1,
+                tid: 1,
+                depth: 0,
+                name: "sampler.prune_abort_depth",
+                start_ns: 0,
+                dur_ns: 0,
+                count: 4,
+                value: 3,
+            },
+            Span {
+                trace_id: 1,
+                tid: 1,
+                depth: 0,
+                name: "seq.park",
+                start_ns: 0,
+                dur_ns: 900,
+                count: 1,
+                value: 0,
+            },
+            Span {
+                trace_id: 1,
+                tid: 1,
+                depth: 0,
+                name: "job.run", // not a roll-up family — ignored
+                start_ns: 0,
+                dur_ns: 7,
+                count: 1,
+                value: 0,
+            },
+        ];
+        rollup_into(&r, &spans);
+        assert_eq!(r.histogram("sampler.propose_ns").count(), 1);
+        assert_eq!(r.histogram("sampler.propose_ns").sum(), 1500.0);
+        assert_eq!(r.histogram("sampler.prune_abort_depth").count(), 4);
+        assert_eq!(r.histogram("sampler.prune_abort_depth").sum(), 12.0);
+        assert_eq!(r.histogram("seq.park_ns").sum(), 900.0);
+        assert_eq!(r.histogram("sink.write_ns").count(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed_json_shape() {
+        let spans = [Span {
+            trace_id: 9,
+            tid: 2,
+            depth: 1,
+            name: "sink.write",
+            start_ns: 2_500,
+            dur_ns: 1_000,
+            count: 3,
+            value: 0,
+        }];
+        let json = export_chrome(&spans);
+        assert!(json.starts_with('[') && json.trim_end().ends_with(']'));
+        assert!(json.contains("\"name\":\"sink.write\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ts\":2.500"));
+        assert!(json.contains("\"dur\":1.000"));
+        assert!(json.contains("\"pid\":9"));
+        assert!(json.contains("\"tid\":2"));
+        assert_eq!(export_chrome(&[]), "[\n]\n");
+    }
+
+    #[test]
+    fn tree_groups_by_thread_and_indents_by_depth() {
+        let mk = |tid, depth, name: &'static str, start| Span {
+            trace_id: 4,
+            tid,
+            depth,
+            name,
+            start_ns: start,
+            dur_ns: 10,
+            count: 1,
+            value: 0,
+        };
+        let spans = [
+            mk(1, 0, "job.run", 0),
+            mk(1, 1, "sampler.propose", 1),
+            mk(2, 0, "shard.worker", 2),
+        ];
+        let tree = render_tree(&spans);
+        assert!(tree.starts_with("spans=3\n"), "{tree}");
+        assert!(tree.contains("thread 1\n  job.run "), "{tree}");
+        assert!(tree.contains("\n    sampler.propose "), "{tree}");
+        assert!(tree.contains("thread 2\n  shard.worker "), "{tree}");
+    }
+}

@@ -1,7 +1,8 @@
 //! Networked generation service end-to-end: a real TCP client against a
 //! spawned `JobServer` — per-job fault isolation, byte-identical payload
 //! streaming, metrics scrape, bounded-queue backpressure, deadlines,
-//! disconnect cancellation, graceful drain, and a seeded chaos session.
+//! disconnect cancellation, graceful drain, traced span trees over
+//! `TRACE id=`, and a seeded chaos session.
 
 use std::time::{Duration, Instant};
 
@@ -448,6 +449,90 @@ fn client_retries_queue_full_with_backoff() {
         "the queue must have rejected at least the first attempt"
     );
     releaser.join().unwrap();
+    handle.shutdown();
+}
+
+/// A traced job's span tree covers the whole pipeline — intake queue
+/// wait, the pool worker's `job.run`, the scoped shard workers, the
+/// per-component sampler loops, the sequencer drain, the terminal sink
+/// writes, and the response write — and the roll-up histograms move.
+#[test]
+fn traced_job_returns_full_span_tree() {
+    let handle = spawn_server_cfg(|c| c.trace = true);
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    client
+        .send("id=60 d=8 mu=0.4 seed=7 algo=magm-bdp threads=2 respond=bin")
+        .unwrap();
+    let (payload, _fields) = client.collect_payload(60).expect("traced job streams");
+    assert!(!payload.is_empty(), "traced job must stream a payload");
+
+    // The pool worker flushes its spans right after writing END, so a
+    // fast TRACE can outrun the flush — retry inside the grace window.
+    let mut body = String::new();
+    let complete = |tree: &str| {
+        [
+            "job.queue_wait",
+            "job.run",
+            "shard.worker",
+            "sampler.propose",
+            "sampler.accept",
+            "seq.drain",
+            "sink.write",
+            "job.respond",
+        ]
+        .iter()
+        .all(|name| tree.contains(name))
+    };
+    let ok = wait_until(30, || {
+        client.send("TRACE id=60").unwrap();
+        match client.next_event().unwrap() {
+            Event::Trace { id, body: tree } => {
+                assert_eq!(id, 60);
+                body = tree;
+                complete(&body)
+            }
+            Event::Err { msg, .. } => panic!("TRACE id=60 failed: {msg}"),
+            other => panic!("expected TRACE, got {other:?}"),
+        }
+    });
+    assert!(ok, "span tree incomplete:\n{body}");
+    assert!(body.starts_with("spans="), "{body}");
+    assert!(body.contains("thread "), "{body}");
+
+    // The job boundary rolled the spans up into registry histograms.
+    let m = handle.metrics().clone();
+    assert!(
+        wait_until(30, || m.histogram("sampler.propose_ns").count() >= 1),
+        "sampler.propose_ns roll-up must move for a traced job"
+    );
+    assert!(m.histogram("job.queue_wait_ns").count() >= 1);
+    assert!(m.histogram("sampler.accept_ns").count() >= 1);
+
+    // Unknown job id → structured ERR; the connection keeps serving.
+    client.send("TRACE id=424242").unwrap();
+    match client.next_event().unwrap() {
+        Event::Err { id, retryable, msg } => {
+            assert_eq!(id, 424242);
+            assert!(!retryable, "trace lookup misses are not retryable");
+            assert!(msg.contains("no trace"), "{msg}");
+        }
+        other => panic!("expected ERR for the unknown trace id, got {other:?}"),
+    }
+
+    // The OK line carries the queue/run/drain breakdown.
+    client.send("id=61 d=8 mu=0.4 seed=7").unwrap();
+    match client.next_event().unwrap() {
+        Event::Ok { id, fields } => {
+            assert_eq!(id, 61);
+            for key in ["queue_ns", "run_ns", "drain_ns"] {
+                assert!(fields.contains_key(key), "OK missing {key}=: {fields:?}");
+            }
+            let run_ns: u64 = fields["run_ns"].parse().unwrap();
+            assert!(run_ns > 0, "run_ns must cover the sampling time");
+        }
+        other => panic!("expected OK with the breakdown, got {other:?}"),
+    }
     handle.shutdown();
 }
 
