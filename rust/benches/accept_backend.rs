@@ -1,0 +1,204 @@
+//! Acceptance-backend shoot-out: per-pair cost of scoring + thinning one
+//! SoA ball chunk through each [`AcceptBackend`]'s `accept_mask`.
+//!
+//! Grid: `d ∈ {8, 16, 22}` (22 = the dense-lookup ceiling) × chunk size
+//! `∈ {256, 1024, 4096}`, measured for
+//!   * `native`  — [`NativeAccept`]'s default masked path (batched
+//!     probability scoring, then one scalar coin compare per ball),
+//!   * `scalar`  — [`SimdAccept`] pinned to the portable unrolled kernel,
+//!   * `simd`    — [`SimdAccept`] with runtime CPU-feature dispatch
+//!     (AVX2 gather/multiply/compare where detected),
+//!   * `xla`     — the AOT batched artifact through the same trait,
+//!     when the runtime can construct it (skipped with a note when the
+//!     artifact is stubbed out, as on a toolchain-less container).
+//!
+//! Every backend runs the identical coin schedule, so the masks agree
+//! bit for bit — the bench asserts that once per configuration before
+//! timing, making it a cheap extra parity gate. Results are printed per
+//! pair and recorded into `BENCH_micro.json` (section "accept").
+//!
+//! Run: `cargo bench --bench accept_backend`
+//! (`MAGBDP_BENCH_FAST=1` for the CI smoke run; the full run asserts the
+//! ≥ 2× AVX2-over-scalar bar at d=16 when AVX2 is actually detected.)
+
+use magbdp::model::{InitiatorMatrix, MagmParams};
+use magbdp::sampler::proposal::Component;
+use magbdp::sampler::{
+    AcceptBackend, BallBatch, MagmBdpSampler, NativeAccept, SimdAccept, SimdKernel, VerdictMask,
+};
+use magbdp::util::benchkit::{publish_json, Bench};
+use magbdp::util::rng::{SeedableRng, Xoshiro256pp};
+
+/// Fill `batch` ball pairs for one realisation: pruned survivors first
+/// (the production mix of classes), topped up with grid pairs so sparse
+/// regimes still reach the target chunk size (padding includes p = 0
+/// pairs, which is exactly what the masked pipeline sees in production).
+fn fill_chunk(sampler: &MagmBdpSampler, d: usize, batch: usize, seed: u64) -> BallBatch {
+    let prop = sampler.proposal();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut balls = BallBatch::with_capacity(batch);
+    // Bounded proposal budget: sparse regimes may rarely survive the
+    // prune, so give up after 8 proposals per wanted pair and pad.
+    let mut attempts = 0usize;
+    while balls.len() < batch && attempts < batch * 8 {
+        for comp in Component::ALL {
+            if balls.len() == batch {
+                break;
+            }
+            attempts += 1;
+            if let Some((c, cp)) = prop.drop_pruned(comp, &mut rng) {
+                balls.push(c, cp);
+            }
+        }
+    }
+    let side = 1u64 << d;
+    let mut k = 0u64;
+    while balls.len() < batch {
+        balls.push((k * 7919) % side, (k * 104_729) % side);
+        k += 1;
+    }
+    balls
+}
+
+/// One timed cell: median per-pair cost of `accept_mask` over the chunk.
+fn time_backend(
+    bench: &Bench,
+    name: &str,
+    backend: &mut dyn AcceptBackend,
+    sampler: &MagmBdpSampler,
+    balls: &BallBatch,
+) -> magbdp::util::benchkit::Measurement {
+    let prop = sampler.proposal();
+    let mut probs = Vec::new();
+    let mut mask = VerdictMask::new();
+    let m = bench.run_with_units(name, balls.len() as f64, move |i| {
+        let mut coins = Xoshiro256pp::seed_from_u64(1000 + i as u64);
+        backend.accept_mask(prop, Component::FF, balls, &mut coins, &mut probs, &mut mask);
+        mask.count()
+    });
+    println!("{m}");
+    m
+}
+
+fn main() {
+    let bench = Bench::new();
+    let fast = std::env::var("MAGBDP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let detected = SimdKernel::detect();
+    println!("detected kernel: {}", detected.label());
+
+    let mut results = Vec::new();
+    // Tracked for the acceptance bar: (scalar, simd) medians at d=16.
+    let mut bar: Option<(f64, f64)> = None;
+
+    for d in [8usize, 16, 22] {
+        // n = 2^12 keeps attribute sampling cheap while spanning the
+        // dense-table range up to its d = 22 ceiling (~67 MiB).
+        let n = 1u64 << d.min(12);
+        let params = MagmParams::replicated(InitiatorMatrix::THETA1, d, 0.4, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let assignment = params.sample_attributes(&mut rng);
+        let sampler = MagmBdpSampler::new(&params, &assignment);
+        let xla = magbdp::runtime::XlaAccept::new(&params, sampler.index());
+
+        for batch in [256usize, 1024, 4096] {
+            let balls = fill_chunk(&sampler, d, batch, 7 + d as u64);
+
+            // Parity gate: all backends must agree bit for bit on this
+            // chunk before any of them gets timed.
+            {
+                let prop = sampler.proposal();
+                let mut probs = Vec::new();
+                let masks: Vec<VerdictMask> = [
+                    &mut NativeAccept as &mut dyn AcceptBackend,
+                    &mut SimdAccept::with_kernel(SimdKernel::Scalar),
+                    &mut SimdAccept::new(),
+                ]
+                .into_iter()
+                .map(|be| {
+                    let mut coins = Xoshiro256pp::seed_from_u64(555);
+                    let mut mask = VerdictMask::new();
+                    be.accept_mask(prop, Component::FF, &balls, &mut coins, &mut probs, &mut mask);
+                    mask
+                })
+                .collect();
+                assert_eq!(masks[0], masks[1], "d={d} batch={batch}: scalar kernel drifted");
+                assert_eq!(masks[0], masks[2], "d={d} batch={batch}: simd kernel drifted");
+            }
+
+            let native = time_backend(
+                &bench,
+                &format!("native accept_mask per pair (d={d} batch={batch})"),
+                &mut NativeAccept,
+                &sampler,
+                &balls,
+            );
+            let scalar = time_backend(
+                &bench,
+                &format!("simd[scalar] accept_mask per pair (d={d} batch={batch})"),
+                &mut SimdAccept::with_kernel(SimdKernel::Scalar),
+                &sampler,
+                &balls,
+            );
+            let simd = time_backend(
+                &bench,
+                &format!("simd[{}] accept_mask per pair (d={d} batch={batch})", detected.label()),
+                &mut SimdAccept::new(),
+                &sampler,
+                &balls,
+            );
+            println!(
+                "d={d} batch={batch}: simd speedup {:.2}× over scalar kernel, {:.2}× over native\n",
+                scalar.median / simd.median,
+                native.median / simd.median
+            );
+            if d == 16 && batch == 4096 {
+                bar = Some((scalar.median, simd.median));
+            }
+            results.push(native);
+            results.push(scalar);
+            results.push(simd);
+
+            match &xla {
+                Ok(_) => {
+                    // Re-constructed per cell: the artifact pins its
+                    // batch capacity at build time.
+                    let mut be = magbdp::runtime::XlaAccept::new(&params, sampler.index())
+                        .expect("constructed once already");
+                    let m = time_backend(
+                        &bench,
+                        &format!("xla accept_mask per pair (d={d} batch={batch})"),
+                        &mut be,
+                        &sampler,
+                        &balls,
+                    );
+                    results.push(m);
+                }
+                Err(e) if batch == 256 => {
+                    println!("xla backend unavailable at d={d} (skipping): {e:#}\n");
+                }
+                Err(_) => {}
+            }
+        }
+    }
+
+    match publish_json("accept", &results) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_micro.json: {e}"),
+    }
+
+    // The acceptance bar for this optimisation: the vector kernel must
+    // be ≥ 2× the portable kernel per pair at d = 16 on the biggest
+    // chunk. Only meaningful when AVX2 actually dispatched, and skipped
+    // in fast mode (CI smoke iteration counts are too noisy to gate on).
+    if !fast && detected == SimdKernel::Avx2 {
+        let (scalar, simd) = bar.expect("d=16 batch=4096 cell always runs");
+        let speedup = scalar / simd;
+        assert!(
+            speedup >= 2.0,
+            "AVX2 kernel must be ≥ 2× the scalar kernel per pair at d=16 (got {speedup:.2}×)"
+        );
+        println!("ok: AVX2 accept kernel ≥ 2× scalar per pair at d=16");
+    } else {
+        println!("note: ≥2× AVX2 bar skipped (fast={fast}, kernel={})", detected.label());
+    }
+}

@@ -57,9 +57,12 @@
 //!
 //! ## Responses (server → client)
 //!
-//! * `OK id=<id> algo=<a> nodes=<n> edges=<e> edges_simple=<s>
-//!   proposed=<p> bytes=<b> threads=<t> wall_ms=<ms> eps=<rate>
+//! * `OK id=<id> algo=<a> backend=<native|simd|xla|-> nodes=<n>
+//!   edges=<e> edges_simple=<s> proposed=<p> bytes=<b> threads=<t>
+//!   wall_ms=<ms> eps=<rate>
 //!   queue_ns=<q> run_ns=<r> drain_ns=<d>` — job finished, no payload.
+//!   `backend=` echoes the job's `backend=` acceptance-backend key
+//!   (`-` on the legacy per-ball path).
 //!   The trailing `*_ns` fields break the job's life down: dispatch →
 //!   pool-pickup queue wait, sampling (including the sequencer drain),
 //!   and the terminal output flush. For streaming (`output=`) jobs the
@@ -69,7 +72,8 @@
 //! * `CHUNK id=<id> bytes=<k>` followed by exactly `k` raw payload
 //!   bytes and one `\n` — one slice of a `respond=` job's payload.
 //!   Chunks of concurrent jobs may interleave; reassemble per id.
-//! * `END id=<id> format=<tsv|bin> edges=<e> proposed=<p> bytes=<b>
+//! * `END id=<id> format=<tsv|bin> backend=<native|simd|xla|->
+//!   edges=<e> proposed=<p> bytes=<b>
 //!   threads=<t> wall_ms=<ms>` — a `respond=` job finished; the
 //!   concatenated chunk payloads are byte-identical to the file
 //!   [`run_job`] writes locally for the same `(spec, seed)`, whatever
@@ -861,9 +865,10 @@ fn ok_line(r: &JobResult) -> String {
         format!("edges_simple={}", r.edges_simple)
     };
     format!(
-        "OK id={} algo={} nodes={} edges={} {simple} proposed={} bytes={} threads={} wall_ms={:.3} eps={:.1} queue_ns={} run_ns={} drain_ns={}",
+        "OK id={} algo={} backend={} nodes={} edges={} {simple} proposed={} bytes={} threads={} wall_ms={:.3} eps={:.1} queue_ns={} run_ns={} drain_ns={}",
         r.id,
         r.algo,
+        r.backend,
         r.nodes,
         r.edges,
         r.proposed,
@@ -879,9 +884,10 @@ fn ok_line(r: &JobResult) -> String {
 
 fn end_line(r: &JobResult, format: OutputFormat) -> String {
     format!(
-        "END id={} format={} edges={} proposed={} bytes={} threads={} wall_ms={:.3}",
+        "END id={} format={} backend={} edges={} proposed={} bytes={} threads={} wall_ms={:.3}",
         r.id,
         format.label(),
+        r.backend,
         r.edges,
         r.proposed,
         r.bytes_written,
@@ -1517,6 +1523,7 @@ mod tests {
         let r = JobResult {
             id: 3,
             algo: "magm-bdp",
+            backend: "simd",
             nodes: 8,
             edges: 4,
             edges_simple: 4,
@@ -1538,7 +1545,7 @@ mod tests {
             line.ends_with("queue_ns=1000 run_ns=2000 drain_ns=500"),
             "{line}"
         );
-        assert!(line.starts_with("OK id=3 algo=magm-bdp "), "{line}");
+        assert!(line.starts_with("OK id=3 algo=magm-bdp backend=simd "), "{line}");
     }
 
     #[test]

@@ -91,8 +91,8 @@ use crate::graph::HyperLogLog;
 use crate::model::magm::{AttributeAssignment, MagmParams};
 use crate::model::params::InitiatorMatrix;
 use crate::sampler::{
-    CollectSink, EdgeSink, GuardedSink, HybridSampler, MagmBdpSampler, MagmSimpleSampler,
-    QuiltingSampler, Sampler, TsvSink,
+    Backend, CollectSink, EdgeSink, GuardedSink, HybridSampler, MagmBdpSampler,
+    MagmSimpleSampler, QuiltingSampler, Sampler, TsvSink, ACCEPT_BATCH,
 };
 use crate::util::cancel::{catch_cancel, with_quiet_panics, CancelToken};
 use crate::util::error::JobError;
@@ -197,6 +197,14 @@ pub struct JobSpec {
     /// effective grant is capped to the worker-pool size by
     /// [`GenerationService::run_all`] and the network server.
     pub threads: Option<usize>,
+    /// Acceptance backend (`backend=` intake key, `algo=magm-bdp` /
+    /// `algo=hybrid` only). `None` keeps the exact legacy per-ball
+    /// accept loop; `Some(Native)` / `Some(Simd)` run the masked batch
+    /// pipeline (byte-identical payloads to each other per `(spec,
+    /// seed, threads)` — SIMD only buys speed); `Some(Xla)` routes
+    /// through the AOT batched artifact, which is sequential and
+    /// therefore incompatible with `threads=`.
+    pub backend: Option<Backend>,
 }
 
 impl JobSpec {
@@ -233,6 +241,7 @@ impl JobSpec {
         let mut format = OutputFormat::Tsv;
         let mut timeout_ms: Option<u64> = None;
         let mut threads: Option<usize> = None;
+        let mut backend: Option<Backend> = None;
         let mut seen: Vec<&str> = Vec::new();
         for tok in line.split_whitespace() {
             let (k, v) = tok
@@ -270,6 +279,11 @@ impl JobSpec {
                 }
                 "threads" => {
                     threads = Some(v.parse().map_err(|e| format!("job {id}: threads: {e}"))?)
+                }
+                "backend" => {
+                    backend = Some(Backend::parse(v).ok_or_else(|| {
+                        format!("job {id}: unknown backend {v} (native|simd|xla)")
+                    })?)
                 }
                 _ => return Err(format!("job {id}: unknown key {k:?}")),
             }
@@ -317,6 +331,27 @@ impl JobSpec {
                 ));
             }
         }
+        if let Some(b) = backend {
+            if !matches!(algo, Algo::MagmBdp | Algo::Hybrid) {
+                return Err(format!(
+                    "job {id}: backend= requires algo=magm-bdp or algo=hybrid (got {})",
+                    algo.label()
+                ));
+            }
+            if b == Backend::Xla {
+                if algo != Algo::MagmBdp {
+                    return Err(format!(
+                        "job {id}: backend=xla requires algo=magm-bdp (hybrid may pick \
+                         a sampler with no accept step)"
+                    ));
+                }
+                if threads.is_some() {
+                    return Err(format!(
+                        "job {id}: backend=xla is sequential and incompatible with threads="
+                    ));
+                }
+            }
+        }
         Ok(JobSpec {
             id,
             theta,
@@ -330,6 +365,7 @@ impl JobSpec {
             format,
             timeout_ms,
             threads,
+            backend,
         })
     }
 
@@ -349,6 +385,9 @@ impl JobSpec {
 pub struct JobResult {
     pub id: u64,
     pub algo: &'static str,
+    /// Acceptance backend label (`native` / `simd` / `xla`) when the job
+    /// selected one with `backend=`; `"-"` on the legacy per-ball path.
+    pub backend: &'static str,
     pub nodes: u64,
     /// Multi-graph edge count.
     pub edges: u64,
@@ -459,7 +498,21 @@ pub fn sample_job_into(
     match spec.algo {
         Algo::MagmBdp => {
             let s = MagmBdpSampler::new(params, assignment);
-            Ok(s.sample_into(rng, sink))
+            match spec.backend {
+                None => Ok(s.sample_into(rng, sink)),
+                Some(Backend::Xla) => {
+                    let mut be = crate::runtime::XlaAccept::new(params, s.index())
+                        .map_err(|e| format!("{e:#}"))?;
+                    let batch = be.batch_capacity();
+                    let counts = s.sample_batched_into(rng, &mut be, batch, sink);
+                    metrics.counter("service.xla_dispatches").add(be.dispatches);
+                    Ok(counts)
+                }
+                Some(b) => {
+                    let mut be = b.make_masked();
+                    Ok(s.sample_backend_into(rng, be.as_mut(), ACCEPT_BATCH, sink))
+                }
+            }
         }
         Algo::MagmBdpXla => {
             let s = MagmBdpSampler::new(params, assignment);
@@ -480,7 +533,14 @@ pub fn sample_job_into(
         }
         Algo::Hybrid => {
             let s = HybridSampler::new(params, assignment, rng);
-            Ok(Sampler::sample_into(&s, rng, sink))
+            match spec.backend {
+                // parse_line rejects backend=xla for hybrid.
+                None | Some(Backend::Xla) => Ok(Sampler::sample_into(&s, rng, sink)),
+                Some(b) => {
+                    let mut be = b.make_masked();
+                    Ok(s.sample_backend_into(rng, be.as_mut(), ACCEPT_BATCH, sink))
+                }
+            }
         }
     }
 }
@@ -507,11 +567,21 @@ fn sample_job_streaming<S: EdgeSink + Send>(
     match spec.algo {
         Algo::MagmBdp => {
             let s = MagmBdpSampler::new(params, assignment);
-            Ok(s.sample_parallel_into(spec.seed, threads, sink))
+            match spec.backend {
+                None => Ok(s.sample_parallel_into(spec.seed, threads, sink)),
+                // parse_line rejects backend=xla + threads=.
+                Some(Backend::Xla) => {
+                    sample_job_into(spec, params, assignment, rng, sink, metrics)
+                }
+                Some(b) => Ok(s.sample_parallel_backend_into(spec.seed, threads, b, sink)),
+            }
         }
         Algo::Hybrid => {
             let s = HybridSampler::new(params, assignment, rng);
-            Ok(s.sample_parallel_into(spec.seed, threads, sink))
+            match spec.backend {
+                None | Some(Backend::Xla) => Ok(s.sample_parallel_into(spec.seed, threads, sink)),
+                Some(b) => Ok(s.sample_parallel_backend_into(spec.seed, threads, b, sink)),
+            }
         }
         // parse_line rejects threads= for the rest; programmatic specs
         // just fall back to the sequential dispatch.
@@ -784,6 +854,7 @@ pub fn run_job_ctl(
             JobResult {
                 id: spec.id,
                 algo: spec.algo.label(),
+                backend: spec.backend.map_or("-", |b| b.label()),
                 nodes: spec.n,
                 edges: out.edges,
                 edges_simple: out.edges_simple,
@@ -832,6 +903,7 @@ fn error_result(spec: &JobSpec, wall: std::time::Duration, error: JobError) -> J
     JobResult {
         id: spec.id,
         algo: spec.algo.label(),
+        backend: spec.backend.map_or("-", |b| b.label()),
         nodes: spec.n,
         edges: 0,
         edges_simple: 0,
@@ -1001,6 +1073,55 @@ mod tests {
         assert!(JobSpec::parse_line(0, "d=6 algo=quilting threads=2").is_err());
         let j = JobSpec::parse_line(0, "d=6 algo=hybrid threads=256").unwrap();
         assert_eq!(j.threads, Some(256));
+    }
+
+    #[test]
+    fn parse_line_validates_backend() {
+        let j = JobSpec::parse_line(0, "d=6 backend=simd").unwrap();
+        assert_eq!(j.backend, Some(Backend::Simd));
+        let j = JobSpec::parse_line(0, "d=6 algo=hybrid backend=native threads=4").unwrap();
+        assert_eq!(j.backend, Some(Backend::Native));
+        let j = JobSpec::parse_line(0, "d=6 backend=xla").unwrap();
+        assert_eq!(j.backend, Some(Backend::Xla));
+        assert!(JobSpec::parse_line(0, "d=6").unwrap().backend.is_none());
+        let err = JobSpec::parse_line(0, "d=6 backend=avx512").unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
+        assert!(JobSpec::parse_line(0, "d=6 backend=simd backend=simd").is_err());
+        // Only the accept-reject algorithms take a backend selector.
+        let err = JobSpec::parse_line(0, "d=6 algo=simple backend=simd").unwrap_err();
+        assert!(err.contains("algo"), "{err}");
+        assert!(JobSpec::parse_line(0, "d=6 algo=quilting backend=native").is_err());
+        // XLA is sequential and magm-bdp-only.
+        let err = JobSpec::parse_line(0, "d=6 backend=xla threads=2").unwrap_err();
+        assert!(err.contains("sequential"), "{err}");
+        let err = JobSpec::parse_line(0, "d=6 algo=hybrid backend=xla").unwrap_err();
+        assert!(err.contains("magm-bdp"), "{err}");
+    }
+
+    #[test]
+    fn backend_jobs_native_and_simd_are_byte_identical() {
+        let metrics = Registry::new();
+        let mut payloads: Vec<Vec<u8>> = Vec::new();
+        for line in [
+            "d=8 mu=0.5 seed=21 backend=native",
+            "d=8 mu=0.5 seed=21 backend=simd",
+            "d=8 mu=0.5 seed=21 backend=native threads=4",
+            "d=8 mu=0.5 seed=21 backend=simd threads=4",
+        ] {
+            let spec = JobSpec::parse_line(0, line).unwrap();
+            let mut buf: Vec<u8> = Vec::new();
+            let r = run_job_with(&spec, &metrics, Some((&mut buf, OutputFormat::Binary)));
+            assert!(r.error.is_none(), "{line}: {:?}", r.error);
+            assert!(r.edges > 0, "{line}: empty stream");
+            assert_eq!(r.backend, spec.backend.unwrap().label());
+            payloads.push(buf);
+        }
+        // Sequential native vs simd agree, parallel native vs simd agree.
+        // (Sequential vs parallel are *allowed* to differ — different
+        // shard decomposition; backend-for-backend identity is the
+        // contract.)
+        assert_eq!(payloads[0], payloads[1], "sequential simd drifted from native");
+        assert_eq!(payloads[2], payloads[3], "parallel simd drifted from native");
     }
 
     #[test]

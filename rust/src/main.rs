@@ -14,7 +14,7 @@ use magbdp::graph::stats::DegreeStats;
 use magbdp::model::{ColorIndex, InitiatorMatrix, MagmParams};
 use magbdp::sampler::cost::PruneProbe;
 use magbdp::sampler::proposal::{Component, ProposalSet};
-use magbdp::sampler::{CostModel, EdgeSink, HybridSampler, Sampler};
+use magbdp::sampler::{Backend, CostModel, EdgeSink, HybridSampler, Sampler, ACCEPT_BATCH};
 use magbdp::util::cli::{parse_f64_list, Args, CliError, Command};
 use magbdp::util::config::Config;
 use magbdp::util::logging;
@@ -145,6 +145,13 @@ fn params_from_config(path: &str) -> Result<MagmParams, String> {
 
 /// Dispatch one streaming sample into `sink`; returns
 /// `(sampler name, proposed, accepted)`.
+///
+/// `backend` selects the acceptance backend for `magm-bdp` / `hybrid`:
+/// `None` keeps the classic per-ball streaming loop; `Some(Native)` /
+/// `Some(Simd)` engage the masked batch pipeline (byte-identical edge
+/// streams across the two, per seed and thread count); `Some(Xla)`
+/// routes through the AOT artifact's probability-batched path.
+#[allow(clippy::too_many_arguments)]
 fn run_stream_algo<S: EdgeSink + Send>(
     params: &MagmParams,
     assignment: &magbdp::model::AttributeAssignment,
@@ -152,15 +159,42 @@ fn run_stream_algo<S: EdgeSink + Send>(
     seed: u64,
     threads: usize,
     algo: &str,
+    backend: Option<Backend>,
     sink: &mut S,
 ) -> Result<(&'static str, u64, u64), String> {
+    if backend.is_some() && !matches!(algo, "magm-bdp" | "hybrid") {
+        return Err(format!(
+            "--backend only applies to algo magm-bdp|hybrid (got {algo:?})"
+        ));
+    }
     match algo {
         "magm-bdp" => {
             let s = magbdp::sampler::MagmBdpSampler::new(params, assignment);
-            let (p, a) = if threads > 1 {
-                s.sample_parallel_into(seed, threads, sink)
-            } else {
-                s.sample_into(rng, sink)
+            let (p, a) = match backend {
+                None => {
+                    if threads > 1 {
+                        s.sample_parallel_into(seed, threads, sink)
+                    } else {
+                        s.sample_into(rng, sink)
+                    }
+                }
+                Some(Backend::Xla) => {
+                    if threads > 1 {
+                        return Err("--backend xla is sequential; drop --threads".into());
+                    }
+                    let mut be = magbdp::runtime::XlaAccept::new(params, s.index())
+                        .map_err(|e| format!("{e:#}"))?;
+                    let batch = be.batch_capacity();
+                    s.sample_batched_into(rng, &mut be, batch, sink)
+                }
+                Some(b) => {
+                    if threads > 1 {
+                        s.sample_parallel_backend_into(seed, threads, b, sink)
+                    } else {
+                        let mut be = b.make_masked();
+                        s.sample_backend_into(rng, be.as_mut(), ACCEPT_BATCH, sink)
+                    }
+                }
             };
             Ok((s.name(), p, a))
         }
@@ -185,10 +219,27 @@ fn run_stream_algo<S: EdgeSink + Send>(
         "hybrid" => {
             let s = HybridSampler::new(params, assignment, rng);
             println!("hybrid choice: {}", s.choice().label());
-            let (p, a) = if threads > 1 {
-                s.sample_parallel_into(seed, threads, sink)
-            } else {
-                Sampler::sample_into(&s, rng, sink)
+            let (p, a) = match backend {
+                None => {
+                    if threads > 1 {
+                        s.sample_parallel_into(seed, threads, sink)
+                    } else {
+                        Sampler::sample_into(&s, rng, sink)
+                    }
+                }
+                Some(Backend::Xla) => {
+                    return Err("--backend xla needs algo magm-bdp (hybrid may pick \
+                                a sampler with no accept step)"
+                        .into());
+                }
+                Some(b) => {
+                    if threads > 1 {
+                        s.sample_parallel_backend_into(seed, threads, b, sink)
+                    } else {
+                        let mut be = b.make_masked();
+                        s.sample_backend_into(rng, be.as_mut(), ACCEPT_BATCH, sink)
+                    }
+                }
             };
             Ok(("hybrid", p, a))
         }
@@ -208,16 +259,17 @@ fn run_stream_algo_deadline<S: EdgeSink + Send>(
     seed: u64,
     threads: usize,
     algo: &str,
+    backend: Option<Backend>,
     sink: &mut S,
     timeout: Option<std::time::Duration>,
 ) -> Result<(&'static str, u64, u64), String> {
     let Some(timeout) = timeout else {
-        return run_stream_algo(params, assignment, rng, seed, threads, algo, sink);
+        return run_stream_algo(params, assignment, rng, seed, threads, algo, backend, sink);
     };
     let token = magbdp::util::cancel::CancelToken::with_timeout(Some(timeout));
     let mut guarded = magbdp::sampler::GuardedSink::new(&mut *sink, token);
     magbdp::util::cancel::catch_cancel(|| {
-        run_stream_algo(params, assignment, rng, seed, threads, algo, &mut guarded)
+        run_stream_algo(params, assignment, rng, seed, threads, algo, backend, &mut guarded)
     })
     .map_err(|kind| format!("sampling aborted: {} after {timeout:?}", kind.label()))?
 }
@@ -238,6 +290,7 @@ fn cmd_sample_stream(
     seed: u64,
     threads: usize,
     algo: &str,
+    backend: Option<Backend>,
     path: &str,
     timeout: Option<std::time::Duration>,
 ) -> Result<(), String> {
@@ -246,14 +299,14 @@ fn cmd_sample_stream(
     let (name, proposed, accepted, bytes) = if path.ends_with(".bin") {
         let mut sink = io::BinaryEdgeSink::new(file, params.n());
         let (name, p, a) = run_stream_algo_deadline(
-            params, assignment, rng, seed, threads, algo, &mut sink, timeout,
+            params, assignment, rng, seed, threads, algo, backend, &mut sink, timeout,
         )?;
         sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
         (name, p, a, sink.bytes)
     } else {
         let mut sink = magbdp::sampler::TsvSink::new(file);
         let (name, p, a) = run_stream_algo_deadline(
-            params, assignment, rng, seed, threads, algo, &mut sink, timeout,
+            params, assignment, rng, seed, threads, algo, backend, &mut sink, timeout,
         )?;
         sink.try_finish().map_err(|e| format!("write {path}: {e}"))?;
         (name, p, a, sink.bytes)
@@ -265,8 +318,9 @@ fn cmd_sample_stream(
         .set(accepted as f64 / wall.as_secs_f64().max(1e-9));
     metrics.counter("sample.bytes_written").add(bytes);
     metrics.counter("sample.edges").add(accepted);
+    let backend_note = backend.map_or(String::new(), |b| format!(" backend={}", b.label()));
     println!(
-        "sampler={name} n={} d={} mu={} seed={seed} threads={threads}\n\
+        "sampler={name} n={} d={} mu={} seed={seed} threads={threads}{backend_note}\n\
          multi-edges={accepted} proposed={proposed} wall={:.3}s\n\
          wrote {path}",
         params.n(),
@@ -279,6 +333,20 @@ fn cmd_sample_stream(
 }
 
 const SAMPLE_HELP: &str = "\
+acceptance backend (--backend, magm-bdp and hybrid only):
+  native             masked batch pipeline, scalar accept kernel.
+  simd               same pipeline, runtime-dispatched SIMD kernel
+                     (AVX2 where detected, portable unrolled scalar
+                     elsewhere). Byte-identical edge stream to
+                     `native` for every (seed, threads) — only speed
+                     differs.
+  xla                AOT-compiled batched accept artifact; sequential
+                     (incompatible with --threads > 1).
+  Omitting --backend keeps the classic per-ball streaming loop: the
+  same edge distribution, but a different exact per-seed stream than
+  the batch pipeline (the batch path burns one acceptance coin per
+  proposed ball; the per-ball loop skips coins at probability 0).
+
 observability:
   --trace-out FILE   record spans for this run (sampler propose/accept
                      timing, prune-abort depths, sequencer park/drain,
@@ -286,6 +354,9 @@ observability:
                      JSON — load in chrome://tracing or Perfetto.
                      Tracing never changes the output: the edge stream
                      is byte-identical with tracing on or off.
+                     Batch-pipeline accept time lands in per-backend
+                     spans (sampler.accept.native|simd|xla); all
+                     variants roll up to sampler.accept_ns.
   MAGBDP_LOG=level   stderr log verbosity: error|warn|info|debug|trace
                      (default: warn). Applies to every subcommand.
 ";
@@ -315,6 +386,11 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
         .opt("algo", "magm-bdp|simple|quilting|hybrid|magm-bdp-xla", Some("magm-bdp"))
         .opt("threads", "parallel shards (magm-bdp/hybrid)", Some("1"))
         .opt(
+            "backend",
+            "accept backend: native|simd|xla (magm-bdp/hybrid)",
+            None,
+        )
+        .opt(
             "out",
             "stream the multi-edge list here (.bin = binary, else TSV)",
             None,
@@ -337,6 +413,12 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     let seed: u64 = args.u64("seed").map_err(|e| e.to_string())?;
     let threads: usize = args.usize("threads").map_err(|e| e.to_string())?;
     let algo = args.str("algo").map_err(|e| e.to_string())?.to_string();
+    let backend = match args.get("backend") {
+        Some(s) => Some(
+            Backend::parse(s).ok_or_else(|| format!("--backend must be native|simd|xla, got {s:?}"))?,
+        ),
+        None => None,
+    };
     let timeout = match args.get("timeout") {
         Some(_) => {
             let ms = args.u64("timeout").map_err(|e| e.to_string())?;
@@ -382,7 +464,7 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
     if let (Some(path), false) = (&out, degrees) {
         let run_span = magbdp::util::trace::span("job.run");
         let result = cmd_sample_stream(
-            &params, &assignment, &mut rng, seed, threads, &algo, path, timeout,
+            &params, &assignment, &mut rng, seed, threads, &algo, backend, path, timeout,
         );
         drop(run_span);
         if let Some(trace_path) = &trace_out {
@@ -406,6 +488,7 @@ fn cmd_sample(tokens: &[String]) -> Result<(), String> {
         seed,
         threads,
         &algo,
+        backend,
         &mut collect,
         timeout,
     )?;
@@ -648,7 +731,7 @@ modes:
 
 wire protocol (--listen):
   requests:  one job per line in the trace grammar (d=, mu=, n=, seed=,
-             algo=, timeout_ms=, threads=, ...) plus `id=<u64>`
+             algo=, timeout_ms=, threads=, backend=, ...) plus `id=<u64>`
              (correlation id) and `respond=none|tsv|bin` (stream edges
              back instead of `OK`); control lines PING, METRICS, QUIT,
              DRAIN, and TRACE id=<job id> (span tree of a recent job;
@@ -693,6 +776,14 @@ multi-core jobs:
   report `edges_simple≈` — a HyperLogLog estimate of the distinct-edge
   count (exact dedup needs the full edge set, which streaming never
   holds).
+  `backend=native|simd|xla` (algo=magm-bdp|hybrid) selects the
+  acceptance backend: native/simd run the masked batch pipeline
+  (byte-identical payloads to each other per seed and thread grant,
+  simd dispatching AVX2 where the CPU has it); xla routes through the
+  AOT batched artifact, is sequential, and rejects `threads=`. The
+  chosen backend is echoed as `backend=` on the OK line. Omitting
+  `backend=` keeps the classic per-ball loop (same distribution,
+  different exact per-seed stream than the batch pipeline).
 
 deadlines and shutdown:
   every job runs under the tighter of its own `timeout_ms=` and

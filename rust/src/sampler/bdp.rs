@@ -154,8 +154,11 @@ impl PrefixFilter {
 
 /// A chunk of ball coordinates in structure-of-arrays layout: two flat
 /// arrays the accept/materialise stages stream through — the same shape
-/// the XLA `accept_batch` artifact marshals, so the native and XLA
-/// backends share one vectorisable inner loop.
+/// the XLA `accept_batch` artifact marshals, so the native, SIMD and XLA
+/// backends share one vectorisable inner loop. The SIMD accept kernel
+/// ([`super::accept_simd`]) gathers straight from these `u64` arrays in
+/// 8-wide lanes; descents keep every coordinate below `2^d`, which is
+/// what makes the unchecked gather indexing sound.
 #[derive(Clone, Debug, Default)]
 pub struct BallBatch {
     pub rows: Vec<u64>,

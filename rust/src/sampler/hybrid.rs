@@ -209,6 +209,54 @@ impl<'a> HybridSampler<'a> {
             _ => self.sample_parallel_into(seed, threads, sink),
         }
     }
+
+    /// Masked-backend passthrough: when the cost model picked
+    /// Algorithm 2, run its batch-first masked pipeline with `backend`
+    /// (see `MagmBdpSampler::sample_backend_into` for the RNG-stream
+    /// contract). The quilting/naive baselines have no accept-reject
+    /// step, so the selector is a no-op there and the usual sequential
+    /// draw runs instead.
+    pub fn sample_backend_into(
+        &self,
+        rng: &mut dyn Rng,
+        backend: &mut dyn super::magm_bdp::AcceptBackend,
+        batch: usize,
+        sink: &mut dyn EdgeSink,
+    ) -> (u64, u64) {
+        match self.choice {
+            HybridChoice::MagmBdp => self
+                .magm_bdp
+                .as_ref()
+                .unwrap()
+                .sample_backend_into(rng, backend, batch, sink),
+            _ => Sampler::sample_into(self, rng, sink),
+        }
+    }
+
+    /// Parallel twin of [`sample_backend_into`](Self::sample_backend_into):
+    /// Algorithm 2 runs its sharded masked pipeline (byte-identical per
+    /// seed for every thread count and masked backend); the baselines
+    /// fall back to the seeded sequential draw.
+    pub fn sample_parallel_backend_into(
+        &self,
+        seed: u64,
+        threads: usize,
+        backend: super::magm_bdp::Backend,
+        sink: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        match self.choice {
+            HybridChoice::MagmBdp => self
+                .magm_bdp
+                .as_ref()
+                .unwrap()
+                .sample_parallel_backend_into(seed, threads, backend, sink),
+            _ => {
+                use crate::util::rng::{SeedableRng, Xoshiro256pp};
+                let mut rng = Xoshiro256pp::seed_from_u64(seed);
+                Sampler::sample_into(self, &mut rng, sink)
+            }
+        }
+    }
 }
 
 impl Sampler for HybridSampler<'_> {

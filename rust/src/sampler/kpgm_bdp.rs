@@ -45,6 +45,22 @@ impl KpgmBdpSampler {
         &self.bdp
     }
 
+    /// Accept-backend passthrough: KPGM-BDP has no accept-reject step —
+    /// every dropped ball IS an edge (acceptance ≡ 1) — so there is no
+    /// acceptance kernel to vectorise and the `backend` selector is
+    /// deliberately ignored. Provided so backend-parameterised drivers
+    /// can treat all BDP samplers uniformly; delegates to
+    /// [`sample_parallel_into`](Self::sample_parallel_into).
+    pub fn sample_parallel_backend_into(
+        &self,
+        seed: u64,
+        threads: usize,
+        _backend: super::magm_bdp::Backend,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        self.sample_parallel_into(seed, threads, terminal)
+    }
+
     /// Multi-threaded streaming with the default reordering window; see
     /// [`sample_parallel_into_windowed`](Self::sample_parallel_into_windowed).
     pub fn sample_parallel_into(

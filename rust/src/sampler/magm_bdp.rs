@@ -17,12 +17,16 @@
 //!    conversion of §4.1.
 //!
 //! The thinning step is abstracted behind [`AcceptBackend`] so it can run
-//! either natively (pure Rust, the Figure 5/6 benchmark path) or batched
-//! through the AOT-compiled Pallas kernel on the XLA runtime
+//! natively (pure Rust, the Figure 5/6 benchmark path), through the
+//! runtime-dispatched SIMD kernel
+//! ([`crate::sampler::accept_simd::SimdAccept`]), or batched through the
+//! AOT-compiled Pallas kernel on the XLA runtime
 //! (`crate::runtime::accept::XlaAccept`, the end-to-end service path).
-//! Both backends consume the same [`BallBatch`] structure-of-arrays
+//! All backends consume the same [`BallBatch`] structure-of-arrays
 //! chunks and feed the same thin-and-materialise inner loop, so the
-//! native and XLA paths differ only in who fills the probability buffer.
+//! paths differ only in who fills the probability buffer — or, on the
+//! masked batch pipeline ([`MagmBdpSampler::sample_backend_into`] and
+//! its parallel twin), who turns a whole chunk into a [`VerdictMask`].
 
 use super::bdp::BallBatch;
 use super::proposal::{Component, ProposalSet};
@@ -49,6 +53,11 @@ pub const LOGICAL_SHARDS: usize = 64;
 /// shallow enough that peak buffering stays a few chunks per thread.
 pub const SEQ_WINDOW: usize = 4;
 
+/// Chunk size for the masked batch pipeline: big enough to amortise the
+/// per-chunk coin-stream fork and keep the SIMD lanes full, small enough
+/// that the SoA buffers (3 × 8 KiB) stay L1/L2-resident per worker.
+pub const ACCEPT_BATCH: usize = 1024;
+
 /// Per-call aggregation buffer for the traced propose/accept loop:
 /// wall time and prune-depth tallies accumulate here (plain locals, no
 /// shared state) and become at most a handful of spans per emit — the
@@ -60,10 +69,17 @@ struct QuotaTrace {
     balls: u64,
     hits: u64,
     depths: [u64; 64],
+    /// Accept-span name: plain `sampler.accept` on the legacy streaming
+    /// loop, `sampler.accept.<backend>` on the masked batch pipeline.
+    accept_name: &'static str,
 }
 
 impl QuotaTrace {
     fn new() -> Self {
+        Self::with_accept_name("sampler.accept")
+    }
+
+    fn with_accept_name(accept_name: &'static str) -> Self {
         QuotaTrace {
             start_ns: trace::now_ns(),
             propose_ns: 0,
@@ -71,19 +87,166 @@ impl QuotaTrace {
             balls: 0,
             hits: 0,
             depths: [0; 64],
+            accept_name,
         }
     }
 
     /// Emit the aggregate as spans: one `sampler.propose`, one
-    /// `sampler.accept`, and one `sampler.prune_abort_depth` stat span
+    /// accept span, and one `sampler.prune_abort_depth` stat span
     /// per distinct descent depth paid.
     fn emit(&self) {
         trace::record("sampler.propose", self.start_ns, self.propose_ns, self.balls);
-        trace::record("sampler.accept", self.start_ns, self.accept_ns, self.hits);
+        trace::record(self.accept_name, self.start_ns, self.accept_ns, self.hits);
         for (depth, &n) in self.depths.iter().enumerate() {
             if n > 0 {
                 trace::record_value("sampler.prune_abort_depth", depth as u64, n);
             }
+        }
+    }
+}
+
+/// Per-backend accept span name for the masked batch paths; the legacy
+/// streaming loop keeps plain `sampler.accept`. Every variant rolls up
+/// into the same `sampler.accept_ns` histogram (`trace::rollup_into`),
+/// so dashboards see one family with per-backend span attribution.
+fn accept_span_name(backend: &str) -> &'static str {
+    match backend {
+        "native" => "sampler.accept.native",
+        "simd" => "sampler.accept.simd",
+        "xla" => "sampler.accept.xla",
+        _ => "sampler.accept",
+    }
+}
+
+/// Acceptance-backend selector, parsed from the CLI `--backend` flag and
+/// the serve-protocol `backend=` job key. When NO selector is given the
+/// samplers keep the classic per-ball streaming loop; selecting one —
+/// including `native` — engages the masked batch pipeline, whose
+/// edge stream is deterministic per `(seed, threads)` and identical
+/// across `Native` and `Simd` (asserted in the backend-parity tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalar masked pipeline via [`NativeAccept`].
+    Native,
+    /// Runtime-dispatched SIMD kernel
+    /// ([`crate::sampler::accept_simd::SimdAccept`]).
+    Simd,
+    /// AOT-compiled XLA artifact — probability-batched, sequential.
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "native" => Some(Backend::Native),
+            "simd" => Some(Backend::Simd),
+            "xla" => Some(Backend::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Simd => "simd",
+            Backend::Xla => "xla",
+        }
+    }
+
+    /// Fresh masked-capable backend instance (shard workers build one
+    /// each, inside their own thread). `Xla` never reaches the masked
+    /// pipeline — callers must route it through
+    /// [`MagmBdpSampler::sample_batched_into`] first; asking for a
+    /// masked XLA instance panics.
+    pub fn make_masked(self) -> Box<dyn AcceptBackend> {
+        match self {
+            Backend::Native => Box::new(NativeAccept),
+            Backend::Simd => Box::new(super::accept_simd::SimdAccept::new()),
+            Backend::Xla => {
+                panic!("xla backend uses the batched-probs path, not the masked pipeline")
+            }
+        }
+    }
+}
+
+/// Chunk-sized accept/reject verdicts: bit `i` set ⇔ ball `i` of the
+/// dispatched [`BallBatch`] is accepted. Backends produce it 64 verdicts
+/// per word (the AVX2 kernel ORs 4-wide `movemask` groups in via
+/// [`or_group`](Self::or_group)); the materialise loop reads it
+/// sequentially.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VerdictMask {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl VerdictMask {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Zero the mask and size it for `len` verdicts.
+    pub fn reset(&mut self, len: usize) {
+        self.len = len;
+        self.bits.clear();
+        self.bits.resize(len.div_ceil(64), 0);
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.bits[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of accepted verdicts.
+    pub fn count(&self) -> u64 {
+        self.bits.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// OR a group of `n ≤ 64` verdict bits in at bit offset `i` (how the
+    /// SIMD kernel deposits its 4-wide `movemask` results). `i` need not
+    /// be word-aligned; bits above `n` in `bits` must be zero.
+    #[inline]
+    pub fn or_group(&mut self, i: usize, bits: u64, n: usize) {
+        debug_assert!(n <= 64 && i + n <= self.len);
+        debug_assert!(n == 64 || bits >> n == 0);
+        let word = i >> 6;
+        let shift = i & 63;
+        self.bits[word] |= bits << shift;
+        if shift + n > 64 {
+            self.bits[word + 1] |= bits >> (64 - shift);
+        }
+    }
+}
+
+/// Reusable buffers for the masked batch pipeline: one SoA proposal
+/// chunk, the probability scratch, and the verdict bitmask.
+struct MaskScratch {
+    balls: BallBatch,
+    probs: Vec<f64>,
+    mask: VerdictMask,
+}
+
+impl MaskScratch {
+    fn with_capacity(batch: usize) -> Self {
+        MaskScratch {
+            balls: BallBatch::with_capacity(batch),
+            probs: Vec::with_capacity(batch),
+            mask: VerdictMask::new(),
         }
     }
 }
@@ -99,6 +262,35 @@ pub trait AcceptBackend {
         balls: &BallBatch,
         out: &mut Vec<f64>,
     );
+
+    /// Whole-chunk verdicts for the masked batch pipeline: score every
+    /// ball, then thin with ONE uniform coin per ball drawn from `coins`
+    /// in index order — drawn even when the probability is zero, so the
+    /// coin stream consumed is a pure function of the chunk length and
+    /// every backend produces bit-identical masks on the same coin
+    /// stream. Sets bit `i` of `mask` iff ball `i` is accepted.
+    ///
+    /// The default routes through [`accept_probs`](Self::accept_probs);
+    /// vectorised backends override it to fuse the gather, multiply and
+    /// compare.
+    fn accept_mask(
+        &mut self,
+        proposal: &ProposalSet,
+        component: Component,
+        balls: &BallBatch,
+        coins: &mut dyn Rng,
+        probs: &mut Vec<f64>,
+        mask: &mut VerdictMask,
+    ) {
+        self.accept_probs(proposal, component, balls, probs);
+        debug_assert_eq!(probs.len(), balls.len());
+        mask.reset(balls.len());
+        for (i, &p) in probs.iter().enumerate() {
+            if coins.next_f64() < p {
+                mask.set(i);
+            }
+        }
+    }
 
     /// Backend label for reports.
     fn name(&self) -> &'static str;
@@ -116,15 +308,9 @@ impl AcceptBackend for NativeAccept {
         balls: &BallBatch,
         out: &mut Vec<f64>,
     ) {
-        out.clear();
-        // Two flat array streams — no tuple unpacking in the inner loop.
-        out.extend(
-            balls
-                .rows
-                .iter()
-                .zip(&balls.cols)
-                .map(|(&c, &cp)| proposal.accept_prob(component, c, cp)),
-        );
+        // Batched lookup: dense class-masked table loads, or the sparse
+        // sorted-probe search above DENSE_MAX_D — never per-ball calls.
+        proposal.accept_probs_into(component, balls, out);
     }
 
     fn name(&self) -> &'static str {
@@ -242,6 +428,78 @@ impl<'a> MagmBdpSampler<'a> {
             accepted += self.accept_one(c, cp, p, rng, sink);
             agg.accept_ns += t1.elapsed().as_nanos() as u64;
             agg.hits += 1;
+        }
+        accepted
+    }
+
+    /// One component quota through the masked batch pipeline: pruned
+    /// descents top the SoA chunk up to `batch` survivors, the backend
+    /// turns the whole chunk into a [`VerdictMask`], and accepted balls
+    /// materialise straight into `sink`. Chunks never span components.
+    /// Tracing (when `agg` is given) clocks the descent and the
+    /// mask+materialise phases; clock reads sit outside the RNG
+    /// sequence, so traced and untraced runs stream identical edges.
+    #[allow(clippy::too_many_arguments)]
+    fn run_quota_masked<R: Rng + ?Sized>(
+        &self,
+        comp: Component,
+        quota: u64,
+        batch: usize,
+        rng: &mut R,
+        backend: &mut dyn AcceptBackend,
+        scratch: &mut MaskScratch,
+        sink: &mut dyn EdgeSink,
+        mut agg: Option<&mut QuotaTrace>,
+    ) -> u64 {
+        use std::time::Instant;
+        let bdp = self.proposal.bdp(comp);
+        let (rowf, colf) = self.proposal.filters(comp);
+        let mut remaining = quota;
+        let mut accepted = 0u64;
+        if let Some(agg) = agg.as_deref_mut() {
+            agg.balls += quota;
+        }
+        while remaining > 0 {
+            // Top the buffer up to exactly `batch` survivors, so a flush
+            // is never split into a full dispatch plus a padded tail.
+            let take = remaining.min((batch - scratch.balls.len()) as u64);
+            let t0 = agg.is_some().then(Instant::now);
+            bdp.drop_pruned_into(rng, take, rowf, colf, &mut scratch.balls);
+            if let (Some(agg), Some(t0)) = (agg.as_deref_mut(), t0) {
+                agg.propose_ns += t0.elapsed().as_nanos() as u64;
+            }
+            remaining -= take;
+            if scratch.balls.len() >= batch || (remaining == 0 && !scratch.balls.is_empty()) {
+                let t1 = agg.is_some().then(Instant::now);
+                let hits = scratch.balls.len() as u64;
+                // Fork the chunk's acceptance coin stream off the main
+                // stream: exactly one main-stream draw per dispatch,
+                // whatever the backend (see the RNG-stream contract on
+                // `sample_backend_into`).
+                let mut coins = Xoshiro256pp::seed_from_u64(rng.next_u64());
+                backend.accept_mask(
+                    &self.proposal,
+                    comp,
+                    &scratch.balls,
+                    &mut coins,
+                    &mut scratch.probs,
+                    &mut scratch.mask,
+                );
+                for (i, (c, cp)) in scratch.balls.iter().enumerate() {
+                    if scratch.mask.get(i) {
+                        // Mask set implies p > 0, so both classes occupied.
+                        let src = self.index.sample_node(c, rng).expect("occupied");
+                        let dst = self.index.sample_node(cp, rng).expect("occupied");
+                        sink.push(src, dst);
+                        accepted += 1;
+                    }
+                }
+                if let (Some(agg), Some(t1)) = (agg.as_deref_mut(), t1) {
+                    agg.accept_ns += t1.elapsed().as_nanos() as u64;
+                    agg.hits += hits;
+                }
+                scratch.balls.clear();
+            }
         }
         accepted
     }
@@ -374,6 +632,65 @@ impl<'a> MagmBdpSampler<'a> {
         (proposed, accepted)
     }
 
+    /// Batch-first streaming sampler driven by a masked
+    /// [`AcceptBackend`]: pruned descents fill [`ACCEPT_BATCH`]-sized
+    /// (here: `batch`-sized) SoA chunks, the backend returns one
+    /// [`VerdictMask`] per chunk, and accepted edges stream into `sink`
+    /// in a single pass. Returns `(proposed, accepted)`.
+    ///
+    /// # RNG-stream contract
+    ///
+    /// Per dispatched chunk the main stream `rng` pays, in order: (a)
+    /// the descent draws that filled the chunk, (b) exactly ONE
+    /// `next_u64` seeding the chunk's forked acceptance coin stream,
+    /// and (c) two node draws per accepted ball, in ball-index order.
+    /// The coin stream draws one uniform per ball regardless of its
+    /// probability (a zero-probability ball burns a coin and always
+    /// rejects). Chunk boundaries depend only on the quota, the prune
+    /// survivors and `batch` — never on the backend — so the edge
+    /// stream is a function of `(seed, batch)` alone and any two
+    /// masked backends are edge-for-edge identical. The schedule
+    /// deliberately differs from [`sample_into`](Self::sample_into)'s
+    /// per-ball loop (which interleaves coin and node draws and skips
+    /// the coin at `p = 0`).
+    pub fn sample_backend_into<R: Rng + ?Sized>(
+        &self,
+        rng: &mut R,
+        backend: &mut dyn AcceptBackend,
+        batch: usize,
+        sink: &mut dyn EdgeSink,
+    ) -> (u64, u64) {
+        assert!(batch > 0);
+        let traced = trace::enabled();
+        let accept_name = accept_span_name(backend.name());
+        let mut scratch = MaskScratch::with_capacity(batch);
+        let mut proposed = 0u64;
+        let mut accepted = 0u64;
+        for comp in Component::ALL {
+            let quota = self.proposal.bdp(comp).draw_ball_count(rng);
+            proposed += quota;
+            if traced {
+                let mut agg = QuotaTrace::with_accept_name(accept_name);
+                accepted += self.run_quota_masked(
+                    comp,
+                    quota,
+                    batch,
+                    rng,
+                    backend,
+                    &mut scratch,
+                    sink,
+                    Some(&mut agg),
+                );
+                agg.emit();
+            } else {
+                accepted +=
+                    self.run_quota_masked(comp, quota, batch, rng, backend, &mut scratch, sink, None);
+            }
+        }
+        sink.finish();
+        (proposed, accepted)
+    }
+
     /// Multi-threaded sampler collecting into a graph — a
     /// [`CollectSink`] wrapper over
     /// [`sample_parallel_into`](Self::sample_parallel_into).
@@ -415,23 +732,19 @@ impl<'a> MagmBdpSampler<'a> {
     /// TSV/binary file — is **identical for every `(threads, window)`
     /// combination**. `threads` is clamped to `1..=LOGICAL_SHARDS`.
     /// Returns `(proposed, accepted)`.
-    pub fn sample_parallel_into_windowed(
-        &self,
-        seed: u64,
-        threads: usize,
-        window: usize,
-        terminal: &mut (dyn EdgeSink + Send),
-    ) -> (u64, u64) {
-        let threads = threads.clamp(1, LOGICAL_SHARDS);
-        let window = window.max(1);
+    /// Draw the per-component Poisson totals from `seed`'s root stream
+    /// and split them across the [`LOGICAL_SHARDS`] by sequential
+    /// binomial thinning (shard `s` takes
+    /// `Binomial(remaining, 1/(LOGICAL_SHARDS−s))`) — an exact
+    /// multinomial split, a function of `seed` alone. Returns the
+    /// totals, `quotas[s][ci]`, and the per-shard RNG streams.
+    #[allow(clippy::type_complexity)]
+    fn shard_plan(&self, seed: u64) -> (Vec<u64>, Vec<[u64; 4]>, Vec<Xoshiro256pp>) {
         let mut root = Xoshiro256pp::seed_from_u64(seed);
-        // Component ball totals from the root stream.
         let totals: Vec<u64> = Component::ALL
             .iter()
             .map(|&c| self.proposal.bdp(c).draw_ball_count(&mut root))
             .collect();
-        // quotas[s][ci]: logical shard s's share of component ci's total
-        // — a function of `seed` alone, never of `threads`.
         let mut quotas = vec![[0u64; 4]; LOGICAL_SHARDS];
         for (ci, &total) in totals.iter().enumerate() {
             let mut remaining = total;
@@ -446,8 +759,22 @@ impl<'a> MagmBdpSampler<'a> {
                 remaining -= take;
             }
         }
-        let shard_rngs: Vec<Xoshiro256pp> =
-            split_streams(seed ^ 0x9E3779B97F4A7C15, LOGICAL_SHARDS);
+        let shard_rngs = split_streams(seed ^ 0x9E3779B97F4A7C15, LOGICAL_SHARDS);
+        (totals, quotas, shard_rngs)
+    }
+
+    pub fn sample_parallel_into_windowed(
+        &self,
+        seed: u64,
+        threads: usize,
+        window: usize,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        let threads = threads.clamp(1, LOGICAL_SHARDS);
+        let window = window.max(1);
+        // Totals and quotas[s][ci] come from the root stream — functions
+        // of `seed` alone, never of `threads`.
+        let (totals, quotas, shard_rngs) = self.shard_plan(seed);
         let seq = ShardedSink::sequenced(terminal, threads, LOGICAL_SHARDS, window);
         // Tracing context: checked once out here; shard workers are
         // fresh scoped threads, so the job's trace id is re-pinned on
@@ -485,6 +812,94 @@ impl<'a> MagmBdpSampler<'a> {
                         let p = self.proposal.accept_prob(comp, c, cp);
                         accepted += self.accept_one(c, cp, p, rng, &mut handle);
                     }
+                }
+                handle.complete();
+                shards_run += 1;
+                shard += threads;
+            }
+            if let Some((span, agg)) = worker_trace.take() {
+                agg.emit();
+                if let Some(mut span) = span {
+                    span.set_count(shards_run);
+                }
+                trace::flush();
+            }
+            accepted
+        });
+        seq.finish();
+        (totals.iter().sum(), per_worker.iter().sum())
+    }
+
+    /// Masked-backend twin of
+    /// [`sample_parallel_into`](Self::sample_parallel_into) with the
+    /// default reordering window.
+    pub fn sample_parallel_backend_into(
+        &self,
+        seed: u64,
+        threads: usize,
+        backend: Backend,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        self.sample_parallel_backend_into_windowed(seed, threads, SEQ_WINDOW, backend, terminal)
+    }
+
+    /// Masked-backend twin of
+    /// [`sample_parallel_into_windowed`](Self::sample_parallel_into_windowed):
+    /// the same logical-shard decomposition, quota split and sequenced
+    /// drain, but each shard worker runs its quotas through the masked
+    /// batch pipeline ([`ACCEPT_BATCH`]-sized chunks) with its own
+    /// backend instance. The RNG-stream contract of
+    /// [`sample_backend_into`](Self::sample_backend_into) applies per
+    /// shard stream, so the edge stream is byte-identical for every
+    /// `(threads, window)` combination AND for every masked backend on
+    /// the same seed. Returns `(proposed, accepted)`.
+    pub fn sample_parallel_backend_into_windowed(
+        &self,
+        seed: u64,
+        threads: usize,
+        window: usize,
+        backend: Backend,
+        terminal: &mut (dyn EdgeSink + Send),
+    ) -> (u64, u64) {
+        let threads = threads.clamp(1, LOGICAL_SHARDS);
+        let window = window.max(1);
+        let (totals, quotas, shard_rngs) = self.shard_plan(seed);
+        let seq = ShardedSink::sequenced(terminal, threads, LOGICAL_SHARDS, window);
+        let traced = trace::enabled();
+        let parent_trace = trace::current();
+        let per_worker = crate::util::threadpool::scoped_chunks(threads, threads, |w, _| {
+            // One backend instance per worker, built in-thread (the SIMD
+            // backend re-runs CPU-feature detection here — cheap, and it
+            // keeps the instance thread-local by construction).
+            let mut be = backend.make_masked();
+            let accept_name = accept_span_name(be.name());
+            let mut worker_trace = if traced {
+                trace::set_current(parent_trace);
+                Some((
+                    trace::span("shard.worker"),
+                    QuotaTrace::with_accept_name(accept_name),
+                ))
+            } else {
+                None
+            };
+            let mut scratch = MaskScratch::with_capacity(ACCEPT_BATCH);
+            let mut accepted = 0u64;
+            let mut shards_run = 0u64;
+            let mut shard = w;
+            while shard < LOGICAL_SHARDS {
+                let mut rng = shard_rngs[shard].clone();
+                let mut handle = seq.handle(w, shard);
+                for (ci, &comp) in Component::ALL.iter().enumerate() {
+                    accepted += self.run_quota_masked(
+                        comp,
+                        quotas[shard][ci],
+                        ACCEPT_BATCH,
+                        &mut rng,
+                        be.as_mut(),
+                        &mut scratch,
+                        &mut handle,
+                        worker_trace.as_mut().map(|(_, agg)| agg),
+                    );
                 }
                 handle.complete();
                 shards_run += 1;
@@ -708,6 +1123,124 @@ mod tests {
             .map(|s| s.count)
             .sum();
         assert_eq!(depth_count, proposed);
+    }
+
+    #[test]
+    fn verdict_mask_group_deposits_across_word_boundaries() {
+        let mut m = VerdictMask::new();
+        m.reset(130);
+        m.or_group(0, 0b1011, 4);
+        m.or_group(62, 0b1101, 4); // straddles the first word boundary
+        m.or_group(126, 0b11, 2);
+        m.or_group(128, 0b10, 2);
+        for i in 0..130 {
+            let want = matches!(i, 0 | 1 | 3 | 62 | 64 | 65 | 126 | 127 | 129);
+            assert_eq!(m.get(i), want, "bit {i}");
+        }
+        assert_eq!(m.count(), 9);
+        m.reset(3);
+        assert_eq!(m.count(), 0);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn masked_pipeline_matches_streaming_statistically() {
+        let (params, a) = setup(6, 0.55, 150, 21);
+        let s = MagmBdpSampler::new(&params, &a);
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let reps = 30;
+        let mean_stream: f64 = (0..reps)
+            .map(|_| s.sample_counted(&mut rng).0.num_edges() as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let mut native = NativeAccept;
+        let mean_masked: f64 = (0..reps)
+            .map(|_| {
+                let mut sink = CollectSink::new(params.n());
+                s.sample_backend_into(&mut rng, &mut native, 64, &mut sink).1 as f64
+            })
+            .sum::<f64>()
+            / reps as f64;
+        let se = (mean_stream.max(1.0) / reps as f64).sqrt();
+        assert!(
+            (mean_stream - mean_masked).abs() < 8.0 * se,
+            "stream {mean_stream} vs masked {mean_masked}"
+        );
+    }
+
+    #[test]
+    fn masked_pipeline_deterministic_and_batch_invariant_counts() {
+        // Same (seed, batch) ⇒ identical edges; proposed totals are a
+        // function of the seed alone, whatever the batch size.
+        let (params, a) = setup(6, 0.5, 200, 23);
+        let s = MagmBdpSampler::new(&params, &a);
+        let run = |batch: usize| {
+            let mut native = NativeAccept;
+            let mut sink = CollectSink::new(params.n());
+            let counts = s.sample_backend_into(
+                &mut Xoshiro256pp::seed_from_u64(24),
+                &mut native,
+                batch,
+                &mut sink,
+            );
+            (counts, sink.graph)
+        };
+        let (c1, g1) = run(ACCEPT_BATCH);
+        let (c2, g2) = run(ACCEPT_BATCH);
+        assert_eq!(c1, c2);
+        assert_eq!(g1.edges(), g2.edges());
+        let (c3, _) = run(17);
+        assert_eq!(c1.0, c3.0, "proposed is batch-invariant");
+    }
+
+    #[test]
+    fn masked_parallel_is_thread_invariant_and_matches_native_backend() {
+        let (params, a) = setup(6, 0.5, 300, 25);
+        let s = MagmBdpSampler::new(&params, &a);
+        let run = |threads: usize, backend: Backend| {
+            let mut sink = CollectSink::new(params.n());
+            let counts = s.sample_parallel_backend_into(4242, threads, backend, &mut sink);
+            (counts, sink.graph)
+        };
+        let (c1, g1) = run(1, Backend::Native);
+        let (c4, g4) = run(4, Backend::Native);
+        assert_eq!(c1, c4);
+        assert_eq!(g1.edges(), g4.edges(), "thread-count invariance");
+        let (cs, gs) = run(4, Backend::Simd);
+        assert_eq!(c1, cs);
+        assert_eq!(g1.edges(), gs.edges(), "native vs simd backend parity");
+    }
+
+    #[test]
+    fn masked_tracing_is_pure_observation_with_backend_attribution() {
+        let _g = trace::test_lock();
+        let (params, a) = setup(6, 0.5, 200, 26);
+        let s = MagmBdpSampler::new(&params, &a);
+        trace::set_enabled(false);
+        let mut off = CollectSink::new(params.n());
+        let counts_off = s.sample_parallel_backend_into(77, 3, Backend::Native, &mut off);
+
+        trace::set_enabled(true);
+        let id = trace::next_id();
+        trace::set_current(id);
+        let mut on = CollectSink::new(params.n());
+        let counts_on = s.sample_parallel_backend_into(77, 3, Backend::Native, &mut on);
+        trace::set_enabled(false);
+        let spans = trace::spans_for(id);
+        trace::set_current(0);
+
+        assert_eq!(counts_off, counts_on);
+        assert_eq!(off.graph.edges(), on.graph.edges());
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        for want in ["shard.worker", "sampler.propose", "sampler.accept.native"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        let proposed: u64 = spans
+            .iter()
+            .filter(|s| s.name == "sampler.propose")
+            .map(|s| s.count)
+            .sum();
+        assert_eq!(proposed, counts_on.0);
     }
 
     #[test]

@@ -7,11 +7,14 @@
 //! * [`proposal`] — the Eq. 21 four-component proposal construction.
 //! * [`magm_bdp`] — **the paper's contribution** (Algorithm 2): BDP
 //!   proposals + accept-reject thinning + color→node materialisation.
+//! * [`accept_simd`] — runtime-dispatched SIMD acceptance kernel over
+//!   SoA ball batches (the third [`AcceptBackend`]).
 //! * [`magm_simple`] — the §4.2 single-proposal `m²` ablation baseline.
 //! * [`quilting`] — the Yun & Vishwanathan (2012) baseline.
 //! * [`hybrid`] — §4.6 cost-model algorithm selection.
 //! * [`cost`] — `O(nd)` expected-work estimates for all of the above.
 
+pub mod accept_simd;
 pub mod bdp;
 pub mod cost;
 pub mod hybrid;
@@ -24,11 +27,15 @@ pub mod quilting;
 pub mod sink;
 pub mod undirected;
 
+pub use accept_simd::{SimdAccept, SimdKernel};
 pub use bdp::{BallBatch, BdpSampler, PrefixFilter};
 pub use cost::CostModel;
 pub use hybrid::{HybridChoice, HybridSampler};
 pub use kpgm_bdp::KpgmBdpSampler;
-pub use magm_bdp::{AcceptBackend, MagmBdpSampler, NativeAccept, LOGICAL_SHARDS, SEQ_WINDOW};
+pub use magm_bdp::{
+    AcceptBackend, Backend, MagmBdpSampler, NativeAccept, VerdictMask, ACCEPT_BATCH,
+    LOGICAL_SHARDS, SEQ_WINDOW,
+};
 pub use magm_simple::MagmSimpleSampler;
 pub use naive::{NaiveKpgmSampler, NaiveMagmSampler};
 pub use proposal::{Component, ProposalSet};

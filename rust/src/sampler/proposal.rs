@@ -23,7 +23,7 @@
 //! in class `B`'s, so [`ProposalSet::drop_pruned`] threads the matching
 //! filters into the BDP descent and aborts sure-rejections early.
 
-use super::bdp::{BdpSampler, PrefixFilter};
+use super::bdp::{BallBatch, BdpSampler, PrefixFilter};
 use crate::model::colors::{ColorClass, ColorIndex};
 use crate::model::magm::MagmParams;
 use crate::model::params::InitiatorMatrix;
@@ -59,13 +59,20 @@ struct ColorAccept {
     r: f64,
 }
 
-/// Acceptance lookup: dense array for small color spaces (the hot path —
-/// two O(1) loads per proposal), sorted-key binary search beyond
-/// `DENSE_MAX_D` levels (no hashing on either path).
+/// Acceptance lookup: dense class-masked tables for small color spaces
+/// (the hot path — two O(1) loads and a multiply per proposal, no
+/// branching), sorted-key binary search beyond `DENSE_MAX_D` levels (no
+/// hashing on either path).
 #[derive(Clone, Debug)]
 enum AcceptLookup {
-    /// `r[c]` (0 ⇒ reject) + frequent-class bitmap, indexed by color.
-    Dense { r: Vec<f64>, frequent: Vec<u64> },
+    /// Two endpoint tables indexed by color: `by_class[0][c]` holds
+    /// `r_F(c)` when `c` is occupied-frequent and 0.0 otherwise;
+    /// `by_class[1][c]` holds `r_I(c)` when occupied-infrequent. At most
+    /// one of the two is nonzero for any color, so a component-`AB` score
+    /// is `by_class[A][c] * by_class[B][c']` with the class-membership
+    /// indicator folded into the zeros — the exact layout the SIMD
+    /// accept kernel gathers from.
+    Dense { by_class: [Vec<f64>; 2] },
     /// Occupied colors ascending + per-slot acceptance data.
     Sparse {
         keys: Vec<u64>,
@@ -73,29 +80,87 @@ enum AcceptLookup {
     },
 }
 
-/// Colors up to `2^22` get the dense table (≈ 34 MiB worst case).
+/// Colors up to `2^22` get the dense tables (two class-masked `f64`
+/// tables, ≈ 67 MiB worst case).
 const DENSE_MAX_D: usize = 22;
+
+/// Slot of a color class inside the dense `by_class` pair.
+#[inline]
+pub(crate) fn class_slot(class: ColorClass) -> usize {
+    match class {
+        ColorClass::Frequent => 0,
+        ColorClass::Infrequent => 1,
+    }
+}
 
 impl AcceptLookup {
     #[inline]
     fn get(&self, c: u64) -> Option<(ColorClass, f64)> {
         match self {
-            AcceptLookup::Dense { r, frequent } => {
-                let rv = *r.get(c as usize)?;
-                if rv == 0.0 {
-                    return None; // unoccupied color
-                }
-                let class = if frequent[(c >> 6) as usize] >> (c & 63) & 1 == 1 {
-                    ColorClass::Frequent
+            AcceptLookup::Dense { by_class } => {
+                let ci = c as usize;
+                let rf = *by_class[0].get(ci)?;
+                if rf > 0.0 {
+                    Some((ColorClass::Frequent, rf))
                 } else {
-                    ColorClass::Infrequent
-                };
-                Some((class, rv))
+                    let ri = by_class[1][ci];
+                    (ri > 0.0).then_some((ColorClass::Infrequent, ri))
+                }
             }
             AcceptLookup::Sparse { keys, entries } => keys
                 .binary_search(&c)
                 .ok()
                 .map(|s| (entries[s].class, entries[s].r)),
+        }
+    }
+}
+
+/// Stateful sorted-key lookup for batch scoring of the sparse table:
+/// before paying a binary search it re-probes the previous hit and its
+/// immediate successor. Pruned descents land on few distinct occupied
+/// colors, so the probe usually short-circuits the log-time search.
+struct SortedProbe<'a> {
+    keys: &'a [u64],
+    entries: &'a [ColorAccept],
+    last: usize,
+}
+
+impl<'a> SortedProbe<'a> {
+    fn new(keys: &'a [u64], entries: &'a [ColorAccept]) -> Self {
+        Self {
+            keys,
+            entries,
+            last: 0,
+        }
+    }
+
+    #[inline]
+    fn lookup(&mut self, c: u64) -> Option<ColorAccept> {
+        if let Some(&k) = self.keys.get(self.last) {
+            if k == c {
+                return Some(self.entries[self.last]);
+            }
+            if k < c && self.keys.get(self.last + 1) == Some(&c) {
+                self.last += 1;
+                return Some(self.entries[self.last]);
+            }
+        }
+        match self.keys.binary_search(&c) {
+            Ok(s) => {
+                self.last = s;
+                Some(self.entries[s])
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Endpoint factor with the class indicator folded in (0.0 when the
+    /// color is unoccupied or belongs to the other class).
+    #[inline]
+    fn endpoint(&mut self, class: ColorClass, c: u64) -> f64 {
+        match self.lookup(c) {
+            Some(e) if e.class == class => e.r,
+            _ => 0.0,
         }
     }
 }
@@ -169,16 +234,12 @@ impl ProposalSet {
         };
         let accept = if d <= dense_max_d {
             let num_colors = 1usize << d;
-            let mut r = vec![0.0f64; num_colors];
-            let mut frequent = vec![0u64; num_colors.div_ceil(64)];
+            let mut by_class = [vec![0.0f64; num_colors], vec![0.0f64; num_colors]];
             for (c, nodes) in index.iter() {
                 let e = entry(c, nodes.len() as f64);
-                r[c as usize] = e.r;
-                if e.class == ColorClass::Frequent {
-                    frequent[(c >> 6) as usize] |= 1 << (c & 63);
-                }
+                by_class[class_slot(e.class)][c as usize] = e.r;
             }
-            AcceptLookup::Dense { r, frequent }
+            AcceptLookup::Dense { by_class }
         } else {
             // `index.iter()` walks colors ascending, so the keys arrive
             // pre-sorted for the binary-search lookup.
@@ -293,9 +354,64 @@ impl ProposalSet {
     /// class-membership indicator (0 outside `A × B`).
     #[inline]
     pub fn accept_prob(&self, component: Component, c: u64, cp: u64) -> f64 {
+        if let AcceptLookup::Dense { by_class } = &self.accept {
+            // Branchless: the class indicator is already folded into the
+            // zeros of the class-masked tables.
+            let rs = by_class[class_slot(component.0)]
+                .get(c as usize)
+                .copied()
+                .unwrap_or(0.0);
+            let rt = by_class[class_slot(component.1)]
+                .get(cp as usize)
+                .copied()
+                .unwrap_or(0.0);
+            return rs * rt;
+        }
         match (self.endpoint(component.0, c), self.endpoint(component.1, cp)) {
             (Some(rs), Some(rt)) => rs * rt,
             _ => 0.0,
+        }
+    }
+
+    /// Score a whole SoA chunk for one component: `out[i]` becomes the
+    /// acceptance probability of ball `i` in `balls`. The dense path is
+    /// two masked table loads and a multiply per pair; the sparse path
+    /// (d > `DENSE_MAX_D`) runs the sorted-probe binary search per
+    /// endpoint, so batched callers never silently degrade to per-ball
+    /// dispatch above the dense threshold.
+    pub fn accept_probs_into(&self, component: Component, balls: &BallBatch, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(balls.len());
+        match &self.accept {
+            AcceptLookup::Dense { by_class } => {
+                let rows_t = &by_class[class_slot(component.0)];
+                let cols_t = &by_class[class_slot(component.1)];
+                for (&c, &cp) in balls.rows.iter().zip(&balls.cols) {
+                    let rs = rows_t.get(c as usize).copied().unwrap_or(0.0);
+                    let rt = cols_t.get(cp as usize).copied().unwrap_or(0.0);
+                    out.push(rs * rt);
+                }
+            }
+            AcceptLookup::Sparse { keys, entries } => {
+                let mut row_probe = SortedProbe::new(keys, entries);
+                let mut col_probe = SortedProbe::new(keys, entries);
+                for (&c, &cp) in balls.rows.iter().zip(&balls.cols) {
+                    let rs = row_probe.endpoint(component.0, c);
+                    let rt = col_probe.endpoint(component.1, cp);
+                    out.push(rs * rt);
+                }
+            }
+        }
+    }
+
+    /// The dense class-masked endpoint tables `[frequent, infrequent]`,
+    /// if the lookup compiled dense — the raw layout the SIMD accept
+    /// kernel gathers from. Each table has `1 << d` entries, and every
+    /// ball produced by a descent of this proposal indexes in range.
+    pub(crate) fn dense_tables(&self) -> Option<[&[f64]; 2]> {
+        match &self.accept {
+            AcceptLookup::Dense { by_class } => Some([&by_class[0], &by_class[1]]),
+            AcceptLookup::Sparse { .. } => None,
         }
     }
 
@@ -462,6 +578,33 @@ mod tests {
         // Out-of-grid colors reject on both paths.
         assert_eq!(dense.accept_prob(Component::FF, 1 << 20, 0), 0.0);
         assert_eq!(sparse.accept_prob(Component::FF, 1 << 20, 0), 0.0);
+
+        // The batched entry point must agree bit-for-bit with the scalar
+        // lookup on both representations, including the sparse
+        // sorted-probe fast path (runs of repeated/adjacent colors).
+        let mut balls = BallBatch::with_capacity(0);
+        for c in 0..256u64 {
+            for cp in [c, c, c.wrapping_add(1) % 256, (c * 31) % 256] {
+                balls.push(c, cp);
+            }
+        }
+        let (mut pd, mut ps) = (Vec::new(), Vec::new());
+        for comp in Component::ALL {
+            dense.accept_probs_into(comp, &balls, &mut pd);
+            sparse.accept_probs_into(comp, &balls, &mut ps);
+            assert_eq!(pd.len(), balls.len());
+            assert_eq!(ps.len(), balls.len());
+            for (i, (c, cp)) in balls.iter().enumerate() {
+                let scalar = dense.accept_prob(comp, c, cp);
+                assert_eq!(pd[i], scalar, "{} dense batch ({c},{cp})", comp.label());
+                assert!(
+                    (ps[i] - scalar).abs() < 1e-15,
+                    "{} sparse batch ({c},{cp}): {} vs {scalar}",
+                    comp.label(),
+                    ps[i]
+                );
+            }
+        }
     }
 
     #[test]

@@ -329,7 +329,12 @@ pub fn rollup_into(registry: &Registry, spans: &[Span]) {
             "sampler.propose" => registry
                 .histogram("sampler.propose_ns")
                 .observe(s.dur_ns as f64),
-            "sampler.accept" => registry
+            // The masked batch pipeline attributes its accept spans per
+            // backend (`sampler.accept.native|simd|xla`); all variants
+            // feed the one `sampler.accept_ns` family so dashboards see
+            // a single histogram with span-level attribution.
+            "sampler.accept" | "sampler.accept.native" | "sampler.accept.simd"
+            | "sampler.accept.xla" => registry
                 .histogram("sampler.accept_ns")
                 .observe(s.dur_ns as f64),
             "sampler.prune_abort_depth" => registry
